@@ -1,0 +1,23 @@
+"""Fig 2(a): per-round selection/scoring overhead per method."""
+from __future__ import annotations
+
+from benchmarks.common import METHODS, default_task, run_method
+
+
+def main(fast: bool = True):
+    task = default_task()
+    rounds = 30
+    print("# Fig 2(a) analog: per-round selection overhead")
+    print(f"{'method':8s} {'select_ms':>10s} {'round_ms':>10s} {'select_%':>9s}")
+    out = []
+    for m in METHODS:
+        r = run_method(m, task, rounds, eval_every=rounds)
+        pct = 100 * r["sel_time"] / max(r["round_time"], 1e-9)
+        print(f"{m:8s} {r['sel_time']*1e3:10.2f} {r['round_time']*1e3:10.2f} "
+              f"{pct:9.1f}")
+        out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    main()

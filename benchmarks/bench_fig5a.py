@@ -1,0 +1,53 @@
+"""Fig 5(a): gradient variance of the selected batch — RS vs IS vs C-IS across
+batch sizes, on exact per-sample gradients (Theorem-2 decomposition, verified
+against Monte-Carlo). The C-IS<IS gap must widen as batches shrink."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.theory import (cis_allocation, decomposition, is_allocation,
+                               optimal_intra_probs, uniform_allocation)
+
+
+def run(seed=0, N=200, K=16, C=6):
+    rs = np.random.RandomState(seed)
+    dom = rs.randint(0, C, N)
+    dom[:C] = np.arange(C)
+    means = rs.randn(C, K) * rs.uniform(0.3, 1.2, (C, 1))
+    scales = rs.uniform(0.15, 2.0, C)
+    g = jnp.asarray(means[dom] + rs.randn(N, K) * scales[dom][:, None],
+                    jnp.float32)
+    dom = jnp.asarray(dom)
+    probs_opt = optimal_intra_probs(g, dom, C)
+    onehot = jax.nn.one_hot(dom, C, dtype=jnp.float32)
+    n_y = jnp.sum(onehot, axis=0)
+    probs_uni = 1.0 / jnp.take(n_y, dom)
+
+    rows = []
+    for B in (5, 10, 25, 50):
+        v_rs = float(decomposition(g, dom, probs_uni,
+                                   uniform_allocation(dom, C, B), C)["total"])
+        v_is = float(decomposition(g, dom, probs_opt,
+                                   is_allocation(g, dom, C, B), C)["total"])
+        v_cis = float(decomposition(g, dom, probs_opt,
+                                    cis_allocation(g, dom, C, B), C)["total"])
+        rows.append({"batch": B, "rs": v_rs, "is": v_is, "cis": v_cis,
+                     "gap_is_cis_pct": 100 * (v_is - v_cis) / max(v_is, 1e-12)})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run()
+    print("# Fig 5(a) analog: batch-gradient variance by selection strategy")
+    print(f"{'batch':>5s} {'RS':>10s} {'IS':>10s} {'C-IS':>10s} {'IS->C-IS gap%':>14s}")
+    for r in rows:
+        print(f"{r['batch']:5d} {r['rs']:10.4f} {r['is']:10.4f} "
+              f"{r['cis']:10.4f} {r['gap_is_cis_pct']:14.1f}")
+    assert all(r["cis"] <= r["is"] + 1e-9 for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Fig 5(b): coarse-filter impact on C-IS variance reduction.
+
+A+B = filter 0.3v candidates with A, select 0.1v batch with B.
+Compares C-IS on all v samples (ideal) vs RepDiv-filter + C-IS vs
+random-filter + C-IS; the paper claims <3% degradation at 70% candidate
+reduction for the learned filter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filter import (coarse_scores, init_filter_state,
+                               update_filter_state)
+from repro.core.theory import (cis_allocation, decomposition,
+                               optimal_intra_probs, uniform_allocation)
+from repro.data.stream import GaussianMixtureStream
+from repro.models.edge import (EdgeMLPConfig, mlp_features, mlp_head_logits,
+                               mlp_init, mlp_penultimate)
+from repro.core.importance import exact_head_stats
+
+
+def _variance_of_subset(g, dom, C, B, keep_idx):
+    g2, d2 = g[keep_idx], dom[keep_idx]
+    probs = optimal_intra_probs(g2, d2, C)
+    return float(decomposition(g2, d2, probs,
+                               cis_allocation(g2, d2, C, B), C)["total"])
+
+
+def run(seed=0, v=100, trials=10):
+    C, IN = 6, 40
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(64, 32), n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    stream = GaussianMixtureStream(in_dim=IN, n_classes=C, seed=seed,
+                                   class_noise=np.linspace(0.3, 2.0, C))
+    fstate = init_filter_state(C, 64)
+    B, M = v // 10, int(0.3 * v)
+    full, filt, rand = [], [], []
+    rs = np.random.RandomState(seed)
+    for t in range(trials):
+        w = {k: jnp.asarray(x) for k, x in stream.next_window(v).items()}
+        feats = mlp_features(ecfg, params, w["x"], 1)
+        fstate = update_filter_state(fstate, feats, w["domain"])
+        h = mlp_penultimate(ecfg, params, w["x"])
+        stats = exact_head_stats(mlp_head_logits(ecfg, params, h), w["y"], h)
+        g, dom = stats["sketch"], w["domain"]
+        full.append(_variance_of_subset(g, dom, C, B, jnp.arange(v)))
+        sc = coarse_scores(fstate, feats, w["domain"], per_class_norm=True)
+        filt.append(_variance_of_subset(g, dom, C, B,
+                                        jnp.argsort(-sc)[:M]))
+        rand.append(_variance_of_subset(g, dom, C, B,
+                                        jnp.asarray(rs.choice(v, M, False))))
+    # variance-reduction degradation vs the ideal all-data C-IS, measured
+    # against the uniform-selection variance scale
+    w_last = w
+    probs_u = 1.0 / jnp.asarray(v, jnp.float32)
+    base = float(decomposition(
+        g, dom, jnp.full((v,), 1.0) / jnp.bincount(dom, length=C)[dom],
+        uniform_allocation(dom, C, B), C)["total"])
+    def deg(x):
+        red_x = base - np.mean(x)
+        red_f = base - np.mean(full)
+        return 100 * (red_f - red_x) / max(red_f, 1e-12)
+    return {"var_full": float(np.mean(full)), "var_filter": float(np.mean(filt)),
+            "var_randfilter": float(np.mean(rand)), "var_rs": base,
+            "deg_filter_pct": deg(filt), "deg_rand_pct": deg(rand),
+            "candidate_reduction_pct": 100 * (1 - M / v)}
+
+
+def main(fast: bool = True):
+    out = run(trials=5 if fast else 20)
+    print("# Fig 5(b) analog: filter impact on C-IS variance reduction")
+    for k, val in out.items():
+        print(f"{k:26s} {val:10.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main(fast=False)

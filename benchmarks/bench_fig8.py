@@ -1,0 +1,49 @@
+"""Fig 8: feature-extraction depth ablation — filter_blocks in {1,2} (the MLP
+analogue of the paper's model blocks): per-sample processing delay + final
+accuracy. Deeper features should cost more and help less (paper's finding)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import default_task, run_method
+from repro.configs.base import TitanConfig
+from repro.models.edge import mlp_features, mlp_init
+
+
+def run(rounds=120, seed=0):
+    task = default_task(seed)
+    rows = []
+    for k in (1, 2):
+        tcfg = TitanConfig(filter_blocks=k)
+        r = run_method("titan", task, rounds, seed=seed, titan_cfg=tcfg)
+        # per-sample filter delay
+        params = mlp_init(task.ecfg, jax.random.PRNGKey(seed))
+        x = jnp.ones((task.W, task.ecfg.in_dim))
+        f = jax.jit(lambda p, xx: mlp_features(task.ecfg, p, xx, k))
+        f(params, x)
+        t0 = time.perf_counter()
+        for _ in range(50):
+            out = f(params, x)
+        jax.block_until_ready(out)
+        per_sample_us = (time.perf_counter() - t0) / 50 / task.W * 1e6
+        rows.append({"filter_blocks": k, "final_acc": r["final_acc"],
+                     "per_sample_us": per_sample_us,
+                     "round_ms": r["round_time"] * 1e3})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(rounds=80 if fast else 300)
+    print("# Fig 8 analog: feature-depth ablation")
+    print(f"{'blocks':>6s} {'final_acc':>9s} {'us/sample':>10s} {'ms/round':>9s}")
+    for r in rows:
+        print(f"{r['filter_blocks']:6d} {r['final_acc']:9.3f} "
+              f"{r['per_sample_us']:10.2f} {r['round_ms']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,30 @@
+"""Fig 9: candidate-buffer size sweep (the paper's fluctuant-idle-resource
+knob): larger buffers = more fine-grained scoring compute = better selection."""
+from __future__ import annotations
+
+from benchmarks.common import default_task, run_method
+import dataclasses
+
+
+def run(rounds=120, seed=0):
+    rows = []
+    for M in (15, 30, 60, 100):
+        task = default_task(seed)
+        task = dataclasses.replace(task, M=M)
+        r = run_method("titan", task, rounds, seed=seed)
+        rows.append({"buffer": M, "final_acc": r["final_acc"],
+                     "round_ms": r["round_time"] * 1e3})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run(rounds=80 if fast else 300)
+    print("# Fig 9 analog: candidate buffer size (idle-resource budget)")
+    print(f"{'buffer':>6s} {'final_acc':>9s} {'ms/round':>9s}")
+    for r in rows:
+        print(f"{r['buffer']:6d} {r['final_acc']:9.3f} {r['round_ms']:9.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

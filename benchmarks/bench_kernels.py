@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: fused score & repdiv — jnp-reference timings on
+CPU (shape sweep over paper-relevant vocab sizes) + interpret-mode validation.
+On TPU the same harness times the compiled pallas path (impl='pallas')."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.repdiv.ops import repdiv_scores
+from repro.kernels.score.ops import score_from_logits
+from repro.kernels.score.ref import score_ref
+
+
+def _time(fn, *args, n=10):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    rows = []
+    for (N, V) in [(256, 8_192), (256, 50_280), (128, 128_256), (64, 256_000)]:
+        k = jax.random.PRNGKey(N + V)
+        logits = jax.random.normal(k, (N, V), jnp.float32)
+        labels = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, V)
+        R = jax.random.normal(jax.random.fold_in(k, 2), (V, 16)) / 4.0
+        f = jax.jit(lambda l, y, r: score_from_logits(l, y, r, impl=impl))
+        dt = _time(f, logits, labels, R)
+        gb = (N * V * 4) / 1e9
+        rows.append({"kernel": "score", "N": N, "V": V,
+                     "us_per_call": dt * 1e6, "GB/s": gb / dt})
+    for (N, D, C) in [(1024, 1024, 8), (2048, 2560, 8), (1024, 8192, 16)]:
+        k = jax.random.PRNGKey(N + D)
+        f = jax.random.normal(k, (N, D))
+        cent = jax.random.normal(jax.random.fold_in(k, 1), (C, D))
+        m2 = jnp.ones((C,)) * D
+        y = jax.random.randint(jax.random.fold_in(k, 2), (N,), 0, C)
+        fn = jax.jit(lambda a, b, c, d: repdiv_scores(a, b, c, d, impl=impl))
+        dt = _time(fn, f, cent, m2, y)
+        rows.append({"kernel": "repdiv", "N": N, "V": D,
+                     "us_per_call": dt * 1e6, "GB/s": (N * D * 4) / 1e9 / dt})
+    # interpret-mode validation at one shape (kernel == oracle)
+    N, V = 64, 4096
+    k = jax.random.PRNGKey(0)
+    logits = jax.random.normal(k, (N, V)) * 3
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, V)
+    ref = score_ref(logits, labels)
+    out = score_from_logits(logits, labels, None, impl="interpret",
+                            n_block=32, v_block=512)
+    max_err = max(float(jnp.max(jnp.abs(out[x] - ref[x])))
+                  for x in ("loss", "pnorm2", "entropy"))
+    rows.append({"kernel": "score-interpret-maxerr", "N": N, "V": V,
+                 "us_per_call": 0.0, "GB/s": max_err})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run()
+    print("# Kernel micro-benchmarks")
+    print(f"{'kernel':24s} {'N':>6s} {'V/D':>8s} {'us/call':>10s} {'GB/s|err':>10s}")
+    for r in rows:
+        print(f"{r['kernel']:24s} {r['N']:6d} {r['V']:8d} "
+              f"{r['us_per_call']:10.1f} {r['GB/s']:10.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table 1: normalized time-to-accuracy + final accuracy, 9 methods."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import METHODS, default_task, run_method, time_to_accuracy
+
+
+def run(rounds: int = 200, seed: int = 0, methods=METHODS):
+    task = default_task(seed=seed)
+    results = {m: run_method(m, task, rounds, seed=seed) for m in methods}
+    target = results["rs"]["final_acc"]            # paper's protocol
+    t_rs = time_to_accuracy(results["rs"], target)
+    rows = []
+    for m in methods:
+        tta = time_to_accuracy(results[m], target)
+        total = rounds * results[m]["round_time"]
+        norm = (tta if np.isfinite(tta) else total) / max(t_rs, 1e-9)
+        rows.append({"method": m, "norm_tta": norm,
+                     "final_acc": results[m]["final_acc"],
+                     "round_time_ms": results[m]["round_time"] * 1e3,
+                     "reached": bool(np.isfinite(tta))})
+    return {"target": target, "rows": rows}
+
+
+def main(fast: bool = True):
+    out = run(rounds=120 if fast else 400)
+    print(f"# Table 1 analog (target acc = RS final = {out['target']:.3f})")
+    print(f"{'method':8s} {'norm-TTA':>9s} {'final_acc':>9s} {'ms/round':>9s}")
+    for r in out["rows"]:
+        flag = "" if r["reached"] else " (never reached target)"
+        print(f"{r['method']:8s} {r['norm_tta']:9.2f} {r['final_acc']:9.3f} "
+              f"{r['round_time_ms']:9.1f}{flag}")
+    return out
+
+
+if __name__ == "__main__":
+    main(fast=False)

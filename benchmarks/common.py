@@ -1,0 +1,148 @@
+"""Shared benchmark harness: the paper's edge training protocol.
+
+Stream v samples/round -> select |B| -> one SGD round; measure test accuracy,
+per-round wall time, and per-round selection time. Methods: the 7 baselines
+(core/baselines.py) + Titan (two-stage pipeline) + C-IS without the filter.
+The default task mirrors the paper's HAR setting (MLP on a class-conditioned
+feature stream with heterogeneous class difficulty).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TitanConfig
+from repro.core.baselines import STRATEGIES, titan_cis
+from repro.core.importance import exact_head_stats
+from repro.core.pipeline import edge_hooks, make_titan_step, titan_init
+from repro.data.stream import GaussianMixtureStream
+from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_features,
+                               mlp_head_logits, mlp_init, mlp_loss,
+                               mlp_penultimate)
+
+METHODS = ("rs", "is", "ll", "hl", "ce", "ocs", "camel", "cis", "titan")
+
+
+@dataclass
+class EdgeTask:
+    ecfg: EdgeMLPConfig
+    stream_args: dict
+    lr: float = 0.08
+    B: int = 10
+    W: int = 100   # paper: v = 100 samples/round
+    M: int = 30    # paper: candidate buffer 30
+
+
+def default_task(seed=0, C=6, IN=40) -> EdgeTask:
+    # class difficulty/abundance spread wide enough that RS does NOT saturate
+    # (selection quality must matter for the Table-1 comparison to be read)
+    return EdgeTask(
+        ecfg=EdgeMLPConfig(in_dim=IN, hidden=(64, 32), n_classes=C),
+        stream_args=dict(in_dim=IN, n_classes=C, seed=seed,
+                         class_noise=np.linspace(0.8, 3.2, C),
+                         class_weights=np.array([.3, .25, .2, .12, .08, .05][:C])
+                         / sum([.3, .25, .2, .12, .08, .05][:C])))
+
+
+def _make_train(ecfg, lr):
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+    return train
+
+
+def _window_stats(ecfg, params, w):
+    h = mlp_penultimate(ecfg, params, w["x"])
+    logits = mlp_head_logits(ecfg, params, h)
+    stats = exact_head_stats(logits, w["y"], h)
+    stats["features"] = mlp_features(ecfg, params, w["x"], 1)
+    stats["domain"] = w["domain"]
+    return stats
+
+
+def run_method(method: str, task: EdgeTask, rounds: int, *, seed=0,
+               eval_every=10, titan_cfg: Optional[TitanConfig] = None,
+               time_rounds: int = 20) -> Dict:
+    ecfg = task.ecfg
+    C = ecfg.n_classes
+    stream = GaussianMixtureStream(**task.stream_args)
+    xt, yt = stream.test_set(2000)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    params = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    train = _make_train(ecfg, task.lr)
+    tcfg = titan_cfg or TitanConfig()
+    accs: List[float] = []
+    sel_times: List[float] = []
+    round_times: List[float] = []
+
+    if method == "titan":
+        f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
+                                penultimate=mlp_penultimate,
+                                head_logits=mlp_head_logits)
+        step = jax.jit(make_titan_step(
+            features_fn=f_fn, stats_fn=s_fn, train_step_fn=train,
+            params_of=lambda s: s, batch_size=task.B, n_classes=C, cfg=tcfg))
+        w0 = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
+        ts = titan_init(jax.random.PRNGKey(seed + 1), w0, f_fn(params, w0),
+                        task.B, task.M, C)
+        for r in range(rounds):
+            w = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
+            t0 = time.perf_counter()
+            params, ts, m = step(params, ts, w)
+            jax.block_until_ready(m["loss"])
+            dt = time.perf_counter() - t0
+            if r >= 3:
+                round_times.append(dt)
+                sel_times.append(0.0)  # co-executed: no separate select phase
+            if (r + 1) % eval_every == 0:
+                accs.append(float(mlp_accuracy(ecfg, params, xt, yt)))
+    else:
+        stats_fn = jax.jit(lambda p, w: _window_stats(ecfg, p, w))
+        tstep = jax.jit(train)
+        if method == "cis":
+            sel = jax.jit(lambda k, s, v: titan_cis(k, s, v, task.B,
+                                                    n_classes=C))
+        else:
+            strat = STRATEGIES[method]
+            sel = jax.jit(lambda k, s, v: strat(k, s, v, task.B))
+        for r in range(rounds):
+            w = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
+            t0 = time.perf_counter()
+            if method == "rs":
+                stats = {"domain": w["domain"]}  # RS needs no scoring pass
+                key = jax.random.PRNGKey(seed * 7919 + r)
+                idx = jax.random.choice(key, task.W, (task.B,), replace=False)
+                wts = jnp.ones((task.B,), jnp.float32)
+            else:
+                stats = stats_fn(params, w)
+                key = jax.random.PRNGKey(seed * 7919 + r)
+                idx, wts = sel(key, stats, jnp.ones((task.W,), bool))
+            jax.block_until_ready(idx)
+            t1 = time.perf_counter()
+            batch = {"x": w["x"][idx], "y": w["y"][idx], "weights": wts}
+            params, m = tstep(params, batch)
+            jax.block_until_ready(m["loss"])
+            t2 = time.perf_counter()
+            if r >= 3:
+                sel_times.append(t1 - t0)
+                round_times.append(t2 - t0)
+            if (r + 1) % eval_every == 0:
+                accs.append(float(mlp_accuracy(ecfg, params, xt, yt)))
+
+    return {"method": method, "accs": accs, "final_acc": accs[-1] if accs else 0.0,
+            "sel_time": float(np.mean(sel_times[:time_rounds])) if sel_times else 0.0,
+            "round_time": float(np.mean(round_times[:time_rounds])),
+            "eval_every": eval_every}
+
+
+def time_to_accuracy(result: Dict, target: float) -> float:
+    """Wall-clock (rounds x mean round time) to first eval >= target."""
+    for i, a in enumerate(result["accs"]):
+        if a >= target:
+            return (i + 1) * result["eval_every"] * result["round_time"]
+    return float("inf")

@@ -1,0 +1,54 @@
+"""Format results/dryrun.jsonl into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path="results/dryrun.jsonl"):
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            try:
+                r = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            recs[r["cell"]] = r   # later lines win (re-runs)
+    return recs
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return f"| {r['cell']} | — | — | — | SKIP: {r['reason']} |"
+    if "error" in r:
+        return f"| {r['cell']} | — | — | — | ERROR |"
+    t = r["roofline"]
+    mem = r.get("memory", {})
+    fit = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+           + mem.get("output_size_in_bytes", 0)
+           - mem.get("alias_size_in_bytes", 0)) / 1e9
+    return ("| {cell} | {c:.3f} | {m:.3f} | {x:.3f} | {dom} | {frac:.3f} | "
+            "{useful:.2f} | {fit:.1f} |".format(
+                cell=r["cell"], c=t["compute_s"], m=t["memory_s"],
+                x=t["collective_s"], dom=t["dominant"].replace("_s", ""),
+                frac=t["roofline_fraction"],
+                useful=r.get("useful_flops_ratio") or 0.0, fit=fit))
+
+
+def main(path="results/dryrun.jsonl"):
+    recs = load(path)
+    print("| cell | compute_s | memory_s | collective_s | dominant | "
+          "roofline_frac | useful_flops | peak_GB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for cell in sorted(recs):
+        print(fmt_row(recs[cell]))
+    n_ok = sum(1 for r in recs.values()
+               if not r.get("skipped") and "error" not in r)
+    n_skip = sum(1 for r in recs.values() if r.get("skipped"))
+    n_err = sum(1 for r in recs.values() if "error" in r)
+    print(f"\n{n_ok} compiled, {n_skip} skipped (documented), {n_err} errors "
+          f"of {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,82 @@
+"""Benchmark aggregator: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV lines per the repo contract, then the
+detailed per-benchmark reports. ``--full`` uses paper-scale round counts."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from benchmarks import (bench_fig2, bench_fig5a, bench_fig5b, bench_fig5c,
+                            bench_fig6, bench_fig8, bench_fig9, bench_fig10,
+                            bench_fig11, bench_kernels, bench_table1)
+    csv = []
+
+    def run(name, fn):
+        t0 = time.perf_counter()
+        out = fn(fast)
+        dt = (time.perf_counter() - t0) * 1e6
+        return name, dt, out
+
+    print("=" * 70)
+    name, dt, out = run("table1", bench_table1.main)
+    titan = next(r for r in out["rows"] if r["method"] == "titan")
+    csv.append(("table1_titan_norm_tta", dt, f"{titan['norm_tta']:.3f}"))
+    csv.append(("table1_titan_final_acc", dt, f"{titan['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig2", bench_fig2.main)
+    csv.append(("fig2_titan_round_ms", dt,
+                f"{[r for r in out if r['method']=='titan'][0]['round_time']*1e3:.2f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig5a", bench_fig5a.main)
+    csv.append(("fig5a_gap_pct_b5", dt, f"{out[0]['gap_is_cis_pct']:.1f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig5b", bench_fig5b.main)
+    csv.append(("fig5b_filter_degradation_pct", dt,
+                f"{out['deg_filter_pct']:.2f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig5c", bench_fig5c.main)
+    csv.append(("fig5c_rank_corr", dt, f"{out['mean_rank_corr']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig6", bench_fig6.main)
+    csv.append(("fig6_pipeline_overhead_pct", dt,
+                f"{out['pipeline_overhead_pct']:.1f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig8", bench_fig8.main)
+    csv.append(("fig8_block1_acc", dt, f"{out[0]['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig9", bench_fig9.main)
+    csv.append(("fig9_buf100_acc", dt, f"{out[-1]['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig10", bench_fig10.main)
+    csv.append(("fig10_titan_fl_acc", dt, f"{out['titan']['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fig11", bench_fig11.main)
+    best = [r for r in out if r["method"] == "titan"]
+    csv.append(("fig11_titan_label40_acc", dt,
+                f"{[r for r in best if r['noise']=='label40'][0]['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("kernels", bench_kernels.main)
+    csv.append(("kernel_score_v256k_us", dt,
+                f"{[r for r in out if r['V']==256000][0]['us_per_call']:.0f}"))
+
+    print("=" * 70)
+    print("name,us_per_call,derived")
+    for n, dt, d in csv:
+        print(f"{n},{dt:.0f},{d}")
+
+
+if __name__ == '__main__':
+    main()

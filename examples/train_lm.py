@@ -1,0 +1,61 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+full production stack (Titan selection, AdamW, checkpoints, straggler guard).
+
+    # CI-sized (default): ~20M params, 200 steps
+    PYTHONPATH=src python examples/train_lm.py
+
+    # full deliverable scale (~100M params; slower on CPU)
+    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+
+Delegates to repro.launch.train — the same driver a real job would use.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config, replace
+import repro.configs as configs
+from repro.launch import train as train_mod
+
+
+SIZES = {
+    # name -> (layers, d_model, heads, kv, ff, vocab) built on qwen2 family
+    "20m": (4, 256, 8, 4, 1024, 8192),
+    "100m": (8, 640, 10, 5, 2560, 16384),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="20m", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/titan_lm_run")
+    ap.add_argument("--no-titan", action="store_true")
+    args = ap.parse_args()
+
+    L, D, H, KV, FF, V = SIZES[args.size]
+    base = get_config("qwen2-72b")
+    cfg = replace(base, name=f"qwen2-{args.size}", n_layers=L, d_model=D,
+                  n_heads=H, n_kv_heads=KV, d_head=D // H, d_ff=FF, vocab=V,
+                  remat="none", opt_state_dtype="float32")
+    print(f"model: {cfg.name}  params ~{cfg.n_params()/1e6:.1f}M")
+
+    # register so the launch driver can resolve it by name
+    configs.register_config(cfg)
+
+    argv = ["--arch", cfg.name, "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", args.ckpt_dir, "--log-every", "20",
+            "--eval-every", "50", "--ckpt-every", "100"]
+    if not args.no_titan:
+        argv.append("--titan")
+    train_mod.main(argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Fault-tolerant checkpointing.
+
+Atomic (write-to-tmp, fsync, rename), keep-last-k, manifest-validated, and
+mesh-elastic on restore: arrays are loaded on host and device_put with the
+*current* shardings, so a job restarted on a different mesh shape re-shards
+transparently. A corrupt/partial checkpoint (failed node mid-write) is
+detected via the manifest and skipped in favour of the previous one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+MANIFEST = "manifest.json"
+ARRAYS = "arrays.npz"
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    """npz cannot store ml_dtypes; view bf16 as u16 (dtype kept in manifest)."""
+    return a.view(np.uint16) if a.dtype == _BF16 else a
+
+
+def _from_saved(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    return a.view(_BF16) if dtype_str == "bfloat16" else a
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(k): v for k, v in flat}
+
+
+def save_checkpoint(directory: str, step: int, tree, *, extra: Optional[Dict] = None):
+    """Atomic checkpoint write. Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(tmp, ARRAYS),
+             **{k: _to_savable(v) for k, v in host.items()})
+    manifest = {
+        "step": int(step),
+        "time": time.time(),
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in host.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, MANIFEST), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _valid(path: str) -> bool:
+    mf = os.path.join(path, MANIFEST)
+    ar = os.path.join(path, ARRAYS)
+    if not (os.path.isfile(mf) and os.path.isfile(ar)):
+        return False
+    try:
+        with open(mf) as f:
+            m = json.load(f)
+        with np.load(ar) as z:
+            names = set(z.files)
+        return set(m["keys"]) == names
+    except Exception:
+        return False
+
+
+def find_latest(directory: str) -> Optional[str]:
+    """Newest *valid* checkpoint (skips partial writes from failed nodes)."""
+    if not os.path.isdir(directory):
+        return None
+    cands = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in reversed(cands):
+        p = os.path.join(directory, d)
+        if _valid(p):
+            return p
+    return None
+
+
+def restore_checkpoint(path: str, target, *, shardings=None):
+    """Restore into the structure of `target` (pytree of arrays or SDS).
+    `shardings`: matching pytree of NamedSharding for elastic re-meshing."""
+    with open(os.path.join(path, MANIFEST)) as f:
+        pre_manifest = json.load(f)
+    with np.load(os.path.join(path, ARRAYS)) as z:
+        data = {k: _from_saved(z[k], pre_manifest["keys"][k]["dtype"])
+                for k in z.files}
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for k, tgt in flat_t:
+        key = jax.tree_util.keystr(k)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"{key}: ckpt {arr.shape} != target {tgt.shape}")
+        leaves.append(arr.astype(tgt.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.device_put, tree)
+    with open(os.path.join(path, MANIFEST)) as f:
+        manifest = json.load(f)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """keep-last-k + optional async save (the train loop never blocks on IO)."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree, *, extra=None):
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
+        self.wait()
+
+        def _do():
+            save_checkpoint(self.dir, step, host, extra=extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def _gc(self):
+        cands = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in cands[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    def latest(self):
+        self.wait()
+        return find_latest(self.dir)

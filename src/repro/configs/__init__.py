@@ -1,0 +1,46 @@
+"""Config registry. ``get_config("llama3-405b")`` / ``get_config("llama3-405b-reduced")``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, MeshConfig, MoEConfig, RGLRUConfig, SSDConfig, ShapeConfig,
+    TitanConfig, TrainConfig, VLMConfig, SHAPES, shape_applicable, replace,
+)
+
+_MODULES = {
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "qwen1.5-32b": "repro.configs.qwen15_32b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "llama-3.2-vision-90b": "repro.configs.llama32_vision_90b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+_RUNTIME = {}
+
+
+def register_config(cfg: ArchConfig):
+    """Register an ad-hoc config (examples, sweeps) resolvable by name."""
+    _RUNTIME[cfg.name] = cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if name in _RUNTIME:
+        return _RUNTIME[name]
+    reduced = name.endswith("-reduced")
+    base = name[: -len("-reduced")] if reduced else name
+    if base not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[base])
+    return mod.reduced() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False):
+    return {n: get_config(n + ("-reduced" if reduced else "")) for n in ARCH_NAMES}

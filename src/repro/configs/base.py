@@ -1,0 +1,281 @@
+"""Config system: architecture, shapes, training, Titan selection, mesh.
+
+Every assigned architecture lives in its own module exposing ``config()`` (the
+exact published numbers) and ``reduced()`` (a tiny same-family config for CPU
+smoke tests). ``registry.get_config(name)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture families
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+MOE = "moe"
+HYBRID = "hybrid"   # recurrent (RG-LRU) + local attention
+SSM = "ssm"         # Mamba-2 / SSD, attention-free
+AUDIO = "audio"     # encoder-only transformer over frame embeddings (stub frontend)
+VLM = "vlm"         # decoder with interleaved cross-attention to patch embeddings
+
+FAMILIES = (DENSE, MOE, HYBRID, SSM, AUDIO, VLM)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0          # routed experts
+    top_k: int = 0
+    n_shared: int = 0           # always-on shared experts (DeepSeekMoE)
+    expert_d_ff: int = 0        # per-expert hidden size
+    capacity_factor: float = 1.25
+    first_dense_d_ff: int = 0   # DeepSeekMoE: layer 0 is a dense MLP
+    router_jitter: float = 0.0
+    aux_loss_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSDConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128            # SSD chunk length for training
+    compute_dtype: str = "float32"  # bf16 halves the chunk-einsum HBM
+                                    # traffic (§Perf); decays/state stay fp32
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0          # recurrence width (== d_model scaled), 0 -> d_model
+    window: int = 2048          # local attention window
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")  # repeating block pattern
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    cross_every: int = 5        # every Nth layer is a cross-attention layer
+    n_image_tokens: int = 1024  # stub patch-embedding count
+    image_embed_dim: int = 0    # 0 -> d_model (stub provides projected embeddings)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                         # 0 -> d_model // n_heads
+    activation: str = "swiglu"              # swiglu | squared_relu | geglu | gelu
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"                   # rmsnorm | layernorm
+    rope_theta: float = 500_000.0
+    causal: bool = True                     # False for encoder-only
+    tie_embeddings: bool = False
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssd: SSDConfig = field(default_factory=SSDConfig)
+    rglru: RGLRUConfig = field(default_factory=RGLRUConfig)
+    vlm: VLMConfig = field(default_factory=VLMConfig)
+    # --- numerics / memory policy ---
+    param_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"        # bf16 for the >=300B archs (HBM wall)
+    remat: str = "full"                     # none | dots | full
+    # --- frontend stubs ---
+    continuous_inputs: bool = False         # audio: inputs are frame embeddings
+    # --- selection head ---
+    n_domains: int = 8                      # Titan "classes" at LM scale
+    source: str = ""                        # provenance note
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head else self.d_model // self.n_heads
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == SSM
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch decode at 500k context without a dense KV cache?"""
+        return self.family in (SSM, HYBRID)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings + blocks), used for MODEL_FLOPS."""
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        attn = q + kv + o
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        gate_mult = {"swiglu": 3, "geglu": 3, "squared_relu": 2, "gelu": 2}[self.activation]
+
+        def mlp_params(ff: int) -> int:
+            return gate_mult * d * ff
+
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.continuous_inputs:
+            embed = d * d + self.vocab * d  # in-proj stub + classifier head
+
+        if self.family == MOE:
+            per_layer = attn + (self.moe.n_experts + self.moe.n_shared) * mlp_params(
+                self.moe.expert_d_ff) + d * self.moe.n_experts  # router
+            total = L * per_layer
+            if self.moe.first_dense_d_ff:
+                total += mlp_params(self.moe.first_dense_d_ff) - (
+                    (self.moe.n_experts + self.moe.n_shared) * mlp_params(self.moe.expert_d_ff)
+                    + d * self.moe.n_experts)
+            return total + embed
+        if self.family == SSM:
+            c = self.ssd
+            d_in = c.expand * d
+            nheads = d_in // c.head_dim
+            # in_proj: d -> (2*d_in + 2*n_groups*d_state + nheads); we use n_groups=1
+            per_layer = d * (2 * d_in + 2 * c.d_state + nheads)
+            per_layer += c.conv_width * (d_in + 2 * c.d_state)   # conv over x,B,C
+            per_layer += nheads + nheads                        # A_log, D
+            per_layer += d_in * d                               # out_proj
+            return L * per_layer + embed
+        if self.family == HYBRID:
+            c = self.rglru
+            w = c.lru_width or d
+            rec_layer = (d * w * 2 + c.conv_width * w + 2 * w  # in-projs+conv+gates(diag approx)
+                         + 2 * w * w // 8                       # block-diag gate projs (8 blocks)
+                         + w * d)                               # out proj
+            n_attn = sum(1 for i in range(L) if self.layer_kind(i) == "attn")
+            n_rec = L - n_attn
+            total = n_rec * (rec_layer + mlp_params(self.d_ff))
+            total += n_attn * (attn + mlp_params(self.d_ff))
+            return total + embed
+        if self.family == VLM:
+            n_cross = L // self.vlm.cross_every
+            n_self = L - n_cross
+            cross = attn  # q from text, kv from image embeds (same dims)
+            return n_self * (attn + mlp_params(self.d_ff)) + n_cross * (
+                cross + mlp_params(self.d_ff)) + embed
+        # dense / audio
+        return L * (attn + mlp_params(self.d_ff)) + embed
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: shared + top_k routed)."""
+        if self.family != MOE:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        gate_mult = {"swiglu": 3, "geglu": 3, "squared_relu": 2, "gelu": 2}[self.activation]
+        active_mlp = (self.moe.top_k + self.moe.n_shared) * gate_mult * d * self.moe.expert_d_ff
+        embed = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + active_mlp + d * self.moe.n_experts) + embed
+
+    def layer_kind(self, i: int) -> str:
+        """Layer type at index i: 'attn' | 'rec' | 'cross' | 'ssd' | 'dense_mlp'."""
+        if self.family == HYBRID:
+            return self.rglru.pattern[i % len(self.rglru.pattern)]
+        if self.family == VLM:
+            return "cross" if (i % self.vlm.cross_every == self.vlm.cross_every - 1) else "attn"
+        if self.family == SSM:
+            return "ssd"
+        return "attn"
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned): every LM arch pairs with these four shapes.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Skip rules per the assignment. Returns (applicable, reason-if-not)."""
+    if shape.kind == "decode" and arch.is_encoder:
+        return False, "encoder-only arch has no autoregressive decode step"
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention; this arch is full-attention"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Training / Titan / mesh configs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TitanConfig:
+    enabled: bool = True
+    # paper ratios: v=100 streaming -> 30 buffered -> 10 selected (10:3:1)
+    stream_ratio: int = 10        # candidates seen per selected sample
+    buffer_ratio: int = 3         # buffer size per selected sample
+    filter_blocks: int = 1        # model blocks used for coarse features (paper: 1)
+    score_seq_len: int = 0        # 0 = full seq; >0 truncates scoring fwd (beyond-paper)
+    rep_weight: float = 1.0
+    div_weight: float = 0.5       # see DESIGN.md Rep+Div degeneracy note
+    centroid_momentum: float = 0.95
+    sketch_dim: int = 16          # JL sketch: (16 x 16) for ||E g||^2 at LM scale
+    exact_scores: bool = False    # small models: exact last-layer grads
+    with_replacement: bool = True # theory-faithful multinomial sampling
+    min_per_class: int = 0
+    per_class_norm: bool = True   # standardize coarse scores within class
+                                  # (removes the Rep+Div per-class offset that
+                                  # otherwise collapses the buffer; DESIGN.md)
+    weight_clip: float = 0.0      # 0 = off; else clip selection weights
+    evict_selected: bool = True   # consume selected samples from the buffer
+    buffer_decay: float = 0.8     # per-round freshness decay of buffered
+                                  # coarse scores: prevents high-scoring
+                                  # outliers (e.g. mislabeled samples) from
+                                  # squatting in the buffer indefinitely
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 4096
+    global_batch: int = 256
+    microbatch: int = 0           # 0 = auto (one per data-shard row)
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    grad_compression: str = "none"   # none | int8
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+    # single-pod: (16,16) ("data","model"); multi-pod: (2,16,16) ("pod","data","model")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,21 @@
+"""DBRX-132B [moe]: 16 experts top-4, fine-grained. GQA kv=8. [hf:databricks/dbrx-base]"""
+from repro.configs.base import ArchConfig, MoEConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="dbrx-132b", family="moe",
+        n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+        d_ff=10752, vocab=100_352,
+        activation="swiglu", rope_theta=500_000.0,
+        moe=MoEConfig(n_experts=16, top_k=4, n_shared=0, expert_d_ff=10752),
+        source="hf:databricks/dbrx-base",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="dbrx-132b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                   d_ff=128, vocab=512,
+                   moe=MoEConfig(n_experts=4, top_k=2, n_shared=0, expert_d_ff=128),
+                   remat="none")

@@ -1,0 +1,25 @@
+"""DeepSeekMoE-16B [moe]: 2 shared + 64 routed top-6, fine-grained experts,
+dense first layer. MHA kv=16. [arXiv:2401.06066]
+"""
+from repro.configs.base import ArchConfig, MoEConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-moe-16b", family="moe",
+        n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16, d_head=128,
+        d_ff=1408, vocab=102_400,
+        activation="swiglu", rope_theta=10_000.0,
+        moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, expert_d_ff=1408,
+                      first_dense_d_ff=10944),
+        source="arXiv:2401.06066",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="deepseek-moe-16b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                   d_ff=96, vocab=512,
+                   moe=MoEConfig(n_experts=8, top_k=2, n_shared=1, expert_d_ff=96,
+                                 first_dense_d_ff=192),
+                   remat="none")

@@ -1,0 +1,22 @@
+"""HuBERT-XLarge [audio]: encoder-only transformer backbone, masked-frame
+cluster prediction over 504 units. Frontend (CNN feature extractor) is a STUB:
+input_specs provides precomputed frame embeddings. [arXiv:2106.07447]
+"""
+from repro.configs.base import ArchConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge", family="audio",
+        n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, d_head=80,
+        d_ff=5120, vocab=504,
+        activation="gelu", norm="layernorm", causal=False,
+        continuous_inputs=True, rope_theta=10_000.0,
+        source="arXiv:2106.07447",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="hubert-xlarge-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                   d_ff=192, vocab=32, remat="none")

@@ -1,0 +1,24 @@
+"""Llama-3.2-Vision-90B [vlm]: decoder with cross-attention image layers
+(every 5th layer cross-attends to patch embeddings). Vision tower is a STUB:
+input_specs provides precomputed patch embeddings. [hf:meta-llama/Llama-3.2-11B-Vision]
+"""
+from repro.configs.base import ArchConfig, VLMConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama-3.2-vision-90b", family="vlm",
+        n_layers=100, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+        d_ff=28672, vocab=128_256,
+        activation="swiglu", rope_theta=500_000.0,
+        vlm=VLMConfig(cross_every=5, n_image_tokens=1024),
+        source="hf:meta-llama/Llama-3.2-11B-Vision",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="llama-3.2-vision-90b-reduced",
+                   n_layers=5, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                   d_ff=192, vocab=512,
+                   vlm=VLMConfig(cross_every=5, n_image_tokens=16),
+                   remat="none")

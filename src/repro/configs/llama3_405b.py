@@ -1,0 +1,19 @@
+"""Llama-3-405B [dense]: GQA kv=8, 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ArchConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama3-405b", family="dense",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_head=128,
+        d_ff=53248, vocab=128_256,
+        activation="swiglu", rope_theta=500_000.0,
+        opt_state_dtype="bfloat16",  # 405B: HBM wall on a single v5e pod
+        source="arXiv:2407.21783",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="llama3-405b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                   d_ff=192, vocab=512, opt_state_dtype="float32", remat="none")

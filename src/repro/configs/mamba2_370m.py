@@ -1,0 +1,26 @@
+"""Mamba2-370M [ssm]: SSD (state-space duality), attention-free.
+48 layers, d_model 1024, d_state 128. [arXiv:2405.21060]
+
+Sharding note: vocab 50280 is not divisible by the 16-way model axis; the
+rules for this arch replicate vocab and shard the embed dim (see dist/sharding.py).
+"""
+from repro.configs.base import ArchConfig, SSDConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0, d_head=64,
+        d_ff=0, vocab=50_280,
+        activation="swiglu",  # unused (no MLP); SSD block only
+        ssd=SSDConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=128),
+        source="arXiv:2405.21060",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="mamba2-370m-reduced",
+                   n_layers=2, d_model=64, vocab=512,
+                   ssd=SSDConfig(d_state=16, head_dim=16, expand=2, conv_width=4,
+                                 chunk=32),
+                   remat="none")

@@ -1,0 +1,19 @@
+"""Nemotron-4-340B [dense]: GQA kv=8, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.configs.base import ArchConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="nemotron-4-340b", family="dense",
+        n_layers=96, d_model=18432, n_heads=96, n_kv_heads=8, d_head=192,
+        d_ff=73728, vocab=256_000,
+        activation="squared_relu", norm="layernorm", rope_theta=10_000.0,
+        opt_state_dtype="bfloat16",  # 340B: fp32 m/v would not fit 256x16GB
+        source="arXiv:2402.16819",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="nemotron-4-340b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                   d_ff=256, vocab=512, opt_state_dtype="float32", remat="none")

@@ -1,0 +1,22 @@
+"""Qwen1.5-32B [dense]: MHA (kv=40), QKV bias. [hf:Qwen/Qwen1.5-0.5B family]
+
+Sharding note: 40 heads are not divisible by the 16-way model axis; the
+sharding rules for this arch shard head_dim (128) instead (see dist/sharding.py).
+"""
+from repro.configs.base import ArchConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen1.5-32b", family="dense",
+        n_layers=64, d_model=5120, n_heads=40, n_kv_heads=40, d_head=128,
+        d_ff=27392, vocab=152_064,
+        activation="swiglu", qkv_bias=True, rope_theta=1_000_000.0,
+        source="hf:Qwen/Qwen1.5-32B",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="qwen1.5-32b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16,
+                   d_ff=192, vocab=512, remat="none")

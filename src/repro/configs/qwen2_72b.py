@@ -1,0 +1,18 @@
+"""Qwen2-72B [dense]: GQA kv=8, QKV bias. [arXiv:2407.10671]"""
+from repro.configs.base import ArchConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-72b", family="dense",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, d_head=128,
+        d_ff=29568, vocab=152_064,
+        activation="swiglu", qkv_bias=True, rope_theta=1_000_000.0,
+        source="arXiv:2407.10671",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="qwen2-72b-reduced",
+                   n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+                   d_ff=192, vocab=512, remat="none")

@@ -1,0 +1,25 @@
+"""RecurrentGemma-2B [hybrid]: RG-LRU + local attention, pattern (rec,rec,attn).
+MQA kv=1, window 2048. [arXiv:2402.19427]
+"""
+from repro.configs.base import ArchConfig, RGLRUConfig, replace
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="recurrentgemma-2b", family="hybrid",
+        n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, d_head=256,
+        d_ff=7680, vocab=256_000,
+        activation="geglu", rope_theta=10_000.0, tie_embeddings=True,
+        rglru=RGLRUConfig(lru_width=2560, window=2048,
+                          pattern=("rec", "rec", "attn"), conv_width=4),
+        source="arXiv:2402.19427",
+    )
+
+
+def reduced() -> ArchConfig:
+    return replace(config(), name="recurrentgemma-2b-reduced",
+                   n_layers=3, d_model=64, n_heads=4, n_kv_heads=1, d_head=16,
+                   d_ff=192, vocab=512,
+                   rglru=RGLRUConfig(lru_width=64, window=32,
+                                     pattern=("rec", "rec", "attn"), conv_width=4),
+                   remat="none")

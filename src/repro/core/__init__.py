@@ -1,0 +1,22 @@
+"""Titan: two-stage online data selection (the paper's contribution).
+
+  importance.py  per-sample last-layer gradient scores (exact + sketched)
+  filter.py      coarse-grained Rep/Div filter + candidate buffer
+  selection.py   C-IS: optimal inter-class allocation + intra-class sampling
+  pipeline.py    one-round-delay fused train+select step
+  baselines.py   RS / IS / LL / HL / CE / OCS / Camel
+  theory.py      Theorem-2 variance decomposition diagnostics
+"""
+from repro.core.filter import (  # noqa: F401
+    FilterState, buffer_examples, buffer_merge, buffer_valid, coarse_scores,
+    init_buffer, init_filter_state, update_filter_state,
+)
+from repro.core.importance import (  # noqa: F401
+    exact_head_stats, lm_sequence_stats, sketch_matrices,
+)
+from repro.core.pipeline import (  # noqa: F401
+    TitanState, edge_hooks, lm_hooks, make_titan_step, titan_init,
+)
+from repro.core.selection import (  # noqa: F401
+    allocate, cis_select, class_moments, intra_class_probs, is_select,
+)

@@ -1,0 +1,107 @@
+"""Baseline data-selection strategies (paper §4.1): RS, IS, LL, HL, CE, OCS,
+Camel — plus Titan's C-IS. Common signature:
+
+    select(rng, stats, valid, batch) -> (idx (B,), weights (B,))
+
+stats: dict with loss, gnorm, entropy, sketch, features, domain (leading N).
+Heuristic methods return unit weights (they do not correct for bias — that is
+exactly the paper's point about HDS).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import cis_select, is_select
+
+NEG = -1e30
+
+
+def _topk(scores, valid, batch):
+    s = jnp.where(valid, scores, NEG)
+    _, idx = jax.lax.top_k(s, batch)
+    return idx
+
+
+def random_selection(rng, stats, valid, batch):
+    scores = jax.random.uniform(rng, valid.shape)
+    idx = _topk(scores, valid, batch)
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def importance_sampling(rng, stats, valid, batch):
+    return is_select(rng, stats, valid, batch)
+
+
+def low_loss(rng, stats, valid, batch):
+    idx = _topk(-stats["loss"], valid, batch)
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def high_loss(rng, stats, valid, batch):
+    idx = _topk(stats["loss"], valid, batch)
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def cross_entropy(rng, stats, valid, batch):
+    """Model-uncertainty selection: highest predictive entropy."""
+    idx = _topk(stats["entropy"], valid, batch)
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def ocs(rng, stats, valid, batch, *, w_rep: float = 1.0, w_div: float = 1.0):
+    """Representativeness+diversity heuristic in feature space (OCS-style)."""
+    f = stats["features"].astype(jnp.float32)
+    v = valid.astype(jnp.float32)
+    mu = jnp.sum(f * v[:, None], axis=0) / jnp.maximum(jnp.sum(v), 1.0)
+    rep = -jnp.sum(jnp.square(f - mu), axis=-1)
+    m2 = jnp.sum(jnp.sum(jnp.square(f), -1) * v) / jnp.maximum(jnp.sum(v), 1.0)
+    div = jnp.sum(jnp.square(f), -1) + m2 - 2.0 * (f @ mu)
+    idx = _topk(w_rep * rep + w_div * div, valid, batch)
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def camel(rng, stats, valid, batch):
+    """Greedy coreset on raw-input/feature distance (Camel, SIGMOD'22):
+    iteratively add the point that most reduces Σ_j min_{s∈S} d(x_j, s)."""
+    f = stats["features"].astype(jnp.float32)
+    N = f.shape[0]
+    sq = jnp.sum(jnp.square(f), axis=-1)
+    d = sq[:, None] + sq[None, :] - 2.0 * (f @ f.T)                # (N,N)
+    d = jnp.where(valid[None, :], d, jnp.inf)                      # cols = candidates
+    big = jnp.full((N,), jnp.inf)
+
+    def step(carry, _):
+        min_d, chosen = carry
+        # cost if candidate c added: sum_j min(min_d_j, d_jc) over valid rows
+        cost = jnp.sum(jnp.where(valid[:, None], jnp.minimum(min_d[:, None], d),
+                                 0.0), axis=0)
+        cost = jnp.where(chosen, jnp.inf, cost)
+        cost = jnp.where(valid, cost, jnp.inf)
+        c = jnp.argmin(cost)
+        new_min = jnp.minimum(min_d, d[:, c])
+        return (new_min, chosen.at[c].set(True)), c
+
+    (_, _), idx = jax.lax.scan(step, (big, jnp.zeros((N,), bool)),
+                               jnp.arange(batch))
+    return idx, jnp.ones((batch,), jnp.float32)
+
+
+def titan_cis(rng, stats, valid, batch, *, n_classes: int,
+              with_replacement: bool = True):
+    idx, w, _ = cis_select(rng, stats, valid, batch, n_classes,
+                           with_replacement=with_replacement)
+    return idx, w
+
+
+STRATEGIES: Dict[str, Callable] = {
+    "rs": random_selection,
+    "is": importance_sampling,
+    "ll": low_loss,
+    "hl": high_loss,
+    "ce": cross_entropy,
+    "ocs": ocs,
+    "camel": camel,
+}

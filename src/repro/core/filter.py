@@ -1,0 +1,116 @@
+"""Coarse-grained data filter (paper §3.3).
+
+Maintains per-class running estimators of the feature centroid
+E[f(x')|y] and mean feature norm E||f(x')||^2 (the paper's two running-sum
+estimators), scores each streaming sample with w_rep*Rep + w_div*Div via the
+fused repdiv kernel, and keeps a fixed-size candidate buffer (the functional
+equivalent of the paper's priority queue).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.repdiv.ops import repdiv_scores
+
+NEG = -1e30
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class FilterState:
+    centroids: jnp.ndarray    # (C, D) fp32
+    mean_norm2: jnp.ndarray   # (C,)  fp32
+    counts: jnp.ndarray       # (C,)  fp32 — cumulative stream counts per class
+
+
+def init_filter_state(n_classes: int, feat_dim: int) -> FilterState:
+    return FilterState(
+        centroids=jnp.zeros((n_classes, feat_dim), jnp.float32),
+        mean_norm2=jnp.zeros((n_classes,), jnp.float32),
+        counts=jnp.zeros((n_classes,), jnp.float32),
+    )
+
+
+def update_filter_state(state: FilterState, features, domains, *,
+                        momentum: float = 0.95) -> FilterState:
+    """EMA update of per-class centroid / norm estimators from a stream window."""
+    f = features.astype(jnp.float32)
+    C = state.centroids.shape[0]
+    onehot = jax.nn.one_hot(domains, C, dtype=jnp.float32)        # (N,C)
+    cnt = jnp.sum(onehot, axis=0)                                 # (C,)
+    seen = cnt > 0
+    mean_f = (onehot.T @ f) / jnp.maximum(cnt, 1.0)[:, None]
+    mean_n2 = (onehot.T @ jnp.sum(f * f, axis=-1)) / jnp.maximum(cnt, 1.0)
+    # first observation initializes; afterwards EMA
+    fresh = state.counts == 0
+    m = momentum
+    new_cent = jnp.where(
+        (fresh & seen)[:, None], mean_f,
+        jnp.where(seen[:, None], m * state.centroids + (1 - m) * mean_f,
+                  state.centroids))
+    new_n2 = jnp.where(fresh & seen, mean_n2,
+                       jnp.where(seen, m * state.mean_norm2 + (1 - m) * mean_n2,
+                                 state.mean_norm2))
+    return FilterState(new_cent, new_n2, state.counts + cnt)
+
+
+def coarse_scores(state: FilterState, features, domains, *, w_rep: float = 1.0,
+                  w_div: float = 0.5, impl: str = "auto",
+                  per_class_norm: bool = False):
+    out = repdiv_scores(features, state.centroids, state.mean_norm2, domains,
+                        w_rep=w_rep, w_div=w_div, impl=impl)
+    score = out["score"]
+    if per_class_norm:
+        score = per_class_standardize(score, domains, state.centroids.shape[0])
+    return score
+
+
+def per_class_standardize(scores, domains, n_classes: int):
+    """Remove the per-class mean/scale so the buffer keeps a class mix that
+    follows the stream (the raw Rep+Div carries a per-class offset equal to
+    the intra-class feature variance — see DESIGN.md)."""
+    onehot = jax.nn.one_hot(domains, n_classes, dtype=jnp.float32)
+    cnt = jnp.maximum(jnp.sum(onehot, axis=0), 1.0)
+    mean = (onehot.T @ scores) / cnt
+    var = (onehot.T @ jnp.square(scores)) / cnt - jnp.square(mean)
+    std = jnp.sqrt(jnp.maximum(var, 1e-12))
+    return (scores - jnp.take(mean, domains)) / jnp.take(std, domains)
+
+
+# ---------------------------------------------------------------------------
+# Candidate buffer (fixed-shape priority queue)
+# ---------------------------------------------------------------------------
+
+def init_buffer(example_specs: Dict[str, jax.ShapeDtypeStruct], size: int):
+    """Buffer = example pytree with leading dim `size` + score/valid fields."""
+    buf = {k: jnp.zeros((size,) + tuple(v.shape[1:]), v.dtype)
+           for k, v in example_specs.items()}
+    buf["_score"] = jnp.full((size,), NEG, jnp.float32)
+    return buf
+
+
+def buffer_merge(buffer: Dict, window: Dict, scores):
+    """Keep the top-|buffer| entries of buffer ∪ window by coarse score."""
+    size = buffer["_score"].shape[0]
+    merged_scores = jnp.concatenate([buffer["_score"], scores])
+    top, idx = jax.lax.top_k(merged_scores, size)
+    out = {}
+    for k in buffer:
+        if k == "_score":
+            continue
+        cat = jnp.concatenate([buffer[k], window[k]], axis=0)
+        out[k] = jnp.take(cat, idx, axis=0)
+    out["_score"] = top
+    return out
+
+
+def buffer_valid(buffer) -> jnp.ndarray:
+    return buffer["_score"] > NEG / 2
+
+
+def buffer_examples(buffer) -> Dict:
+    return {k: v for k, v in buffer.items() if not k.startswith("_")}

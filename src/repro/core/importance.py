@@ -1,0 +1,115 @@
+"""Fine-grained sample importance (paper §3.2, Eq. 3 + practical trick).
+
+Per-sample importance is the gradient norm over the *last model layer* only.
+For a linear head W with input h and softmax-CE loss, the per-example
+gradient is G = (p - e_y) h^T, so
+
+    ||G||_F = ||p - e_y||_2 * ||h||_2                       (exact, one token)
+
+For sequence models (sample = sequence), G = sum_t delta_t h_t^T. We use the
+per-token-sum proxy  gnorm^2 = sum_t ||delta_t||^2 ||h_t||^2  and a
+Johnson-Lindenstrauss sketch of vec(G) for the class-mean-gradient term:
+    sketch(G) = sum_t (R^T delta_t) kron (S^T h_t)          (r x r dims)
+with E<sketch_i, sketch_j> = <vec G_i, vec G_j>. Everything comes out of one
+pass over the logits via the fused score kernel — no backprop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.flags import pscan
+from repro.kernels.score.ops import score_from_logits
+from repro.models.model import unembed_table
+
+
+def sketch_matrices(seed_key, V: int, d: int, r: int):
+    """R (V,r), S (d,r), entries N(0, 1/r) so the Kron sketch is unbiased."""
+    kR, kS = jax.random.split(seed_key)
+    R = jax.random.normal(kR, (V, r), jnp.float32) / jnp.sqrt(r)
+    S = jax.random.normal(kS, (d, r), jnp.float32) / jnp.sqrt(r)
+    return R, S
+
+
+def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
+                      sketch_dim: int = 16, chunk: int = 512,
+                      impl: str = "auto") -> Dict[str, jnp.ndarray]:
+    """Per-sequence Titan statistics from final hidden states.
+
+    h: (B,T,D); labels: (B,T) int32 (-1 = pad). Scans seq chunks so (B,T,V)
+    logits never materialize; each chunk goes through the fused score kernel.
+    Returns: loss (B,), gnorm (B,), entropy (B,), sketch (B, r*r).
+    """
+    B, T, D = h.shape
+    V = cfg.vocab
+    table = unembed_table(cfg, params)
+    r = sketch_dim
+    if sketch_key is None:
+        sketch_key = jax.random.PRNGKey(0)
+    R, S = sketch_matrices(sketch_key, V, D, r)
+
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+
+    def body(carry, ci):
+        loss_s, gn2_s, ent_s, sk_s, cnt = carry
+        hc = lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        hf = hc.astype(jnp.float32)
+        logits = jnp.einsum("btd,vd->btv", hc, table,
+                            preferred_element_type=jnp.float32)
+        out = score_from_logits(logits.reshape(B * chunk, V),
+                                jnp.maximum(yc, 0).reshape(-1), R, impl=impl)
+        valid = (yc >= 0).astype(jnp.float32)                     # (B,chunk)
+        loss_t = out["loss"].reshape(B, chunk) * valid
+        pn2_t = out["pnorm2"].reshape(B, chunk) * valid
+        psk_t = out["psketch"].reshape(B, chunk, r) * valid[..., None]
+        hn2 = jnp.sum(jnp.square(hf), axis=-1)                    # (B,chunk)
+        sh = jnp.einsum("btd,dr->btr", hf, S)                     # (B,chunk,r)
+        # kron accumulation: sk[b, i, j] += sum_t psk[b,t,i] * sh[b,t,j]
+        sk_c = jnp.einsum("bti,btj->bij", psk_t, sh)
+        return (loss_s + jnp.sum(loss_t, axis=1),
+                gn2_s + jnp.sum(pn2_t * hn2, axis=1),
+                ent_s + jnp.sum(out["entropy"].reshape(B, chunk) * valid, axis=1),
+                sk_s + sk_c,
+                cnt + jnp.sum(valid, axis=1)), None
+
+    init = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32),
+            jnp.zeros((B,), jnp.float32), jnp.zeros((B, r, r), jnp.float32),
+            jnp.zeros((B,), jnp.float32))
+    (loss_s, gn2_s, ent_s, sk_s, cnt), _ = pscan(body, init, jnp.arange(nc))
+    denom = jnp.maximum(cnt, 1.0)
+    # normalize to per-token means so sequence length does not bias importance
+    return {
+        "loss": loss_s / denom,
+        "gnorm": jnp.sqrt(gn2_s) / denom,
+        "entropy": ent_s / denom,
+        "sketch": sk_s.reshape(B, r * r) / denom[:, None],
+    }
+
+
+def exact_head_stats(logits, labels, h) -> Dict[str, jnp.ndarray]:
+    """Exact per-sample last-layer stats for single-output classifiers
+    (the paper's edge setting). logits (N,V) fp32; labels (N,); h (N,D).
+
+    Returns loss/gnorm/entropy (N,) and the *exact* flattened gradient
+    (N, V*D) as "sketch" (so C-IS class terms are exact).
+    """
+    lf = logits.astype(jnp.float32)
+    p = jax.nn.softmax(lf, axis=-1)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ly = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    delta = p - jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    hf = h.astype(jnp.float32)
+    grads = jnp.einsum("nv,nd->nvd", delta, hf)
+    N = lf.shape[0]
+    return {
+        "loss": lse - ly,
+        "gnorm": jnp.linalg.norm(delta, axis=-1) * jnp.linalg.norm(hf, axis=-1),
+        "entropy": lse - jnp.sum(p * lf, axis=-1),
+        "sketch": grads.reshape(N, -1),
+    }

@@ -1,0 +1,155 @@
+"""Titan pipeline (paper §3.4): one-round-delay co-execution.
+
+A single jitted step fuses
+  (A) the model update with the batch selected in the previous round, and
+  (B+C) coarse filtering of the incoming stream window + fine-grained C-IS
+        selection of the *next* round's batch — both using the parameters
+        from *before* this round's update (the paper's one-round-delay).
+Because (A) and (B/C) share only the pre-update parameters, they are
+data-independent inside one XLA program: the latency-hiding scheduler can
+overlap selection compute with the train step's collectives — the TPU-native
+analogue of the paper's idle-processor offloading (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TitanConfig
+from repro.core.filter import (FilterState, buffer_examples, buffer_merge,
+                               buffer_valid, coarse_scores, init_buffer,
+                               init_filter_state, update_filter_state)
+from repro.core.importance import exact_head_stats, lm_sequence_stats
+from repro.core.selection import cis_select
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TitanState:
+    filter: FilterState
+    buffer: Dict
+    next_batch: Dict
+    rng: jax.Array
+
+
+def titan_init(rng, window: Dict, feats, batch_size: int, buffer_size: int,
+               n_classes: int) -> TitanState:
+    """Bootstrap from the first stream window: warm the filter estimators,
+    fill the buffer, and take the first `batch_size` examples verbatim."""
+    fstate = init_filter_state(n_classes, feats.shape[-1])
+    fstate = update_filter_state(fstate, feats, window["domain"])
+    specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in window.items()}
+    buf = init_buffer(specs, buffer_size)
+    scores = coarse_scores(fstate, feats, window["domain"])
+    buf = buffer_merge(buf, window, scores)
+    nb = {k: v[:batch_size] for k, v in window.items()}
+    nb["weights"] = jnp.ones((batch_size,), jnp.float32)
+    return TitanState(fstate, buf, nb, rng)
+
+
+def make_titan_step(*, features_fn: Callable, stats_fn: Callable,
+                    train_step_fn: Callable, params_of: Callable,
+                    batch_size: int, n_classes: int, cfg: TitanConfig):
+    """Build the fused one-round-delay step.
+
+    features_fn(params, examples) -> (N,D) fp32 shallow features
+    stats_fn(params, examples)    -> dict(loss,gnorm,entropy,sketch) per sample
+    train_step_fn(train_state, batch) -> (train_state', metrics)
+    params_of(train_state)        -> params pytree
+    """
+
+    def step(train_state, tstate: TitanState, window: Dict):
+        params = params_of(train_state)          # w_t (pre-update: stale for B/C)
+
+        # (A) model update with the batch selected last round
+        new_train_state, metrics = train_step_fn(train_state, tstate.next_batch)
+
+        # (B) coarse-grained filter over the stream window
+        feats = features_fn(params, window)
+        fstate = update_filter_state(tstate.filter, feats, window["domain"],
+                                     momentum=cfg.centroid_momentum)
+        scores = coarse_scores(fstate, feats, window["domain"],
+                               w_rep=cfg.rep_weight, w_div=cfg.div_weight,
+                               per_class_norm=cfg.per_class_norm)
+        old_buffer = tstate.buffer
+        if cfg.buffer_decay < 1.0:
+            # freshness decay: stale entries must re-earn their slot against
+            # incoming samples (stops outliers squatting in the buffer)
+            old_buffer = dict(old_buffer)
+            s = old_buffer["_score"]
+            old_buffer["_score"] = jnp.where(s > -1e29,
+                                             s * cfg.buffer_decay, s)
+        buffer = buffer_merge(old_buffer, window, scores)
+
+        # (C) fine-grained C-IS over the candidate buffer
+        examples = buffer_examples(buffer)
+        stats = dict(stats_fn(params, examples), domain=examples["domain"])
+        valid = buffer_valid(buffer)
+        rng, key = jax.random.split(tstate.rng)
+        idx, w, diag = cis_select(
+            key, stats, valid, batch_size, n_classes,
+            with_replacement=cfg.with_replacement)
+        if cfg.weight_clip:
+            w = jnp.minimum(w, cfg.weight_clip)
+        nb = {k: jnp.take(v, idx, axis=0) for k, v in examples.items()}
+        nb["weights"] = w
+        if cfg.evict_selected:
+            # selected data is consumed: training on it again next round would
+            # bias the stream estimate (and overfit a static buffer)
+            buffer = dict(buffer)
+            buffer["_score"] = buffer["_score"].at[idx].set(-1e30)
+
+        metrics = dict(metrics)
+        metrics["titan_alloc"] = diag["alloc"]
+        metrics["titan_class_importance"] = diag["I"]
+        metrics["titan_mean_weight"] = jnp.mean(w)
+        return new_train_state, TitanState(fstate, buffer, nb, rng), metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Hooks
+# ---------------------------------------------------------------------------
+
+def lm_hooks(model, cfg: TitanConfig, *, impl: str = "auto"):
+    """Titan hooks for the LM model zoo (sequence = sample, domain = class)."""
+
+    def _truncate(ex):
+        if not cfg.score_seq_len:
+            return ex
+        k = cfg.score_seq_len
+        out = dict(ex)
+        for f in ("tokens", "labels", "frames", "mask"):
+            if f in out:
+                out[f] = out[f][:, :k]
+        return out
+
+    def features_fn(params, ex):
+        return model.features(params, _truncate(ex), n_blocks=cfg.filter_blocks)
+
+    def stats_fn(params, ex):
+        ex = _truncate(ex)
+        h = model.final_hidden(params, ex)
+        return lm_sequence_stats(model.cfg, params, h, ex["labels"],
+                                 sketch_dim=cfg.sketch_dim, impl=impl)
+
+    return features_fn, stats_fn
+
+
+def edge_hooks(ecfg, *, features, penultimate, head_logits,
+               filter_blocks: int = 1):
+    """Titan hooks for edge classifiers (exact last-layer gradients)."""
+
+    def features_fn(params, ex):
+        return features(ecfg, params, ex["x"], filter_blocks).astype(jnp.float32)
+
+    def stats_fn(params, ex):
+        h = penultimate(ecfg, params, ex["x"])
+        logits = head_logits(ecfg, params, h)
+        return exact_head_stats(logits, ex["y"], h)
+
+    return features_fn, stats_fn

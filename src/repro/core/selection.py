@@ -1,0 +1,143 @@
+"""C-IS: Classified Importance Sampling (paper §3.2, Lemma 2).
+
+Inter-class batch-size allocation:
+    |B_y|* ∝ I(y) = |S_y| * sqrt( V[∇l] − V[‖∇l‖] )                  (Eq. 2)
+Using V[∇l] = E‖g‖² − ‖Eg‖² and V[‖∇l‖] = E‖g‖² − (E‖g‖)², this reduces to
+    I(y) = |S_y| * sqrt( (E‖g‖)² − ‖E g‖² )
+which is non-negative by Jensen and needs only first moments: E‖g‖ exactly
+from per-sample gradient norms, ‖E g‖ from the mean JL sketch (exact when the
+"sketch" is the exact flattened gradient — the edge-scale path).
+
+Intra-class selection:  P_y(x) ∝ ‖∇l(w,x,y)‖                         (Eq. 3)
+with unbiasedness weights  w_i = B / (n · |B_y| · P_y(x_i))  so that
+mean_i(w_i · l_i) is an unbiased estimate of the candidate-set mean loss.
+Sampling is with replacement (the theory's multinomial assumption); a
+Gumbel-top-k without-replacement variant is available.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-20
+
+
+def class_moments(stats: Dict, valid, n_classes: int):
+    """Per-class counts, E||g||, mean sketch, and I(y). valid: (N,) bool."""
+    domain = stats["domain"]
+    gnorm = stats["gnorm"]
+    sketch = stats["sketch"]
+    v = valid.astype(jnp.float32)
+    onehot = jax.nn.one_hot(domain, n_classes, dtype=jnp.float32) * v[:, None]
+    n_y = jnp.sum(onehot, axis=0)                                  # (C,)
+    denom = jnp.maximum(n_y, 1.0)
+    mean_gnorm = (onehot.T @ gnorm) / denom                        # (C,)
+    mean_sketch = (onehot.T @ sketch) / denom[:, None]             # (C,K)
+    mean_gn2 = jnp.square(mean_gnorm)
+    norm_mean_g2 = jnp.sum(jnp.square(mean_sketch), axis=-1)
+    I = n_y * jnp.sqrt(jnp.maximum(mean_gn2 - norm_mean_g2, 0.0))  # Eq. 2
+    return {"n_y": n_y, "mean_gnorm": mean_gnorm,
+            "mean_sketch": mean_sketch, "I": I}
+
+
+def allocate(importance, avail, batch: int):
+    """Largest-remainder allocation of `batch` slots ∝ importance, capped to
+    classes that actually have candidates (avail > 0)."""
+    imp = jnp.where(avail > 0, jnp.maximum(importance, 0.0), 0.0)
+    # (near-)zero importance (e.g. first rounds, or underflow): fall back to
+    # candidate counts
+    imp = jnp.where(jnp.sum(imp) > 1e-20, imp,
+                    jnp.where(avail > 0, avail, 0.0))
+    share = imp / jnp.maximum(jnp.sum(imp), _EPS) * batch
+    base = jnp.floor(share).astype(jnp.int32)
+    rem = batch - jnp.sum(base)
+    frac = share - base
+    # top-`rem` fractional parts get one extra slot
+    order = jnp.argsort(-frac)
+    rank = jnp.argsort(order)
+    alloc = base + (rank < rem).astype(jnp.int32)
+    # numerical belt-and-braces: any deficit goes to the largest-share class
+    deficit = batch - jnp.sum(alloc)
+    best = jnp.argmax(jnp.where(avail > 0, share, -1.0))
+    return alloc.at[best].add(deficit)
+
+
+def intra_class_probs(stats, valid, n_classes: int):
+    """P_y(x) ∝ gnorm within each class (Eq. 3); (N,) normalized per class."""
+    gnorm = jnp.maximum(stats["gnorm"], _EPS) * valid
+    onehot = jax.nn.one_hot(stats["domain"], n_classes,
+                            dtype=jnp.float32) * valid[:, None].astype(jnp.float32)
+    totals = onehot.T @ gnorm                                      # (C,)
+    per_class_total = jnp.take(totals, stats["domain"])
+    return jnp.where(valid, gnorm / jnp.maximum(per_class_total, _EPS), 0.0)
+
+
+def cis_select(rng, stats: Dict, valid, batch: int, n_classes: int,
+               *, with_replacement: bool = True,
+               class_counts: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """Select `batch` samples by C-IS.
+
+    stats: dict with gnorm (N,), sketch (N,K), domain (N,).
+    valid: (N,) bool candidate mask.
+    class_counts: optional |S_y| override (e.g. stream counts); defaults to
+    candidate counts in the buffer.
+    Returns (idx (B,), weights (B,), diagnostics).
+    """
+    N = stats["gnorm"].shape[0]
+    mom = class_moments(stats, valid, n_classes)
+    n_y = mom["n_y"] if class_counts is None else class_counts
+    I = (n_y * jnp.sqrt(jnp.maximum(
+        jnp.square(mom["mean_gnorm"]) -
+        jnp.sum(jnp.square(mom["mean_sketch"]), axis=-1), 0.0)))
+    alloc = allocate(I, mom["n_y"], batch)                         # (C,)
+
+    # slot -> class (deterministic expansion of the allocation)
+    slot_class = jnp.repeat(jnp.arange(n_classes), alloc,
+                            total_repeat_length=batch)             # (B,)
+
+    gnorm = jnp.maximum(stats["gnorm"], _EPS)
+    base_logits = jnp.where(valid, jnp.log(gnorm), -jnp.inf)       # (N,)
+    slot_logits = jnp.where(
+        stats["domain"][None, :] == slot_class[:, None],
+        base_logits[None, :], -jnp.inf)                            # (B,N)
+
+    if with_replacement:
+        idx = jax.random.categorical(rng, slot_logits, axis=-1)
+    else:
+        g = jax.random.gumbel(rng, slot_logits.shape)
+        idx = jnp.argmax(slot_logits + g, axis=-1)
+
+    # unbiasedness weights: w = B / (n * |B_y| * P_y(x))
+    P = intra_class_probs(stats, valid, n_classes)
+    n_total = jnp.sum(mom["n_y"])
+    alloc_of_slot = jnp.take(alloc, slot_class).astype(jnp.float32)
+    w = batch / (n_total * jnp.maximum(alloc_of_slot, 1.0) *
+                 jnp.maximum(jnp.take(P, idx), _EPS))
+    # guard: if a slot's class had zero candidates the categorical is
+    # degenerate — give it zero weight so it cannot poison the update
+    ok = jnp.isfinite(jnp.take_along_axis(slot_logits, idx[:, None], 1)[:, 0])
+    w = jnp.where(ok, w, 0.0)
+    diag = {"I": I, "alloc": alloc, "n_y": mom["n_y"],
+            "mean_gnorm": mom["mean_gnorm"]}
+    return idx, w.astype(jnp.float32), diag
+
+
+def is_select(rng, stats, valid, batch: int, *, with_replacement=True):
+    """Classic importance sampling (Katharopoulos-Fleuret): global P ∝ ‖g‖."""
+    gnorm = jnp.maximum(stats["gnorm"], _EPS)
+    logits = jnp.where(valid, jnp.log(gnorm), -jnp.inf)
+    if with_replacement:
+        idx = jax.random.categorical(rng, jnp.broadcast_to(logits,
+                                                           (batch,) + logits.shape),
+                                     axis=-1)
+    else:
+        g = jax.random.gumbel(rng, (batch,) + logits.shape)
+        idx = jnp.argmax(logits[None] + g, axis=-1)
+    P = jnp.where(valid, gnorm, 0.0)
+    P = P / jnp.maximum(jnp.sum(P), _EPS)
+    n = jnp.sum(valid.astype(jnp.float32))
+    w = 1.0 / (n * jnp.maximum(jnp.take(P, idx), _EPS))
+    return idx, w.astype(jnp.float32)

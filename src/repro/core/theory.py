@@ -1,0 +1,98 @@
+"""Theorem 2 diagnostics: gradient-variance decomposition V = Σ_y α_y(β_y−γ_y).
+
+Used by property tests and the Fig. 5(a) benchmark to verify, on exact
+per-sample gradients, that (i) the decomposition matches the Monte-Carlo
+variance of the batch gradient estimator and (ii) the C-IS allocation of
+Lemma 2 minimizes it (vs IS and random allocations).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decomposition(grads, domain, probs, alloc, n_classes: int) -> Dict:
+    """Exact α/β/γ terms. grads (N,K) per-sample gradient vectors;
+    probs (N,) intra-class selection probabilities (sum to 1 within class);
+    alloc (C,) batch allocation |B_y|.
+    """
+    g = grads.astype(jnp.float64) if grads.dtype == jnp.float64 else grads.astype(jnp.float32)
+    onehot = jax.nn.one_hot(domain, n_classes, dtype=g.dtype)       # (N,C)
+    n_y = jnp.sum(onehot, axis=0)
+    n = jnp.sum(n_y)
+    gn2 = jnp.sum(jnp.square(g), axis=-1)                           # (N,)
+    # beta_y = sum_{x in S_y} ||g||^2 / (|S_y|^2 P(x))
+    safe_p = jnp.maximum(probs, 1e-20)
+    beta = jnp.sum(onehot * (gn2 / safe_p)[:, None], axis=0) / jnp.maximum(
+        jnp.square(n_y), 1.0)
+    # gamma_y = ||mean_{S_y} g||^2
+    mean_g = (onehot.T @ g) / jnp.maximum(n_y, 1.0)[:, None]
+    gamma = jnp.sum(jnp.square(mean_g), axis=-1)
+    # alpha_y = |S_y|^2 / (|S|^2 |B_y|)
+    alpha = jnp.square(n_y) / (jnp.square(n) * jnp.maximum(alloc, 1e-20))
+    alpha = jnp.where(alloc > 0, alpha, 0.0)
+    total = jnp.sum(alpha * (beta - gamma))
+    return {"alpha": alpha, "beta": beta, "gamma": gamma, "total": total,
+            "n_y": n_y}
+
+
+def optimal_intra_probs(grads, domain, n_classes: int):
+    """Eq. 3: P_y(x) ∝ ||g_x|| within class."""
+    gn = jnp.linalg.norm(grads.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(domain, n_classes, dtype=jnp.float32)
+    totals = onehot.T @ gn
+    return gn / jnp.maximum(jnp.take(totals, domain), 1e-20)
+
+
+def cis_allocation(grads, domain, n_classes: int, batch: int):
+    """Lemma 2: |B_y| ∝ |S_y| sqrt(beta*_y − gamma_y)."""
+    from repro.core.selection import allocate
+    probs = optimal_intra_probs(grads, domain, n_classes)
+    d = decomposition(grads, domain, probs, jnp.ones((n_classes,)), n_classes)
+    imp = d["n_y"] * jnp.sqrt(jnp.maximum(d["beta"] - d["gamma"], 0.0))
+    return allocate(imp, d["n_y"], batch)
+
+
+def is_allocation(grads, domain, n_classes: int, batch: int):
+    """What global IS does implicitly: E|B_y| ∝ Σ_{x∈y} ||g_x||."""
+    from repro.core.selection import allocate
+    gn = jnp.linalg.norm(grads.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(domain, n_classes, dtype=jnp.float32)
+    return allocate(onehot.T @ gn, jnp.sum(onehot, axis=0), batch)
+
+
+def uniform_allocation(domain, n_classes: int, batch: int):
+    from repro.core.selection import allocate
+    n_y = jnp.sum(jax.nn.one_hot(domain, n_classes, dtype=jnp.float32), axis=0)
+    return allocate(n_y, n_y, batch)
+
+
+def monte_carlo_variance(rng, grads, domain, probs, alloc, n_classes: int,
+                         trials: int = 2000):
+    """Empirical V_B[∇L] of the stratified estimator (verifies Theorem 2).
+
+    Estimator: ĝ = Σ_y (n_y/n)(1/|B_y|) Σ_{x∈B_y} g_x / (P(x) n_y).
+    """
+    g = np.asarray(grads, np.float64)
+    dom = np.asarray(domain)
+    p = np.asarray(probs, np.float64)
+    al = np.asarray(alloc)
+    N, K = g.shape
+    n_y = np.array([(dom == c).sum() for c in range(n_classes)], np.float64)
+    n = n_y.sum()
+    rs = np.random.RandomState(int(jax.random.randint(rng, (), 0, 2**31 - 1)))
+    ests = np.zeros((trials, K))
+    for c in range(n_classes):
+        members = np.where(dom == c)[0]
+        if len(members) == 0 or al[c] == 0:
+            continue
+        pc = p[members] / p[members].sum()
+        picks = rs.choice(len(members), size=(trials, int(al[c])), p=pc)
+        sel = members[picks]                                       # (T, B_y)
+        contrib = g[sel] / (p[sel][..., None] * n_y[c])            # (T,B_y,K)
+        ests += (n_y[c] / n) * contrib.mean(axis=1)
+    mean = ests.mean(axis=0)
+    return float(np.mean(np.sum((ests - mean) ** 2, axis=-1)))

@@ -1,0 +1,4 @@
+from repro.data.stream import (  # noqa: F401
+    GaussianMixtureStream, SyntheticLMStream, save_stream_shard,
+    FileBackedStream,
+)

@@ -1,0 +1,47 @@
+"""Runtime flags (thread-local).
+
+cost_probe: ON while lowering roofline cost probes. Probes replace every
+while-loop (lax.scan) with unrolled / dense equivalents so that XLA's
+HloCostAnalysis — which counts loop bodies exactly once — reports true
+totals. Probes are compile-only artifacts: they are never executed, so their
+(sometimes huge) temp memory is irrelevant.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+from jax import lax
+
+
+class _Flags(threading.local):
+    def __init__(self):
+        self.cost_probe = False
+
+
+_F = _Flags()
+
+
+def probing() -> bool:
+    return _F.cost_probe
+
+
+@contextlib.contextmanager
+def cost_probe(on: bool = True):
+    old = _F.cost_probe
+    _F.cost_probe = on
+    try:
+        yield
+    finally:
+        _F.cost_probe = old
+
+
+def pscan(body, init, xs, *, length=None):
+    """lax.scan that fully unrolls under cost probes (no while op)."""
+    n = length
+    if n is None:
+        import jax
+        n = jax.tree.leaves(xs)[0].shape[0]
+    if probing():
+        return lax.scan(body, init, xs, length=n, unroll=True)
+    return lax.scan(body, init, xs, length=n)

@@ -1,0 +1,1 @@
+from repro.ft.elastic import StragglerGuard, reshard, run_with_restarts  # noqa: F401

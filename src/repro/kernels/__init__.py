@@ -1,0 +1,6 @@
+# Pallas TPU kernels for Titan's two scoring hot-spots:
+#   score/  fused CE-loss + last-layer grad-norm + JL-sketch statistics from
+#           logits (online logsumexp over vocab tiles; V up to 256k)
+#   repdiv/ fused Rep/Div coarse-filter scores vs class centroids
+# Each package: kernel (pl.pallas_call + BlockSpec), ops.py (jit wrapper with
+# impl dispatch), ref.py (pure-jnp oracle used for tests and CPU dry-runs).

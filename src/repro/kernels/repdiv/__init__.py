@@ -1,0 +1,1 @@
+from repro.kernels.repdiv.ops import repdiv_scores  # noqa: F401

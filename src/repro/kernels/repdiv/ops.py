@@ -1,0 +1,42 @@
+"""jit'd wrapper for Rep/Div filter scores with impl dispatch (see score/ops)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.repdiv.ref import repdiv_ref
+from repro.kernels.repdiv.repdiv import repdiv_pallas
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w_rep", "w_div", "impl", "n_block",
+                                    "d_block"))
+def repdiv_scores(features, centroids, mean_norm2, labels, *,
+                  w_rep: float = 1.0, w_div: float = 0.5, impl: str = "auto",
+                  n_block: int = 256, d_block: int = 512):
+    """features (N,D); centroids (C,D); mean_norm2 (C,); labels (N,) int32."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return repdiv_ref(features, centroids, mean_norm2, labels, w_rep, w_div)
+    N, D = features.shape
+    n_block = min(n_block, max(8, N))
+    d_block = min(d_block, D)
+    fp = _pad_to(_pad_to(features, n_block, 0), d_block, 1)
+    yp = _pad_to(labels, n_block, 0, 0)
+    cp = _pad_to(centroids, d_block, 1)
+    out = repdiv_pallas(fp, cp, mean_norm2, yp, w_rep=w_rep, w_div=w_div,
+                        n_block=n_block, d_block=min(d_block, fp.shape[1]),
+                        interpret=(impl == "interpret"))
+    return {k: v[:N] for k, v in out.items()}

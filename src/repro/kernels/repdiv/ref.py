@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the coarse-filter Rep/Div scores (paper §3.3).
+
+Rep(x,y) = -||f - mu_y||^2
+Div(x,y) = ||f||^2 + E||f'||^2 - 2 <f, mu_y>
+score    = w_rep * Rep + w_div * Div
+(the equally-weighted sum is a per-class constant — see DESIGN.md.)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def repdiv_ref(features, centroids, mean_norm2, labels, w_rep: float,
+               w_div: float):
+    f = features.astype(jnp.float32)
+    mu = centroids.astype(jnp.float32)[labels]          # (N,D)
+    fn2 = jnp.sum(jnp.square(f), axis=-1)
+    dot = jnp.sum(f * mu, axis=-1)
+    cn2 = jnp.sum(jnp.square(centroids.astype(jnp.float32)), axis=-1)[labels]
+    m2 = mean_norm2.astype(jnp.float32)[labels]
+    rep = -(fn2 - 2.0 * dot + cn2)
+    div = fn2 + m2 - 2.0 * dot
+    return {"score": w_rep * rep + w_div * div, "rep": rep, "div": div}

@@ -1,0 +1,83 @@
+"""Fused Rep/Div coarse-filter scoring Pallas TPU kernel.
+
+Tiles the (N, D) feature matrix; per D-tile accumulates ||f||^2 and the
+per-row dot with its own class centroid (selected via a one-hot (NB, C) x
+(C, DB) matmul — C is small, so the whole centroid tile stays in VMEM).
+The final D-tile combines the running sums with the per-class constants into
+the filter score. This is the streaming (per-sample, millisecond-budget) path
+of Titan's first stage, so it must make exactly one pass over the features.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(f_ref, cent_ref, cn2_ref, m2_ref, labels_ref,
+            score_ref, rep_ref, div_ref,
+            fn2_ref, dot_ref,
+            *, nd: int, n_classes: int, w_rep: float, w_div: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        fn2_ref[...] = jnp.zeros_like(fn2_ref)
+        dot_ref[...] = jnp.zeros_like(dot_ref)
+
+    f = f_ref[...].astype(jnp.float32)                          # (NB, DB)
+    y = labels_ref[...]                                         # (NB, 1)
+    cls = jax.lax.broadcasted_iota(jnp.int32, (f.shape[0], n_classes), 1)
+    onehot = (cls == y).astype(jnp.float32)                     # (NB, C)
+    mu = jnp.dot(onehot, cent_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)            # (NB, DB)
+    fn2_ref[...] += jnp.sum(f * f, axis=1, keepdims=True)
+    dot_ref[...] += jnp.sum(f * mu, axis=1, keepdims=True)
+
+    @pl.when(j == nd - 1)
+    def _finish():
+        fn2, dot = fn2_ref[...], dot_ref[...]
+        cn2 = jnp.dot(onehot, cn2_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)       # (NB, 1)
+        m2 = jnp.dot(onehot, m2_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+        rep = -(fn2 - 2.0 * dot + cn2)
+        div = fn2 + m2 - 2.0 * dot
+        rep_ref[...] = rep
+        div_ref[...] = div
+        score_ref[...] = w_rep * rep + w_div * div
+
+
+def repdiv_pallas(features, centroids, mean_norm2, labels, *, w_rep: float,
+                  w_div: float, n_block: int = 256, d_block: int = 512,
+                  interpret: bool = False):
+    N, D = features.shape
+    C = centroids.shape[0]
+    assert N % n_block == 0 and D % d_block == 0
+    nr, nd = N // n_block, D // d_block
+    cn2 = jnp.sum(jnp.square(centroids.astype(jnp.float32)), axis=-1,
+                  keepdims=True)                                # (C,1)
+
+    row = pl.BlockSpec((n_block, 1), lambda i, j: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_kernel, nd=nd, n_classes=C, w_rep=w_rep,
+                          w_div=w_div),
+        grid=(nr, nd),
+        in_specs=[
+            pl.BlockSpec((n_block, d_block), lambda i, j: (i, j)),  # features
+            pl.BlockSpec((C, d_block), lambda i, j: (0, j)),        # centroids
+            pl.BlockSpec((C, 1), lambda i, j: (0, 0)),              # cnorm2
+            pl.BlockSpec((C, 1), lambda i, j: (0, 0)),              # mean_norm2
+            pl.BlockSpec((n_block, 1), lambda i, j: (i, 0)),        # labels
+        ],
+        out_specs=[row, row, row],
+        out_shape=[jax.ShapeDtypeStruct((N, 1), jnp.float32)] * 3,
+        scratch_shapes=[pltpu.VMEM((n_block, 1), jnp.float32),
+                        pltpu.VMEM((n_block, 1), jnp.float32)],
+        interpret=interpret,
+    )(features, centroids, cn2, mean_norm2[:, None], labels[:, None])
+    score, rep, div = outs
+    return {"score": score[:, 0], "rep": rep[:, 0], "div": div[:, 0]}

@@ -1,0 +1,1 @@
+from repro.kernels.score.ops import score_from_logits  # noqa: F401

@@ -1,0 +1,58 @@
+"""jit'd wrapper for the fused score statistics with impl dispatch.
+
+impl:
+  "auto"      pallas on TPU, jnp reference elsewhere (CPU dry-runs lower the
+              reference path — same math, same shapes)
+  "pallas"    force compiled pallas kernel
+  "interpret" pallas kernel in interpret mode (CPU validation)
+  "ref"       pure-jnp oracle
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.score.ref import score_ref
+from repro.kernels.score.score import score_pallas
+
+
+def _pad_to(x, mult, axis, value):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "n_block", "v_block"))
+def score_from_logits(logits, labels, R=None, *, impl: str = "auto",
+                      n_block: int = 256, v_block: int = 2048):
+    """logits (N,V) any float dtype; labels (N,) int32; R (V,r) or None.
+
+    Returns dict: loss, pnorm2, entropy, py (N,) fp32 [+ psketch (N,r)].
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    want_sketch = R is not None
+    if impl == "ref":
+        return score_ref(logits, labels, R)
+
+    N, V = logits.shape
+    if R is None:
+        R = jnp.zeros((V, 8), jnp.float32)
+    n_block = min(n_block, max(8, N))
+    v_block = min(v_block, V)
+    lp = _pad_to(_pad_to(logits, n_block, 0, 0.0), v_block, 1, -1e30)
+    yp = _pad_to(labels, n_block, 0, 0)
+    Rp = _pad_to(R, v_block, 0, 0.0)
+    out = score_pallas(lp, yp, Rp, n_block=n_block,
+                       v_block=min(v_block, lp.shape[1]),
+                       interpret=(impl == "interpret"))
+    out = {k: v[:N] for k, v in out.items()}
+    if not want_sketch:
+        out.pop("psketch")
+    return out

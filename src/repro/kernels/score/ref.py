@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused score statistics.
+
+Given logits (N,V), labels (N,), sketch matrix R (V,r), computes per row:
+  loss     = logsumexp(l) - l_y
+  pnorm2   = ||softmax(l) - e_y||^2
+  entropy  = -sum p log p
+  psketch  = R^T (softmax(l) - e_y)
+These are exactly the last-layer statistics Titan needs: for a linear head
+W with input h, per-sample grad G = (p - e_y) h^T, so ||G||_F =
+||p - e_y|| * ||h|| and (R x S)-sketch of vec(G) = (R^T(p-e_y)) kron (S^T h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def score_ref(logits, labels, R=None):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ly = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
+    loss = lse - ly
+    p = jax.nn.softmax(lf, axis=-1)
+    py = jnp.exp(ly - lse)
+    pnorm2 = jnp.sum(jnp.square(p), axis=-1) - 2.0 * py + 1.0
+    entropy = lse - jnp.sum(p * lf, axis=-1)
+    out = {"loss": loss, "pnorm2": pnorm2, "entropy": entropy, "py": py}
+    if R is not None:
+        Rf = R.astype(jnp.float32)
+        out["psketch"] = p @ Rf - Rf[labels]
+    return out

@@ -1,0 +1,117 @@
+"""Fused score-statistics Pallas TPU kernel.
+
+One pass over vocab tiles computes, per token row: CE loss, ||p - e_y||^2
+(the last-layer grad-norm factor), predictive entropy, p_y, and the JL sketch
+R^T (p - e_y) — using an online (rescaled) logsumexp so the (N, V) softmax is
+never materialized. V is the minor grid axis; VMEM scratch carries the running
+max / moments between vocab tiles. This is the fine-grained-selection hot spot
+(V up to 256k, logits HBM-bandwidth bound) — fusing all statistics into the
+single pass XLA would otherwise do 3-4 times.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(logits_ref, labels_ref, R_ref,
+            loss_ref, pnorm2_ref, entropy_ref, py_ref, psk_ref,
+            m_ref, s1_ref, s2_ref, sl_ref, ly_ref, rsum_ref, ry_ref,
+            *, nv: int, v_blk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        sl_ref[...] = jnp.zeros_like(sl_ref)
+        ly_ref[...] = jnp.zeros_like(ly_ref)
+        rsum_ref[...] = jnp.zeros_like(rsum_ref)
+        ry_ref[...] = jnp.zeros_like(ry_ref)
+
+    l = logits_ref[...].astype(jnp.float32)                    # (NB, VB)
+    y = labels_ref[...]                                        # (NB, 1)
+    col = j * v_blk + jax.lax.broadcasted_iota(jnp.int32, l.shape, 1)
+    is_y = (col == y).astype(jnp.float32)                      # (NB, VB)
+    Rt = R_ref[...].astype(jnp.float32)                        # (VB, r)
+
+    ly_ref[...] += jnp.sum(jnp.where(is_y > 0, l, 0.0), axis=1, keepdims=True)
+    ry_ref[...] += jnp.dot(is_y, Rt, preferred_element_type=jnp.float32)
+
+    m_old = m_ref[...]                                         # (NB, 1)
+    m_new = jnp.maximum(m_old, jnp.max(l, axis=1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    e = jnp.exp(l - m_new)
+    s1_ref[...] = s1_ref[...] * alpha + jnp.sum(e, axis=1, keepdims=True)
+    s2_ref[...] = s2_ref[...] * alpha * alpha + jnp.sum(e * e, axis=1,
+                                                        keepdims=True)
+    sl_ref[...] = sl_ref[...] * alpha + jnp.sum(e * l, axis=1, keepdims=True)
+    rsum_ref[...] = rsum_ref[...] * alpha + jnp.dot(
+        e, Rt, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nv - 1)
+    def _finish():
+        m, s1, s2 = m_ref[...], s1_ref[...], s2_ref[...]
+        sl, ly = sl_ref[...], ly_ref[...]
+        lse = m + jnp.log(s1)
+        py = jnp.exp(ly - lse)
+        loss_ref[...] = lse - ly
+        py_ref[...] = py
+        pnorm2_ref[...] = s2 / (s1 * s1) - 2.0 * py + 1.0
+        entropy_ref[...] = lse - sl / s1
+        psk_ref[...] = rsum_ref[...] / s1 - ry_ref[...]
+
+
+def score_pallas(logits, labels, R, *, n_block: int = 256, v_block: int = 2048,
+                 interpret: bool = False):
+    """logits (N,V); labels (N,); R (V,r). N % n_block == 0, V % v_block == 0
+    (ops.py pads). Returns dict of (N,)/(N,r) fp32 stats."""
+    N, V = logits.shape
+    r = R.shape[1]
+    assert N % n_block == 0 and V % v_block == 0, (N, V, n_block, v_block)
+    nr, nv = N // n_block, V // v_block
+
+    out_sds = [
+        jax.ShapeDtypeStruct((N, 1), jnp.float32),   # loss
+        jax.ShapeDtypeStruct((N, 1), jnp.float32),   # pnorm2
+        jax.ShapeDtypeStruct((N, 1), jnp.float32),   # entropy
+        jax.ShapeDtypeStruct((N, 1), jnp.float32),   # py
+        jax.ShapeDtypeStruct((N, r), jnp.float32),   # psketch
+    ]
+    row_spec = pl.BlockSpec((n_block, 1), lambda i, j: (i, 0))
+    out_specs = [row_spec, row_spec, row_spec, row_spec,
+                 pl.BlockSpec((n_block, r), lambda i, j: (i, 0))]
+    in_specs = [
+        pl.BlockSpec((n_block, v_block), lambda i, j: (i, j)),  # logits
+        pl.BlockSpec((n_block, 1), lambda i, j: (i, 0)),        # labels
+        pl.BlockSpec((v_block, r), lambda i, j: (j, 0)),        # R
+    ]
+    scratch = [
+        pltpu.VMEM((n_block, 1), jnp.float32),   # m
+        pltpu.VMEM((n_block, 1), jnp.float32),   # s1
+        pltpu.VMEM((n_block, 1), jnp.float32),   # s2
+        pltpu.VMEM((n_block, 1), jnp.float32),   # sl
+        pltpu.VMEM((n_block, 1), jnp.float32),   # ly
+        pltpu.VMEM((n_block, r), jnp.float32),   # rsum
+        pltpu.VMEM((n_block, r), jnp.float32),   # ry
+    ]
+    kernel = functools.partial(_kernel, nv=nv, v_blk=v_block)
+    loss, pnorm2, entropy, py, psk = pl.pallas_call(
+        kernel,
+        grid=(nr, nv),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_sds,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(logits, labels[:, None], R)
+    return {"loss": loss[:, 0], "pnorm2": pnorm2[:, 0],
+            "entropy": entropy[:, 0], "py": py[:, 0], "psketch": psk}

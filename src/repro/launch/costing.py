@@ -1,0 +1,252 @@
+"""Loop-exact roofline costing via layer-differenced probes.
+
+XLA's HloCostAnalysis counts ``while`` bodies exactly once, so a scanned
+L-layer model under-reports flops/bytes/collectives by ~L x. Instead of
+unrolling the full model (intractable to compile at 512-way SPMD), we compile
+small PROBE programs under the ``cost_probe`` flag — every inner loop
+unrolled or densified, so probe costs are exact — at two stack depths
+L1 < L2, and difference them:
+
+    per_block = (cost(L2) - cost(L1)) / (L2 - L1) blocks
+    total     = cost(L1) - blocks(L1)*per_block + n_blocks*per_block
+
+Probes are lowered with the same mesh/shardings as the real cell, so the
+per-layer collective pattern (FSDP all-gathers, TP reduce-scatters, ...) is
+the production pattern. Probes are never executed — their temp memory is
+irrelevant (memory comes from the real compile in dryrun.py).
+
+Train additionally splits  total = n_micro * grad_cost + opt_cost  with a
+separate optimizer probe, since microbatches are identical by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TitanConfig, TrainConfig, get_config, replace
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import AxisRules
+from repro.flags import cost_probe
+from repro.launch.roofline import collective_bytes
+from repro.models.model import ParamDef, build_model, input_specs
+
+IS_DEF = lambda x: isinstance(x, ParamDef)
+
+
+def _collect(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        out[f"coll_{k}"] = float(v)
+    return out
+
+
+def _combine(a, b, fa=1.0, fb=1.0):
+    return {k: fa * a.get(k, 0.0) + fb * b.get(k, 0.0)
+            for k in set(a) | set(b)}
+
+
+def _probe_layers(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    """(L1, L2, block_size, n_blocks_full). L counts are cfg.n_layers values."""
+    if cfg.family == "hybrid":
+        return 3, 6, 3, cfg.n_layers // 3
+    if cfg.family == "vlm":
+        ce = cfg.vlm.cross_every
+        return ce, 2 * ce, ce, cfg.n_layers // ce
+    if cfg.family == "moe" and cfg.moe.first_dense_d_ff:
+        return 2, 3, 1, cfg.n_layers - 1
+    return 1, 2, 1, cfg.n_layers
+
+
+def _with_layers(cfg: ArchConfig, n: int) -> ArchConfig:
+    # keep the remat policy: recompute flops/bytes are part of the program
+    return replace(cfg, n_layers=n)
+
+
+def _shardings_for(model, rules, specs=None, cache=None):
+    p_sh = jax.tree.map(lambda d: rules.sharding(*d.axes), model.defs,
+                        is_leaf=IS_DEF)
+    out = [p_sh]
+    if cache is not None:
+        out.append(jax.tree.map(lambda d: rules.sharding(*d.axes), cache,
+                                is_leaf=IS_DEF))
+    if specs is not None:
+        out.append({k: rules.sharding(*d.axes) for k, d in specs.items()})
+    return tuple(out)
+
+
+def _sds_for(model, cfg, specs=None, cache=None):
+    p = jax.tree.map(lambda d: d.sds(cfg), model.defs, is_leaf=IS_DEF)
+    out = [p]
+    if cache is not None:
+        out.append(jax.tree.map(lambda d: d.sds(cfg), cache, is_leaf=IS_DEF))
+    if specs is not None:
+        out.append({k: d.sds(cfg) for k, d in specs.items()})
+    return tuple(out)
+
+
+def _grad_probe_cost(cfg, shape, rules) -> Dict[str, float]:
+    """fwd+bwd cost of ONE microbatch-equivalent (full global batch) pass."""
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    sh = _shardings_for(model, rules, specs=specs)
+    sds = _sds_for(model, cfg, specs=specs)
+
+    def grad_fn(params, batch):
+        return jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+
+    with cost_probe():
+        c = jax.jit(grad_fn, in_shardings=sh).lower(*sds).compile()
+    return _collect(c)
+
+
+def _opt_probe_cost(cfg, rules) -> Dict[str, float]:
+    from repro.optim.adamw import adamw_update
+    from repro.train.state import abstract_train_state
+    model = build_model(_with_layers(cfg, _probe_layers(cfg)[0]))
+    # optimizer cost is exactly linear in param count: probe the small stack
+    # and scale by the param ratio
+    small_n = model.cfg.n_params()
+    full_n = cfg.n_params()
+    state = abstract_train_state(model)
+    p_sh = jax.tree.map(lambda d: rules.sharding(*d.axes), model.defs,
+                        is_leaf=IS_DEF)
+
+    def opt_fn(grads, m, v, params):
+        from repro.optim.adamw import AdamWState
+        st = AdamWState(jnp.zeros((), jnp.int32), m, v)
+        new_p, new_st, _ = adamw_update(grads, st, params, lr=1e-4)
+        return new_p, new_st.m, new_st.v
+
+    gr = jax.tree.map(lambda p: jax.ShapeDtypeStruct(
+        p.shape, jnp.dtype(cfg.opt_state_dtype)), state.params)
+    with cost_probe():
+        c = jax.jit(opt_fn, in_shardings=(p_sh, p_sh, p_sh, p_sh)).lower(
+            gr, state.opt.m, state.opt.v, state.params).compile()
+    cost = _collect(c)
+    scale = full_n / max(small_n, 1)
+    return {k: v * scale for k, v in cost.items()}
+
+
+def _forward_probe_cost(cfg, shape, rules, kind: str) -> Dict[str, float]:
+    """prefill or decode cost for a given (probe) layer count."""
+    from repro.serve.cache import cache_defs
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    if kind == "decode":
+        cdefs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+        sh = _shardings_for(model, rules, specs=specs, cache=cdefs)
+        sds = _sds_for(model, cfg, specs=specs, cache=cdefs)
+        fn = model.decode_step
+    else:
+        sh = _shardings_for(model, rules, specs=specs)
+        sds = _sds_for(model, cfg, specs=specs)
+        fn = model.prefill
+    with cost_probe():
+        c = jax.jit(fn, in_shardings=sh).lower(*sds).compile()
+    return _collect(c)
+
+
+def _titan_select_probe_cost(cfg, shape, rules, ttn: TitanConfig
+                             ) -> Dict[str, float]:
+    """Selection-only overhead: titan step with a no-op train sub-step."""
+    from repro.core.filter import FilterState
+    from repro.core.pipeline import TitanState, lm_hooks, make_titan_step
+    model = build_model(cfg)
+    B = shape.global_batch
+    W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
+    f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+    noop = lambda state, batch: (state, {})
+    step = make_titan_step(features_fn=f_fn, stats_fn=s_fn, train_step_fn=noop,
+                           params_of=lambda s: s, batch_size=B,
+                           n_classes=cfg.n_domains, cfg=ttn)
+    specs = input_specs(cfg, shape)
+    ex_specs = {k: v for k, v in specs.items() if k != "weights"}
+
+    def resized(n):
+        return {k: jax.ShapeDtypeStruct((n,) + tuple(d.shape[1:]),
+                                        d.resolved_dtype(cfg))
+                for k, d in ex_specs.items()}
+
+    def resized_sh(n):
+        return {k: rules.sharding(*d.axes) for k, d in ex_specs.items()}
+
+    C, D = cfg.n_domains, cfg.d_model
+    rep = rules.sharding()
+    t_sds = TitanState(
+        FilterState(jax.ShapeDtypeStruct((C, D), jnp.float32),
+                    jax.ShapeDtypeStruct((C,), jnp.float32),
+                    jax.ShapeDtypeStruct((C,), jnp.float32)),
+        dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32)),
+        dict(resized(B), weights=jax.ShapeDtypeStruct((B,), jnp.float32)),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    t_sh = TitanState(
+        FilterState(rep, rep, rep),
+        dict(resized_sh(M), _score=rules.sharding("batch")),
+        dict(resized_sh(B), weights=rules.sharding("batch")),
+        rep)
+    p_sh = jax.tree.map(lambda d: rules.sharding(*d.axes), model.defs,
+                        is_leaf=IS_DEF)
+    p_sds = jax.tree.map(lambda d: d.sds(cfg), model.defs, is_leaf=IS_DEF)
+    with cost_probe():
+        c = jax.jit(step, in_shardings=(p_sh, t_sh, resized_sh(W))).lower(
+            p_sds, t_sds, resized(W)).compile()
+    return _collect(c)
+
+
+def cell_costs(arch: str, shape: ShapeConfig, rules: AxisRules, *,
+               n_micro: int = 1, titan: bool = False,
+               titan_cfg: Optional[TitanConfig] = None) -> Dict:
+    """Loop-exact composed costs for one cell. Returns per-device totals."""
+    cfg = get_config(arch)
+    L1, L2, blk, n_blocks = _probe_layers(cfg)
+    cfg1, cfg2 = _with_layers(cfg, L1), _with_layers(cfg, L2)
+
+    if shape.kind == "train":
+        c1 = _grad_probe_cost(cfg1, shape, rules)
+        c2 = _grad_probe_cost(cfg2, shape, rules)
+    else:
+        c1 = _forward_probe_cost(cfg1, shape, rules, shape.kind)
+        c2 = _forward_probe_cost(cfg2, shape, rules, shape.kind)
+
+    per_block = {k: (c2[k] - c1.get(k, 0.0)) / ((L2 - L1) / blk)
+                 for k in c2}
+    blocks_in_c1 = L1 // blk
+    base = {k: c1[k] - blocks_in_c1 * per_block[k] for k in c1}
+    total = {k: base[k] + n_blocks * per_block[k] for k in base}
+
+    # hybrid tail (26 = 8*3 + 2 rec layers): probe L=5 adds the 2-rec tail
+    if cfg.family == "hybrid" and cfg.n_layers % 3:
+        cfgt = _with_layers(cfg, 5)
+        ct = (_grad_probe_cost(cfgt, shape, rules) if shape.kind == "train"
+              else _forward_probe_cost(cfgt, shape, rules, shape.kind))
+        tail = {k: ct[k] - c1.get(k, 0.0) for k in ct}  # c1 is L=3
+        total = _combine(total, tail)
+
+    out = {"per_block": per_block, "base": base}
+    if shape.kind == "train":
+        # probes run the FULL global batch in one pass; costs are linear in
+        # batch so n_micro does not multiply (it only changes memory)
+        opt = _opt_probe_cost(cfg, rules)
+        total = _combine(total, opt)
+        out["opt"] = opt
+        if titan:
+            ttn = titan_cfg or TitanConfig(stream_ratio=4, buffer_ratio=2,
+                                           score_seq_len=1024)
+            sel1 = _titan_select_probe_cost(cfg1, shape, rules, ttn)
+            sel2 = _titan_select_probe_cost(cfg2, shape, rules, ttn)
+            sel_block = {k: (sel2[k] - sel1.get(k, 0.0)) / ((L2 - L1) / blk)
+                         for k in sel2}
+            sel_total = {k: sel1[k] + (n_blocks - blocks_in_c1) * sel_block[k]
+                         for k in sel1}
+            out["select"] = sel_total
+            total = _combine(total, sel_total)
+    out["total"] = total
+    return out

@@ -1,0 +1,414 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCH_NAMES, SHAPES, TitanConfig, TrainConfig,  # noqa: E402
+                           get_config, shape_applicable)
+from repro.configs.base import ShapeConfig  # noqa: E402
+from repro.dist.sharding import AxisRules, param_shardings  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (collective_bytes, model_flops,  # noqa: E402
+                                   roofline_terms)
+from repro.models.model import ParamDef, build_model, input_specs  # noqa: E402
+from repro.serve.cache import cache_defs  # noqa: E402
+from repro.train.state import abstract_train_state  # noqa: E402
+from repro.train.step import make_train_step  # noqa: E402
+
+IS_DEF = lambda x: isinstance(x, ParamDef)
+
+
+def chips_of(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256
+
+
+def default_n_micro(cfg, shape, mesh_cfg_multi: bool) -> int:
+    dp = 32 if mesh_cfg_multi else 16
+    rows = shape.global_batch // dp
+    if cfg.d_model >= 5120:
+        return max(1, rows // 4)
+    return 1
+
+
+def use_seq_shard(cfg, shape) -> bool:
+    return (shape.kind == "train" and cfg.d_model >= 5120
+            and cfg.family in ("dense", "moe", "vlm", "audio")
+            and shape.seq_len % 16 == 0)
+
+
+def _spec_shardings(specs: Dict, rules: AxisRules):
+    return {k: rules.sharding(*d.axes) for k, d in specs.items()}
+
+
+def _spec_sds(specs: Dict, cfg):
+    return {k: d.sds(cfg) for k, d in specs.items()}
+
+
+def _defs_shardings(defs, rules: AxisRules):
+    return jax.tree.map(lambda d: rules.sharding(*d.axes), defs, is_leaf=IS_DEF)
+
+
+def _defs_sds(defs, cfg):
+    return jax.tree.map(lambda d: d.sds(cfg), defs, is_leaf=IS_DEF)
+
+
+def _state_shardings(model, rules: AxisRules):
+    from repro.optim.adamw import AdamWState
+    from repro.train.state import TrainState
+    p_sh = _defs_shardings(model.defs, rules)
+    scalar = rules.sharding()
+    return TrainState(step=scalar, params=p_sh,
+                      opt=AdamWState(count=scalar, m=p_sh,
+                                     v=jax.tree.map(lambda x: x, p_sh)))
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               titan: bool = False, seq_shard: Optional[bool] = None,
+               n_micro: Optional[int] = None, decode_pp: bool = False,
+               pp_stages: int = 16, pp_micro: int = 16,
+               remat: Optional[str] = None, score_seq: int = 1024,
+               ssd_bf16: bool = False, ssd_chunk: int = 0):
+    """Lower + compile one (arch x shape x mesh) cell; return record dict."""
+    cfg = get_config(arch)
+    if remat or ssd_bf16 or ssd_chunk:
+        import dataclasses as _dc
+        from repro.configs import replace as _replace
+        from repro.configs import register_config
+        if remat:
+            cfg = _replace(cfg, remat=remat)
+        if ssd_bf16:
+            cfg = _replace(cfg, ssd=_dc.replace(cfg.ssd,
+                                                compute_dtype="bfloat16"))
+        if ssd_chunk:
+            cfg = _replace(cfg, ssd=_dc.replace(cfg.ssd, chunk=ssd_chunk))
+        register_config(cfg)   # so the costing probes resolve the same cfg
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"cell": f"{arch}|{shape_name}|{'2pod' if multi_pod else '1pod'}",
+                "skipped": True, "reason": reason}
+    if decode_pp:
+        return build_pp_cell(arch, shape_name, multi_pod=multi_pod,
+                             stages=pp_stages, n_micro=pp_micro)
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode = shape.kind if shape.kind != "train" else "train"
+    ss = use_seq_shard(cfg, shape) if seq_shard is None else seq_shard
+    dp = 32 if multi_pod else 16
+    rules = AxisRules(arch, mode, mesh, multi_pod=multi_pod, seq_shard=ss,
+                      batch_sharded=(shape.global_batch % dp == 0))
+    nm = default_n_micro(cfg, shape, multi_pod) if n_micro is None else n_micro
+
+    t0 = time.time()
+    with rules.ctx():
+        if shape.kind == "train":
+            tcfg = TrainConfig(seq_len=shape.seq_len,
+                               global_batch=shape.global_batch)
+            if titan:
+                lowered = _lower_titan(model, tcfg, shape, rules, nm,
+                                       score_seq=score_seq)
+            else:
+                step = make_train_step(model, tcfg, n_micro=nm)
+                state_sds = abstract_train_state(model)
+                state_sh = _state_shardings(model, rules)
+                specs = input_specs(cfg, shape)
+                batch_sds = _spec_sds(specs, cfg)
+                batch_sh = _spec_shardings(specs, rules)
+                lowered = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                                  donate_argnums=(0,)).lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            specs = input_specs(cfg, shape)
+            lowered = jax.jit(
+                model.prefill,
+                in_shardings=(_defs_shardings(model.defs, rules),
+                              _spec_shardings(specs, rules)),
+            ).lower(_defs_sds(model.defs, cfg), _spec_sds(specs, cfg))
+        else:  # decode
+            specs = input_specs(cfg, shape)
+            cdefs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(_defs_shardings(model.defs, rules),
+                              _defs_shardings(cdefs, rules),
+                              _spec_shardings(specs, rules)),
+                donate_argnums=(1,),
+            ).lower(_defs_sds(model.defs, cfg), _defs_sds(cdefs, cfg),
+                    _spec_sds(specs, cfg))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    try:
+        ma = compiled.memory_analysis()
+        mem = {a: int(getattr(ma, a)) for a in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes") if hasattr(ma, a)}
+    except Exception as e:  # some backends lack memory stats
+        mem = {"error": str(e)}
+    coll = collective_bytes(compiled.as_text())
+
+    # loop-exact costs from layer-differenced probes (HloCostAnalysis counts
+    # while bodies once — see launch/costing.py)
+    t1 = time.time()
+    from repro.launch.costing import cell_costs
+    ttn_cfg = TitanConfig(stream_ratio=4, buffer_ratio=2,
+                          score_seq_len=score_seq) if titan else None
+    with rules.ctx():
+        costs = cell_costs(arch, shape, rules, n_micro=nm, titan=titan,
+                           titan_cfg=ttn_cfg)
+    t_probe = time.time() - t1
+    tot = costs["total"]
+    probe_cost = {"flops": tot["flops"], "bytes accessed": tot["bytes"]}
+    probe_coll = {"total": tot.get("coll_total", 0.0)}
+    terms = roofline_terms(probe_cost, probe_coll)
+    from repro.launch.roofline import analytic_bytes, HBM_BW
+    terms["memory_s_analytic"] = analytic_bytes(
+        cfg, shape, chips=chips_of(multi_pod), n_micro=nm) / HBM_BW
+    mf = model_flops(cfg, shape)
+    chips = 512 if multi_pod else 256
+    hlo_flops_global = tot["flops"] * chips
+    rec = {
+        "cell": f"{arch}|{shape_name}|{'2pod' if multi_pod else '1pod'}"
+                + ("|titan" if titan else ""),
+        "arch": arch, "shape": shape_name,
+        "mesh": [2, 16, 16] if multi_pod else [16, 16],
+        "titan": titan, "n_micro": nm, "seq_shard": ss,
+        "skipped": False,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "probe_s": round(t_probe, 1),
+        "per_device": {
+            "flops": tot["flops"],
+            "bytes": tot["bytes"],
+            "collective_bytes": {k[5:]: v for k, v in tot.items()
+                                 if k.startswith("coll_")},
+            "per_block": costs["per_block"],
+            "while_counted_once": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes": coll},
+        },
+        "memory": mem,
+        "roofline": terms,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_flops_global
+                               if hlo_flops_global else None),
+        "params": cfg.n_params(),
+        "active_params": cfg.n_active_params(),
+    }
+    return rec
+
+
+def _lower_titan(model, tcfg, shape: ShapeConfig, rules: AxisRules, nm: int,
+                 score_seq: int = 1024):
+    """Lower the fused Titan train+select step (pod-scale selection config)."""
+    from repro.core.filter import FilterState
+    from repro.core.pipeline import TitanState, lm_hooks, make_titan_step
+
+    cfg = model.cfg
+    ttn = TitanConfig(stream_ratio=4, buffer_ratio=2, score_seq_len=score_seq,
+                      filter_blocks=1, sketch_dim=16)
+    B = shape.global_batch
+    W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
+    train_step = make_train_step(model, tcfg, n_micro=nm)
+    f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+    step = make_titan_step(features_fn=f_fn, stats_fn=s_fn,
+                           train_step_fn=train_step,
+                           params_of=lambda s: s.params,
+                           batch_size=B, n_classes=cfg.n_domains, cfg=ttn)
+
+    specs = input_specs(cfg, shape)           # includes weights for next_batch
+    ex_specs = {k: v for k, v in specs.items() if k != "weights"}
+
+    def resized(n):
+        return {k: jax.ShapeDtypeStruct((n,) + tuple(d.shape[1:]),
+                                        d.resolved_dtype(cfg))
+                for k, d in ex_specs.items()}
+
+    def resized_sh(n):
+        return {k: rules.sharding(*d.axes) for k, d in ex_specs.items()}
+
+    window_sds = resized(W)
+    window_sh = resized_sh(W)
+    buf_sds = dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32))
+    buf_sh = dict(resized_sh(M), _score=rules.sharding("batch"))
+    nb_sds = dict(resized(B), weights=jax.ShapeDtypeStruct((B,), jnp.float32))
+    nb_sh = dict(resized_sh(B), weights=rules.sharding("batch"))
+    C, D = cfg.n_domains, cfg.d_model
+    rep = rules.sharding()
+    fstate_sds = FilterState(jax.ShapeDtypeStruct((C, D), jnp.float32),
+                             jax.ShapeDtypeStruct((C,), jnp.float32),
+                             jax.ShapeDtypeStruct((C,), jnp.float32))
+    fstate_sh = FilterState(rep, rep, rep)
+    t_sds = TitanState(fstate_sds, buf_sds, nb_sds,
+                       jax.ShapeDtypeStruct((2,), jnp.uint32))
+    t_sh = TitanState(fstate_sh, buf_sh, nb_sh, rep)
+    state_sds = abstract_train_state(model)
+    state_sh = _state_shardings(model, rules)
+    return jax.jit(step, in_shardings=(state_sh, t_sh, window_sh),
+                   donate_argnums=(0, 1)).lower(state_sds, t_sds, window_sds)
+
+
+def build_pp_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  stages: int = 16, n_micro: int = 16):
+    """Pipeline-parallel weight-stationary decode cell (§Perf hillclimb)."""
+    from repro.serve.decode_pp import decode_pp_fn, pp_cache_defs, pp_param_defs
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    assert shape.kind == "decode" and cfg.family == "dense"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = AxisRules(arch, "decode_pp", mesh, multi_pod=multi_pod)
+    defs = pp_param_defs(cfg, stages)
+    cdefs = pp_cache_defs(cfg, shape.global_batch, shape.seq_len, stages,
+                          n_micro)
+    specs = input_specs(cfg, shape)
+    fn = lambda p, c, b: decode_pp_fn(cfg, p, c, b, stages=stages,
+                                      n_micro=n_micro, mesh=mesh)
+    sh = (_defs_shardings(defs, rules), _defs_shardings(cdefs, rules),
+          _spec_shardings(specs, rules))
+    sds = (_defs_sds(defs, cfg), _defs_sds(cdefs, cfg), _spec_sds(specs, cfg))
+    t0 = time.time()
+    with rules.ctx():
+        lowered = jax.jit(fn, in_shardings=sh, donate_argnums=(1,)).lower(*sds)
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        # loop-exact probe: cost_probe unrolls the tick scan and the
+        # per-stage layer scans, so HLO cost analysis is exact
+        from repro.flags import cost_probe
+        from repro.launch.costing import _collect
+        t1 = time.time()
+        with cost_probe():
+            probe = jax.jit(fn, in_shardings=sh).lower(*sds).compile()
+        tot = _collect(probe)
+        t_probe = time.time() - t1
+    try:
+        ma = compiled.memory_analysis()
+        mem = {a: int(getattr(ma, a)) for a in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes") if hasattr(ma, a)}
+    except Exception as e:
+        mem = {"error": str(e)}
+    terms = roofline_terms({"flops": tot["flops"], "bytes accessed": tot["bytes"]},
+                           {"total": tot.get("coll_total", 0.0)})
+    mf = model_flops(cfg, shape)
+    chips = 512 if multi_pod else 256
+    return {
+        "cell": f"{arch}|{shape_name}|{'2pod' if multi_pod else '1pod'}|pp",
+        "arch": arch, "shape": shape_name, "decode_pp": True,
+        "stages": stages, "pp_micro": n_micro, "skipped": False,
+        "compile_s": round(t_compile, 1), "probe_s": round(t_probe, 1),
+        "per_device": {"flops": tot["flops"], "bytes": tot["bytes"],
+                       "collective_bytes": {k[5:]: v for k, v in tot.items()
+                                            if k.startswith("coll_")}},
+        "memory": mem, "roofline": terms, "model_flops": mf,
+        "useful_flops_ratio": mf / max(tot["flops"] * chips, 1e-30),
+    }
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def all_cells(multi_pod_too: bool = True):
+    for arch in ARCH_NAMES:
+        for shape in SHAPES:
+            yield arch, shape, False
+            if multi_pod_too:
+                yield arch, shape, True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--titan", action="store_true")
+    ap.add_argument("--decode-pp", action="store_true",
+                    help="pipeline-parallel weight-stationary decode variant")
+    ap.add_argument("--seq-shard", type=int, default=-1,
+                    help="-1 auto, 0 off, 1 on")
+    ap.add_argument("--n-micro", type=int, default=0)
+    ap.add_argument("--remat", default="",
+                    help="override the arch remat policy (none|dots|full|chain)")
+    ap.add_argument("--score-seq", type=int, default=1024,
+                    help="titan fine-scoring sequence truncation")
+    ap.add_argument("--ssd-bf16", action="store_true",
+                    help="bf16 SSD chunk einsums (mamba2 hillclimb)")
+    ap.add_argument("--ssd-chunk", type=int, default=0,
+                    help="override SSD chunk length (mamba2 hillclimb)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in subprocesses, aggregate JSONL")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--json", action="store_true",
+                    help="print the single-cell record as JSON on stdout")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        done = set()
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                for line in f:
+                    try:
+                        done.add(json.loads(line)["cell"])
+                    except Exception:
+                        pass
+        with open(args.out, "a") as out:
+            for arch, shape, mp in all_cells(not args.single_pod_only):
+                cell = f"{arch}|{shape}|{'2pod' if mp else '1pod'}"
+                if cell in done:
+                    print(f"[skip-done] {cell}", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--json"]
+                if mp:
+                    cmd.append("--multi-pod")
+                t0 = time.time()
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   env={**os.environ, "PYTHONPATH": "src"})
+                dt = time.time() - t0
+                if r.returncode == 0 and r.stdout.strip():
+                    rec = json.loads(r.stdout.strip().splitlines()[-1])
+                else:
+                    rec = {"cell": cell, "skipped": False,
+                           "error": (r.stderr or "")[-2000:]}
+                rec["wall_s"] = round(dt, 1)
+                out.write(json.dumps(rec) + "\n")
+                out.flush()
+                status = ("SKIP " + rec.get("reason", "") if rec.get("skipped")
+                          else ("ERROR" if "error" in rec else
+                                f"ok {rec['roofline']['dominant']}"))
+                print(f"[{dt:6.1f}s] {cell}: {status}", flush=True)
+        return
+
+    rec = build_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                     titan=args.titan, decode_pp=args.decode_pp,
+                     seq_shard=(None if args.seq_shard < 0 else bool(args.seq_shard)),
+                     n_micro=(args.n_micro or None),
+                     remat=(args.remat or None), score_seq=args.score_seq,
+                     ssd_bf16=args.ssd_bf16, ssd_chunk=args.ssd_chunk)
+    if args.json:
+        print(json.dumps(rec))
+    else:
+        print(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. jax's ``compiled.cost_analysis()`` reports **per-device** (post-SPMD)
+flops / bytes, and ``compiled.as_text()`` is the per-device module, so each
+term is simply  per_device_quantity / per_chip_rate  (algebraically identical
+to the global/(chips*rate) form in the assignment).
+
+    compute_s    = HLO_flops_per_device / 197e12
+    memory_s     = HLO_bytes_per_device / 819e9
+    collective_s = collective_bytes_per_device / 50e9
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS) + r")(?:-start)?\(([^)]*)")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op (per device), by type.
+    ``-done`` halves of async pairs are skipped (counted at ``-start``).
+
+    XLA:CPU has no native bf16 matmul: it upcasts operands to f32 and hoists
+    the convert *before* the collective, doubling apparent transport. A TPU
+    lowering keeps bf16 params bf16 on the wire, so collectives whose operand
+    is a convert-fusion are counted at half width (documented in
+    EXPERIMENTS.md methodology)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        operand = m.group(3).split(",")[0].strip()
+        if "convert" in operand and "f32" in m.group(1):
+            b //= 2  # bf16 on the wire on TPU; CPU artifact upcast
+        out[m.group(2)] += b
+        out["total"] += b
+    return out
+
+
+def roofline_terms(cost: Dict, coll: Dict) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = max(bound, 1e-30)
+    return {**terms, "dominant": dom, "bound_s": bound,
+            "roofline_fraction": compute_s / total}
+
+
+def analytic_bytes(cfg, shape, *, chips: int = 256, n_micro: int = 1) -> float:
+    """Napkin HBM-traffic model per device per step (the number a fused TPU
+    lowering would approach; the XLA-CPU artifact materializes attention/SSD
+    tiles in HBM and thus over-reports — see EXPERIMENTS.md §Roofline).
+
+    train:  params read (bf16) + grads written+read (opt dtype) + m/v r+w
+            + activations ~ c_act * L * tokens_local * d_model * 2B
+            + logits chunks r+w
+    forward-only: params read + kv-cache read + activations.
+    """
+    p_bytes = 2.0 * cfg.n_active_params() / chips
+    opt_sz = 2.0 if cfg.opt_state_dtype == "bfloat16" else 4.0
+    tokens_local = shape.global_batch * shape.seq_len / chips
+    act = 12.0 * cfg.n_layers * tokens_local * cfg.d_model * 2.0
+    if shape.kind == "train":
+        fixed = p_bytes * (1 + 2 * opt_sz)          # params + grads
+        opt = 4.0 * opt_sz * cfg.n_active_params() / chips
+        logits = 2.0 * 4.0 * tokens_local * cfg.vocab / 16.0  # vocab-sharded
+        return fixed * 3 + opt + act * 3 + logits   # fwd+bwd+update passes
+    if shape.kind == "prefill":
+        return p_bytes + act
+    # decode: weights + cache dominate
+    cache = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = (2.0 * cfg.n_layers * shape.global_batch * shape.seq_len
+                 * cfg.n_kv_heads * cfg.head_dim * 2.0 / chips)
+    elif cfg.family == "hybrid":
+        W = cfg.rglru.lru_width or cfg.d_model
+        cache = (cfg.n_layers * shape.global_batch
+                 * (W * 4.0 + 2 * 2048 * cfg.n_kv_heads * cfg.head_dim * 2.0)
+                 / chips)
+    elif cfg.family == "ssm":
+        c = cfg.ssd
+        Din = c.expand * cfg.d_model
+        cache = (cfg.n_layers * shape.global_batch
+                 * (Din // c.head_dim) * c.head_dim * c.d_state * 4.0 / chips)
+    return p_bytes + 2 * cache
+
+
+def model_flops(cfg, shape, titan_overhead: float = 0.0) -> float:
+    """MODEL_FLOPS: 6*N*D train (N_active for MoE), 2*N*D forward-only."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        base = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        base = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        base = 2.0 * n * shape.global_batch
+    return base * (1.0 + titan_overhead)

@@ -1,0 +1,128 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m-reduced \
+        --steps 100 --batch 8 --seq 128 --titan --ckpt-dir /tmp/run1
+
+Runs on whatever devices exist (1 CPU device in this container; the
+production mesh path is exercised by dryrun.py). Features: Titan selection
+(or plain streaming), AdamW + warmup-cosine, checkpoint/auto-resume,
+straggler guard, eval loss, gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager, find_latest, restore_checkpoint
+from repro.configs import TitanConfig, TrainConfig, get_config
+from repro.core.pipeline import lm_hooks, make_titan_step, titan_init
+from repro.data.stream import SyntheticLMStream
+from repro.ft.elastic import StragglerGuard
+from repro.models.model import build_model
+from repro.train.state import TrainState, init_train_state
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m-reduced")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--titan", action="store_true")
+    ap.add_argument("--stream-ratio", type=int, default=4)
+    ap.add_argument("--buffer-ratio", type=int, default=2)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--grad-compress", default="none", choices=["none", "int8"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--eval-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(seq_len=args.seq, global_batch=args.batch, lr=args.lr,
+                       warmup_steps=max(args.steps // 10, 5),
+                       total_steps=args.steps,
+                       grad_compression=args.grad_compress, seed=args.seed)
+    train_step = make_train_step(model, tcfg, n_micro=args.n_micro)
+
+    stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=args.seq,
+                               n_domains=cfg.n_domains, seed=args.seed)
+    guard = StragglerGuard(
+        lambda: stream.next_window(
+            args.batch * (args.stream_ratio if args.titan else 1)),
+        deadline_s=5.0)
+
+    state = init_train_state(model, jax.random.PRNGKey(args.seed))
+    start_step = 0
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if mgr is not None:
+        latest = find_latest(args.ckpt_dir)
+        if latest:
+            state, manifest = restore_checkpoint(latest, state)
+            start_step = int(manifest["step"])
+            print(f"[resume] {latest} at step {start_step}")
+
+    eval_window = stream.next_window(args.batch)
+
+    def to_batch(w, n=None):
+        out = {k: jnp.asarray(v if n is None else v[:n]) for k, v in w.items()}
+        return out
+
+    if args.titan:
+        ttn = TitanConfig(stream_ratio=args.stream_ratio,
+                          buffer_ratio=args.buffer_ratio,
+                          score_seq_len=min(args.seq, 1024), sketch_dim=8)
+        f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+        tstep = jax.jit(make_titan_step(
+            features_fn=f_fn, stats_fn=s_fn, train_step_fn=train_step,
+            params_of=lambda s: s.params, batch_size=args.batch,
+            n_classes=cfg.n_domains, cfg=ttn))
+        w0 = to_batch(guard.next_window())
+        tstate = titan_init(jax.random.PRNGKey(args.seed + 1), w0,
+                            f_fn(state.params, w0), args.batch,
+                            args.batch * args.buffer_ratio, cfg.n_domains)
+    else:
+        tstep = jax.jit(train_step)
+        tstate = None
+
+    eval_fn = jax.jit(lambda p, b: model.loss_fn(p, b)[0])
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        window = to_batch(guard.next_window())
+        if args.titan:
+            state, tstate, metrics = tstep(state, tstate, window)
+        else:
+            batch = {k: v[:args.batch] for k, v in window.items()}
+            batch["weights"] = jnp.ones((args.batch,), jnp.float32)
+            state, metrics = tstep(state, batch)
+        if (step + 1) % args.log_every == 0:
+            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/args.log_every:.2f}s/step)")
+            t0 = time.time()
+        if (step + 1) % args.eval_every == 0:
+            eb = dict(to_batch(eval_window),
+                      weights=jnp.ones((args.batch,), jnp.float32))
+            print(f"  eval loss {float(eval_fn(state.params, eb)):.4f} "
+                  f"goodput {guard.goodput:.3f}")
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, extra={"arch": args.arch})
+    if mgr is not None:
+        mgr.save(args.steps, state, extra={"arch": args.arch})
+        mgr.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

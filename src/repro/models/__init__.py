@@ -1,0 +1,3 @@
+from repro.models.model import (  # noqa: F401
+    ParamDef, build_param_defs, init_params, param_specs, Model, build_model,
+)

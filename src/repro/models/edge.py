@@ -1,0 +1,135 @@
+"""Edge-scale classifier models — the paper's native setting (IC / AR / HAR).
+
+Small pure-JAX models exposing the hooks Titan needs:
+  features(params, x, n_blocks)   shallow-layer features (coarse filter)
+  penultimate(params, x)          last-hidden h (fine-grained scoring)
+  logits(params, x) / head_logits(params, h)
+EdgeMLP mirrors the paper's HAR model (2 FC + softmax over 900-dim IMU
+features); EdgeCNN is a small conv net standing in for the IC models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class EdgeMLPConfig:
+    in_dim: int = 900
+    hidden: Tuple[int, ...] = (256, 128)
+    n_classes: int = 6
+
+
+def mlp_init(cfg: EdgeMLPConfig, rng):
+    params = {}
+    dims = (cfg.in_dim,) + cfg.hidden + (cfg.n_classes,)
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k1, rng = jax.random.split(rng)
+        params[f"w{i}"] = jax.random.normal(k1, (a, b)) / jnp.sqrt(a)
+        params[f"b{i}"] = jnp.zeros((b,))
+    return params
+
+
+def mlp_n_blocks(cfg: EdgeMLPConfig) -> int:
+    return len(cfg.hidden)
+
+
+def mlp_features(cfg, params, x, n_blocks: int = 1):
+    h = x
+    for i in range(min(n_blocks, len(cfg.hidden))):
+        h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+    return h
+
+
+def mlp_penultimate(cfg, params, x):
+    return mlp_features(cfg, params, x, len(cfg.hidden))
+
+
+def mlp_head_logits(cfg, params, h):
+    i = len(cfg.hidden)
+    return h @ params[f"w{i}"] + params[f"b{i}"]
+
+
+def mlp_logits(cfg, params, x):
+    return mlp_head_logits(cfg, params, mlp_penultimate(cfg, params, x))
+
+
+def mlp_loss(cfg, params, batch):
+    """batch: x (B,in_dim), y (B,), weights (B,) optional."""
+    logits = mlp_logits(cfg, params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ly = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    per = lse - ly
+    w = batch.get("weights")
+    return jnp.mean(per * w) if w is not None else jnp.mean(per)
+
+
+def mlp_accuracy(cfg, params, x, y):
+    return jnp.mean((jnp.argmax(mlp_logits(cfg, params, x), -1) == y)
+                    .astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Small CNN (image-classification stand-in; blocks = conv stages)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EdgeCNNConfig:
+    img: int = 32
+    channels: Tuple[int, ...] = (16, 32)
+    n_classes: int = 10
+    in_channels: int = 3
+
+
+def cnn_init(cfg: EdgeCNNConfig, rng):
+    params = {}
+    c_in = cfg.in_channels
+    for i, c_out in enumerate(cfg.channels):
+        k, rng = jax.random.split(rng)
+        params[f"conv{i}"] = jax.random.normal(k, (3, 3, c_in, c_out)) / jnp.sqrt(
+            9 * c_in)
+        params[f"cb{i}"] = jnp.zeros((c_out,))
+        c_in = c_out
+    feat = cfg.channels[-1]
+    k, rng = jax.random.split(rng)
+    params["head_w"] = jax.random.normal(k, (feat, cfg.n_classes)) / jnp.sqrt(feat)
+    params["head_b"] = jnp.zeros((cfg.n_classes,))
+    return params
+
+
+def cnn_features(cfg, params, x, n_blocks: int = 1):
+    """x: (B,H,W,C). Each block: conv + relu + 2x2 mean-pool; features are
+    spatially mean-pooled channels."""
+    h = x
+    for i in range(min(n_blocks, len(cfg.channels))):
+        h = jax.lax.conv_general_dilated(
+            h, params[f"conv{i}"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + params[f"cb{i}"]
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID") / 4.0
+    return jnp.mean(h, axis=(1, 2))
+
+
+def cnn_penultimate(cfg, params, x):
+    return cnn_features(cfg, params, x, len(cfg.channels))
+
+
+def cnn_head_logits(cfg, params, h):
+    return h @ params["head_w"] + params["head_b"]
+
+
+def cnn_logits(cfg, params, x):
+    return cnn_head_logits(cfg, params, cnn_penultimate(cfg, params, x))
+
+
+def cnn_loss(cfg, params, batch):
+    logits = cnn_logits(cfg, params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ly = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    per = lse - ly
+    w = batch.get("weights")
+    return jnp.mean(per * w) if w is not None else jnp.mean(per)

@@ -1,0 +1,331 @@
+"""Shared layers: norms, RoPE, attention (dense / chunked online-softmax /
+local-window / decode split-K), MLP variants. Pure JAX; sharding via logical
+``constrain`` annotations only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+from repro.flags import probing
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., T, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (.., T, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Tq,KVH,G,D)  k: (B,Tk,KVH,D) -> (B,KVH,G,Tq,Tk) fp32."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B,KVH,G,Tq,Tk)  v: (B,Tk,KVH,D) -> (B,Tq,KVH,G,D)."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+
+
+def dense_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                    kv_positions=None):
+    """Reference attention; materializes (Tq,Tk) scores. q: (B,Tq,KVH,G,D)."""
+    B, Tq, KVH, G, D = q.shape
+    Tk = k.shape[1]
+    s = _gqa_scores(q, k) / jnp.sqrt(D).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Tq)
+    kpos = jnp.arange(Tk) if kv_positions is None else kv_positions
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                      q_chunk: int = 512, k_chunk: int = 1024):
+    """Online-softmax (flash-style) attention in pure JAX.
+
+    Scans q chunks; inner scan over k chunks keeps running (max, denom, acc) so
+    the score matrix is never materialized beyond (q_chunk, k_chunk). Memory is
+    O(q_chunk * k_chunk) instead of O(Tq * Tk); required for 32k prefill.
+    """
+    B, Tq, KVH, G, D = q.shape
+    Tk = k.shape[1]
+    q_chunk = min(q_chunk, Tq)
+    k_chunk = min(k_chunk, Tk)
+    assert Tq % q_chunk == 0 and Tk % k_chunk == 0, (Tq, q_chunk, Tk, k_chunk)
+    nq, nk = Tq // q_chunk, Tk // k_chunk
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, ki):
+            m, d_sum, acc = carry
+            kc = lax.dynamic_slice_in_dim(k, ki * k_chunk, k_chunk, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, ki * k_chunk, k_chunk, axis=1)
+            kpos = ki * k_chunk + jnp.arange(k_chunk)
+            s = _gqa_scores(qc, kc) * scale                   # (B,KVH,G,qc,kc)
+            mask = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            d_new = d_sum * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, d_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, D), jnp.float32)
+        from repro.flags import pscan
+        (m, d_sum, acc), _ = pscan(k_step, (m0, d0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(d_sum, 1e-30)[..., None]      # (B,KVH,G,qc,D)
+        return None, jnp.transpose(out, (0, 3, 1, 2, 4))      # (B,qc,KVH,G,D)
+
+    from repro.flags import pscan as _pscan
+    _, chunks = _pscan(q_step, None, jnp.arange(nq))          # (nq,B,qc,KVH,G,D)
+    out = jnp.transpose(chunks, (1, 0, 2, 3, 4, 5)).reshape(B, Tq, KVH, G, D)
+    return out.astype(q.dtype)
+
+
+def local_chunked_attention(q, k, v, *, window: int, q_offset=0,
+                            q_chunk: int = 512):
+    """Sliding-window causal attention.
+
+    Each q chunk attends to a static-size (window + q_chunk) K/V slice obtained
+    with a dynamic_slice — no full-K compute waste for bounded windows.
+    """
+    B, Tq, KVH, G, D = q.shape
+    Tk = k.shape[1]
+    q_chunk = min(q_chunk, Tq)
+    assert Tq % q_chunk == 0
+    span = min(window + q_chunk, Tk)
+    nq = Tq // q_chunk
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+
+    def q_step(_, qi):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        start = jnp.clip(qi * q_chunk + q_chunk - span, 0, Tk - span)
+        kc = lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vc = lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        kpos = q_offset + start + jnp.arange(span)
+        s = _gqa_scores(qc, kc) * scale
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return None, _gqa_out(p, vc)
+
+    from repro.flags import pscan
+    _, chunks = pscan(q_step, None, jnp.arange(nq))
+    out = jnp.transpose(chunks, (1, 0, 2, 3, 4, 5)).reshape(B, Tq, KVH, G, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, valid):
+    """Single-token attention against a (possibly seq-sharded) KV cache.
+
+    q: (B,1,KVH,G,D); caches: (B,S,KVH,D); valid: (B,S) bool. Softmax
+    reductions run over the sharded S axis — GSPMD inserts the split-K
+    partial-softmax collectives (flash-decoding on TPU).
+    """
+    D = q.shape[-1]
+    s = _gqa_scores(q, k_cache) / jnp.sqrt(D).astype(jnp.float32)  # (B,KVH,G,1,S)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p, v_cache)
+
+
+def attention_block(cfg, p, x, positions, *, mode: str, layer_cache=None,
+                    kv_len=None, window: int = 0, kv_override=None):
+    """Full attention sub-layer: proj -> rope -> attention -> out proj.
+
+    kv_override: (k, v) from a different source (VLM cross-attention).
+    Returns (out, new_layer_cache).
+    """
+    B, T, _ = x.shape
+    KVH, H, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    G = H // KVH
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, T, KVH, G, hd)
+    q = constrain(q, "batch", "seq", "kv_heads", "heads", "head_dim")
+
+    if kv_override is not None:
+        k, v = kv_override
+        kv_pos = None
+    else:
+        k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+        v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        k = rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+
+    if kv_override is None:
+        q = rope(q.reshape(B, T, H, hd), positions, cfg.rope_theta
+                 ).reshape(B, T, KVH, G, hd)
+
+    new_cache = None
+    if mode == "decode":
+        kc, vc = layer_cache["k"], layer_cache["v"]
+        S = kc.shape[1]
+        if window:
+            # rolling window cache: drop oldest, append newest
+            kc = jnp.concatenate([kc[:, 1:], k], axis=1)
+            vc = jnp.concatenate([vc[:, 1:], v], axis=1)
+            count = jnp.minimum(kv_len + 1, S)
+            valid = jnp.arange(S)[None, :] >= (S - count)[:, None]
+        else:
+            # append new kv at position kv_len
+            kc = _cache_update(kc, k, kv_len)
+            vc = _cache_update(vc, v, kv_len)
+            valid = jnp.arange(S)[None, :] <= kv_len[:, None]
+        kc = constrain(kc, "batch", "cache_seq", "kv_heads", "head_dim")
+        vc = constrain(vc, "batch", "cache_seq", "kv_heads", "head_dim")
+        out = decode_attention(q, kc, vc, valid)
+        new_cache = {"k": kc, "v": vc}
+    elif window:
+        if probing():
+            # cost probes: unrolled windowed chunks (dense full-T^2 would
+            # overcount local-attention flops ~T/window times)
+            out = local_chunked_attention(q, k, v, window=window,
+                                          q_chunk=window)
+        else:
+            out = local_chunked_attention(q, k, v, window=window)
+        if mode == "prefill":
+            new_cache = _window_cache(k, v, window)
+    elif kv_override is not None:
+        out = dense_attention(q, k, v, causal=False)
+    else:
+        if probing():
+            # cost probes: same algorithm, chunks unrolled (pscan); cap the
+            # body count so the probe graph stays compilable at 32k
+            qc = max(min(T, 1024), T // 8)
+            out = chunked_attention(q, k, v, causal=cfg.causal, q_chunk=qc,
+                                    k_chunk=max(min(T, 1024), T // 8))
+        else:
+            q_chunk = 512 if T > 4096 else min(1024, T)
+            out = chunked_attention(q, k, v, causal=cfg.causal, q_chunk=q_chunk)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    out = out.reshape(B, T, H * hd)
+    out = jnp.einsum("bth,hd->btd", out, p["wo"].reshape(H * hd, -1))
+    return out.astype(x.dtype), new_cache
+
+
+def _cache_update(cache, new, kv_len):
+    """cache: (B,S,KVH,D), new: (B,1,KVH,D), kv_len: (B,) — scatter per batch row."""
+    S = cache.shape[1]
+    sel = (jnp.arange(S)[None, :] == kv_len[:, None])[:, :, None, None]
+    return jnp.where(sel, new.astype(cache.dtype), cache)
+
+
+def _window_cache(k, v, window):
+    return {"k": k[:, -window:], "v": v[:, -window:]}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(cfg, p, x, activation: Optional[str] = None):
+    act = activation or cfg.activation
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        u = jnp.einsum("btd,df->btf", x, p["w_up"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("btd,df->btf", x, p["w_up"])
+        if act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "mlp")
+    return jnp.einsum("btf,fd->btd", h, p["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(cfg, p, tokens):
+    out = jnp.take(p["embedding"], tokens, axis=0)
+    return out.astype(jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
+
+
+def unembed_logits(cfg, params, h):
+    """h: (B,T,D) -> logits (B,T,V) fp32 (vocab possibly model-sharded)."""
+    table = params["unembed"]["w"] if not cfg.tie_embeddings else params["embed"]["embedding"]
+    logits = jnp.einsum("btd,vd->btv", h, table, preferred_element_type=jnp.float32)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def softmax_xent(logits, labels, *, label_mask=None):
+    """Mean CE over valid tokens; logits fp32 (B,T,V); labels (B,T) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if label_mask is None:
+        return jnp.mean(loss)
+    denom = jnp.maximum(jnp.sum(label_mask), 1.0)
+    return jnp.sum(loss * label_mask) / denom

@@ -1,0 +1,609 @@
+"""Model builder: ParamDef trees, per-family forward passes, losses, serving.
+
+Everything is functional: ``build_model(cfg)`` returns a ``Model`` whose
+methods are pure functions of (params, batch) suitable for jit/pjit. Params
+are nested dicts of arrays; ``Model.defs`` is the matching tree of ``ParamDef``
+(shape, dtype, logical axes) used for init, sharding and dry-run specs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.flags import pscan
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.ssd import ssd_block
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "param"             # "param" -> cfg.param_dtype
+    init: str = "normal"             # normal|zeros|ones|a_log|dt_bias|lam
+    fan_in: int = 0
+
+    def resolved_dtype(self, cfg: ArchConfig):
+        if self.dtype == "param":
+            return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+        return jnp.dtype(self.dtype)
+
+    def sds(self, cfg: ArchConfig):
+        return jax.ShapeDtypeStruct(self.shape, self.resolved_dtype(cfg))
+
+
+def _d(shape, axes, dtype="param", init="normal", fan_in=0) -> ParamDef:
+    if init == "normal" and fan_in == 0:
+        fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+    return ParamDef(tuple(shape), tuple(axes), dtype, init, fan_in)
+
+
+def _stack(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked (scan) dim to every leaf."""
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, (axis_name,) + p.axes, p.dtype,
+                           p.init, p.fan_in),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Layer param defs
+# ---------------------------------------------------------------------------
+
+def _norm_defs(cfg, d=None):
+    d = d or cfg.d_model
+    out = {"scale": _d((d,), (None,), dtype="float32", init="zeros")}
+    if cfg.norm == "layernorm":
+        out["bias"] = _d((d,), (None,), dtype="float32", init="zeros")
+    return out
+
+
+def _attn_defs(cfg):
+    D, H, KVH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": _d((D, H, hd), ("embed", "heads", "head_dim"), fan_in=D),
+        "wk": _d((D, KVH, hd), ("embed", "kv_heads", "head_dim"), fan_in=D),
+        "wv": _d((D, KVH, hd), ("embed", "kv_heads", "head_dim"), fan_in=D),
+        "wo": _d((H, hd, D), ("heads", "head_dim", "embed"), fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = _d((H, hd), ("heads", "head_dim"), init="zeros")
+        out["bk"] = _d((KVH, hd), ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = _d((KVH, hd), ("kv_heads", "head_dim"), init="zeros")
+    return out
+
+
+def _mlp_defs(cfg, d_ff=None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": _d((D, F), ("embed", "mlp")),
+                "w_up": _d((D, F), ("embed", "mlp")),
+                "w_down": _d((F, D), ("mlp", "embed"))}
+    return {"w_up": _d((D, F), ("embed", "mlp")),
+            "w_down": _d((F, D), ("mlp", "embed"))}
+
+
+def _dense_layer_defs(cfg, d_ff=None):
+    return {"attn_norm": _norm_defs(cfg), "attn": _attn_defs(cfg),
+            "mlp_norm": _norm_defs(cfg), "mlp": _mlp_defs(cfg, d_ff)}
+
+
+def _moe_layer_defs(cfg):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.expert_d_ff
+    moe = {
+        "router": _d((D, E), ("embed", "experts"), dtype="float32"),
+        "w_gate": _d((E, D, F), ("experts", "embed", "expert_mlp"), fan_in=D),
+        "w_up": _d((E, D, F), ("experts", "embed", "expert_mlp"), fan_in=D),
+        "w_down": _d((E, F, D), ("experts", "expert_mlp", "embed"), fan_in=F),
+    }
+    if m.n_shared:
+        moe["shared"] = _mlp_defs(cfg, m.n_shared * F)
+    return {"attn_norm": _norm_defs(cfg), "attn": _attn_defs(cfg),
+            "mlp_norm": _norm_defs(cfg), "moe": moe}
+
+
+def _rec_layer_defs(cfg):
+    r = cfg.rglru
+    D, W = cfg.d_model, (r.lru_width or cfg.d_model)
+    nb = 8
+    rec = {
+        "w_x": _d((D, W), ("embed", "state")),
+        "w_y": _d((D, W), ("embed", "state")),
+        "conv": _d((r.conv_width, W), (None, "state"), init="conv"),
+        "gate_r": _d((nb, W // nb, W // nb), (None, "state", None), fan_in=W // nb),
+        "gate_i": _d((nb, W // nb, W // nb), (None, "state", None), fan_in=W // nb),
+        "lam": _d((W,), ("state",), dtype="float32", init="lam"),
+        "w_out": _d((W, D), ("state", "embed"), fan_in=W),
+    }
+    return {"norm": _norm_defs(cfg), "rglru": rec,
+            "mlp_norm": _norm_defs(cfg), "mlp": _mlp_defs(cfg)}
+
+
+def _ssd_layer_defs(cfg):
+    c = cfg.ssd
+    D = cfg.d_model
+    Din = c.expand * D
+    H = Din // c.head_dim
+    N, cw = c.d_state, c.conv_width
+    ssd = {
+        "w_z": _d((D, Din), ("embed", "state")),
+        "w_x": _d((D, Din), ("embed", "state")),
+        "w_B": _d((D, N), ("embed", None)),
+        "w_C": _d((D, N), ("embed", None)),
+        "w_dt": _d((D, H), ("embed", None)),
+        "conv_x": _d((cw, Din), (None, "state"), init="conv"),
+        "conv_B": _d((cw, N), (None, None), init="conv"),
+        "conv_C": _d((cw, N), (None, None), init="conv"),
+        "dt_bias": _d((H,), (None,), dtype="float32", init="dt_bias"),
+        "A_log": _d((H,), (None,), dtype="float32", init="a_log"),
+        "Dskip": _d((H,), (None,), dtype="float32", init="ones"),
+        "norm_scale": _d((Din,), ("state",), dtype="float32", init="zeros"),
+        "out_proj": _d((Din, D), ("state", "embed"), fan_in=Din),
+    }
+    return {"norm": _norm_defs(cfg), "ssd": ssd}
+
+
+def _cross_layer_defs(cfg):
+    return {"attn_norm": _norm_defs(cfg), "attn": _attn_defs(cfg),
+            "gate": _d((1,), (None,), dtype="float32", init="zeros"),
+            "mlp_norm": _norm_defs(cfg), "mlp": _mlp_defs(cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Whole-model defs
+# ---------------------------------------------------------------------------
+
+def build_param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    D, V = cfg.d_model, cfg.vocab
+    defs: Dict[str, Any] = {}
+    if cfg.continuous_inputs:
+        defs["in_proj"] = {"w": _d((D, D), (None, "embed"))}
+    else:
+        defs["embed"] = {"embedding": _d((V, D), ("vocab", "embed"), fan_in=D)}
+    if cfg.family in ("dense", "audio"):
+        defs["layers"] = _stack(_dense_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        if cfg.moe.first_dense_d_ff:
+            defs["layer0"] = _dense_layer_defs(cfg, cfg.moe.first_dense_d_ff)
+            defs["layers"] = _stack(_moe_layer_defs(cfg), cfg.n_layers - 1)
+        else:
+            defs["layers"] = _stack(_moe_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        pat = len(cfg.rglru.pattern)                   # (rec, rec, attn)
+        n_blocks, n_tail = divmod(cfg.n_layers, pat)
+        block = {"rec1": _rec_layer_defs(cfg), "rec2": _rec_layer_defs(cfg),
+                 "attn": _dense_layer_defs(cfg)}
+        defs["blocks"] = _stack(block, n_blocks, "blocks")
+        if n_tail:
+            defs["tail"] = _stack(_rec_layer_defs(cfg), n_tail, "layers")
+    elif cfg.family == "ssm":
+        defs["layers"] = _stack(_ssd_layer_defs(cfg), cfg.n_layers)
+    elif cfg.family == "vlm":
+        ce = cfg.vlm.cross_every
+        n_blocks = cfg.n_layers // ce
+        block = {"self": _stack(_dense_layer_defs(cfg), ce - 1, "layers"),
+                 "cross": _cross_layer_defs(cfg)}
+        defs["blocks"] = _stack(block, n_blocks, "blocks")
+    else:
+        raise ValueError(cfg.family)
+    defs["final_norm"] = _norm_defs(cfg)
+    if not cfg.tie_embeddings:
+        defs["unembed"] = {"w": _d((V, D), ("vocab", "embed"), fan_in=D)}
+    return defs
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.tree.map(lambda p: p.axes, build_param_defs(cfg),
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_leaf(cfg, rng, p: ParamDef):
+    dtype = p.resolved_dtype(cfg)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":
+        u = jax.random.uniform(rng, p.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if p.init == "dt_bias":
+        u = jax.random.uniform(rng, p.shape, jnp.float32,
+                               math.log(1e-3), math.log(0.1))
+        dt = jnp.exp(u)
+        return jnp.log(jnp.expm1(dt)).astype(dtype)        # softplus^-1
+    if p.init == "lam":
+        a = jax.random.uniform(rng, p.shape, jnp.float32, 0.9, 0.999)
+        val = -jnp.log(a) / 8.0                            # softplus(lam) = -log(a)/c
+        return jnp.log(jnp.expm1(jnp.maximum(val, 1e-8))).astype(dtype)
+    if p.init == "conv":
+        std = 1.0 / math.sqrt(p.shape[0])
+        return (jax.random.normal(rng, p.shape, jnp.float32) * std).astype(dtype)
+    std = 1.0 / math.sqrt(max(p.fan_in, 1))
+    return (jax.random.normal(rng, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ArchConfig, rng):
+    defs = build_param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    rngs = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(cfg, r, p) for r, p in zip(rngs, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+def _chain_k(L: int) -> int:
+    """Segment length for chain (sqrt-L) remat: the divisor of L nearest
+    sqrt(L). Memory: L/k saved carries + k transient recompute carries."""
+    best, target = 1, math.sqrt(L)
+    for k in range(1, L + 1):
+        if L % k == 0 and abs(k - target) < abs(best - target):
+            best = k
+    return best
+
+
+def scan_stack(body, h, stack, remat: str):
+    """Scan `body` over a stacked layer pytree with the remat policy.
+
+    "chain": two-level scan — only the outer segment boundaries are saved
+    (L/k carries instead of L), the inner k layers are recomputed during the
+    backward pass (~+fwd/3 flops). This removes the need to sequence-shard
+    the saved residuals for the >=70B trains (see EXPERIMENTS §Perf).
+    body must return (h, aux_or_None); aux is summed if not None."""
+    if remat.startswith("chain"):
+        L = jax.tree.leaves(stack)[0].shape[0]
+        k = _chain_k(L)
+        seg = jax.tree.map(lambda x: x.reshape(L // k, k, *x.shape[1:]), stack)
+
+        def outer(hh, sp):
+            hh, ys = pscan(body, hh, sp)
+            aux = None if ys is None else jnp.sum(ys)
+            return hh, aux
+
+        h, auxs = pscan(jax.checkpoint(outer), h, seg)
+        return h, (None if auxs is None else auxs)
+    h, ys = pscan(_maybe_remat(body, remat), h, stack)
+    return h, ys
+
+
+def _residual(cfg, h):
+    return constrain(h, "batch", "act_seq", "act_embed")
+
+
+def _dense_layer(cfg, p, h, positions, *, mode, cache=None, kv_len=None,
+                 window=0):
+    h = _residual(cfg, h)
+    a, new_cache = L.attention_block(
+        cfg, p["attn"], L.apply_norm(cfg, h, p["attn_norm"]), positions,
+        mode=mode, layer_cache=cache, kv_len=kv_len, window=window)
+    h = h + a
+    h = h + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, h, p["mlp_norm"]))
+    return h, new_cache
+
+
+def _moe_layer(cfg, p, h, positions, *, mode, cache=None, kv_len=None):
+    h = _residual(cfg, h)
+    a, new_cache = L.attention_block(
+        cfg, p["attn"], L.apply_norm(cfg, h, p["attn_norm"]), positions,
+        mode=mode, layer_cache=cache, kv_len=kv_len)
+    h = h + a
+    y, aux = moe_block(cfg, p["moe"], L.apply_norm(cfg, h, p["mlp_norm"]))
+    return h + y, new_cache, aux
+
+
+def _rec_layer(cfg, p, h, *, mode, state=None, conv=None):
+    h = _residual(cfg, h)
+    y, new_state, new_conv = rglru_block(
+        cfg, p["rglru"], L.apply_norm(cfg, h, p["norm"]),
+        state=state, conv_state=conv, mode=mode)
+    h = h + y
+    h = h + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, h, p["mlp_norm"]))
+    return h, new_state, new_conv
+
+
+def _ssd_layer(cfg, p, h, *, mode, state=None, conv=None):
+    h = _residual(cfg, h)
+    y, new_state, new_conv = ssd_block(
+        cfg, p["ssd"], L.apply_norm(cfg, h, p["norm"]),
+        state=state, conv_state=conv, mode=mode)
+    return h + y, new_state, new_conv
+
+
+def _cross_layer(cfg, p, h, img_kv, *, mode):
+    """VLM cross-attention layer; img_kv = (k, v) from image embeddings."""
+    h = _residual(cfg, h)
+    B, T, _ = h.shape
+    positions = jnp.zeros((B, T), jnp.int32)
+    a, _ = L.attention_block(
+        cfg, p["attn"], L.apply_norm(cfg, h, p["attn_norm"]), positions,
+        mode="train", kv_override=img_kv)
+    h = h + jnp.tanh(p["gate"]).astype(h.dtype) * a
+    h = h + L.mlp_block(cfg, p["mlp"], L.apply_norm(cfg, h, p["mlp_norm"]))
+    return h
+
+
+def _img_kv(cfg, p_attn, img):
+    k = jnp.einsum("bid,dhk->bihk", img, p_attn["wk"])
+    v = jnp.einsum("bid,dhk->bihk", img, p_attn["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p_attn["bk"], v + p_attn["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Backbone: embed -> blocks -> final norm
+# ---------------------------------------------------------------------------
+
+def backbone(cfg: ArchConfig, params, batch, *, mode: str = "train",
+             n_blocks: Optional[int] = None):
+    """Returns (hidden (B,T,D), aux_loss). ``n_blocks`` truncates the stack
+    (Titan coarse-filter features). Streaming modes handled separately."""
+    if cfg.continuous_inputs:
+        h = jnp.einsum("btd,de->bte", batch["frames"], params["in_proj"]["w"])
+        h = h.astype(jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
+    else:
+        h = L.embed(cfg, params["embed"], batch["tokens"])
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    aux_total = jnp.zeros((), jnp.float32)
+    remat = cfg.remat
+
+    take = lambda tree, n: jax.tree.map(lambda x: x[:n], tree)
+
+    if cfg.family in ("dense", "audio"):
+        stack = params["layers"] if n_blocks is None else take(params["layers"], n_blocks)
+
+        def body(h, lp):
+            h, _ = _dense_layer(cfg, lp, h, positions, mode="train")
+            return h, None
+
+        h, _ = scan_stack(body, h, stack, remat)
+
+    elif cfg.family == "moe":
+        used = 0
+        if cfg.moe.first_dense_d_ff:
+            h, _ = _dense_layer(cfg, params["layer0"], h, positions, mode="train")
+            used = 1
+        n = None if n_blocks is None else max(n_blocks - used, 0)
+        stack = params["layers"] if n is None else take(params["layers"], n)
+
+        def body(h, lp):
+            h, _, aux = _moe_layer(cfg, lp, h, positions, mode="train")
+            return h, aux
+
+        if n is None or n > 0:
+            h, auxs = scan_stack(body, h, stack, remat)
+            aux_total = aux_total + jnp.sum(auxs)
+
+    elif cfg.family == "hybrid":
+        window = cfg.rglru.window
+        nb = None if n_blocks is None else n_blocks
+        stack = params["blocks"] if nb is None else take(params["blocks"], nb)
+
+        def body(h, bp):
+            h, _, _ = _rec_layer(cfg, bp["rec1"], h, mode="train")
+            h, _, _ = _rec_layer(cfg, bp["rec2"], h, mode="train")
+            h, _ = _dense_layer(cfg, bp["attn"], h, positions, mode="train",
+                                window=window)
+            return h, None
+
+        h, _ = scan_stack(body, h, stack, remat)
+        if "tail" in params and n_blocks is None:
+            def tbody(h, lp):
+                h, _, _ = _rec_layer(cfg, lp, h, mode="train")
+                return h, None
+            h, _ = pscan(_maybe_remat(tbody, remat), h, params["tail"])
+
+    elif cfg.family == "ssm":
+        stack = params["layers"] if n_blocks is None else take(params["layers"], n_blocks)
+
+        def body(h, lp):
+            h, _, _ = _ssd_layer(cfg, lp, h, mode="train")
+            return h, None
+
+        h, _ = scan_stack(body, h, stack, remat)
+
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"].astype(h.dtype)
+        stack = params["blocks"] if n_blocks is None else take(params["blocks"], n_blocks)
+
+        def body(h, bp):
+            def sbody(h, lp):
+                h2, _ = _dense_layer(cfg, lp, h, positions, mode="train")
+                return h2, None
+            h, _ = pscan(sbody, h, bp["self"])
+            h = _cross_layer(cfg, bp["cross"], h, _img_kv(cfg, bp["cross"]["attn"], img),
+                             mode="train")
+            return h, None
+
+        h, _ = scan_stack(body, h, stack, remat)
+    else:
+        raise ValueError(cfg.family)
+
+    h = L.apply_norm(cfg, h, params["final_norm"])
+    return h, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def unembed_table(cfg, params):
+    return (params["embed"]["embedding"] if cfg.tie_embeddings
+            else params["unembed"]["w"])
+
+
+def chunked_xent(cfg, params, h, labels, *, mask=None, seq_weights=None,
+                 chunk: int = 512):
+    """Memory-bounded CE: scans seq chunks so (B,T,V) logits never materialize.
+
+    Returns (mean_loss, per_seq_loss_sum (B,) fp32, per_seq_token_count (B,)).
+    With ``seq_weights`` the loss is the Titan unbiased estimate
+    ``mean_i w_i * per_seq_mean_loss_i``.
+    """
+    B, T, D = h.shape
+    table = unembed_table(cfg, params)
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nc = T // chunk
+
+    def body(carry, ci):
+        per_seq, per_cnt = carry
+        hc = lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
+        yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
+        logits = jnp.einsum("btd,vd->btv", hc, table,
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        tok_loss = lse - ll                                  # (B,chunk)
+        if mask is not None:
+            mc = lax.dynamic_slice_in_dim(mask, ci * chunk, chunk, axis=1)
+            valid = mc.astype(jnp.float32)
+        else:
+            valid = (yc >= 0).astype(jnp.float32)
+        tok_loss = tok_loss * valid
+        return (per_seq + jnp.sum(tok_loss, axis=1),
+                per_cnt + jnp.sum(valid, axis=1)), None
+
+    init = (jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.float32))
+    # remat: recompute each logits chunk in backward instead of saving the
+    # (B,chunk,V) fp32 slabs (tens of GB at V>=100k)
+    (per_seq, per_cnt), _ = pscan(jax.checkpoint(body), init, jnp.arange(nc))
+    seq_mean = per_seq / jnp.maximum(per_cnt, 1.0)
+    if seq_weights is not None:
+        loss = jnp.mean(seq_mean * seq_weights)
+    else:
+        loss = jnp.sum(per_seq) / jnp.maximum(jnp.sum(per_cnt), 1.0)
+    return loss, per_seq, per_cnt
+
+
+# ---------------------------------------------------------------------------
+# Model facade
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    defs: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.defs = build_param_defs(self.cfg)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, rng):
+        return init_params(self.cfg, rng)
+
+    def abstract_params(self):
+        return jax.tree.map(lambda p: p.sds(self.cfg), self.defs,
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    # -- training -----------------------------------------------------------
+    def loss_fn(self, params, batch):
+        """batch: tokens/frames, labels, (mask), (weights), (image_embeds)."""
+        h, aux = backbone(self.cfg, params, batch, mode="train")
+        weights = batch.get("weights")
+        loss, per_seq, cnt = chunked_xent(
+            self.cfg, params, h, batch["labels"], mask=batch.get("mask"),
+            seq_weights=weights)
+        metrics = {"xent": loss, "aux_loss": aux, "tokens": cnt}
+        return loss + aux, metrics
+
+    # -- features for Titan coarse filter ------------------------------------
+    def features(self, params, batch, n_blocks: int = 1):
+        h, _ = backbone(self.cfg, params, batch, mode="train", n_blocks=n_blocks)
+        return jnp.mean(h.astype(jnp.float32), axis=1)       # (B,D)
+
+    def final_hidden(self, params, batch):
+        h, _ = backbone(self.cfg, params, batch, mode="train")
+        return h
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch):
+        from repro.serve.decode import prefill_fn
+        return prefill_fn(self, params, batch)
+
+    def decode_step(self, params, cache, batch):
+        from repro.serve.decode import decode_fn
+        return decode_fn(self, params, cache, batch)
+
+    # -- specs ----------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, *, with_weights: bool = True):
+        return input_specs(self.cfg, shape, with_weights=with_weights)
+
+    def cache_defs(self, batch: int, seq: int):
+        from repro.serve.cache import cache_defs
+        return cache_defs(self.cfg, batch, seq)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins + logical axes) per shape kind
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, *, with_weights=True):
+    """Returns dict name -> ParamDef (reused as spec holder: shape+dtype+axes)."""
+    B, T = shape.global_batch, shape.seq_len
+    bf = "bfloat16" if cfg.param_dtype == "bfloat16" else "float32"
+    specs: Dict[str, ParamDef] = {}
+    if shape.kind == "train":
+        if cfg.continuous_inputs:
+            specs["frames"] = _d((B, T, cfg.d_model), ("batch", None, None), dtype=bf)
+            specs["mask"] = _d((B, T), ("batch", None), dtype="bool")
+        else:
+            specs["tokens"] = _d((B, T), ("batch", None), dtype="int32")
+        specs["labels"] = _d((B, T), ("batch", None), dtype="int32")
+        specs["domain"] = _d((B,), ("batch",), dtype="int32")
+        if with_weights:
+            specs["weights"] = _d((B,), ("batch",), dtype="float32")
+        if cfg.family == "vlm":
+            specs["image_embeds"] = _d((B, cfg.vlm.n_image_tokens, cfg.d_model),
+                                       ("batch", "img", None), dtype=bf)
+    elif shape.kind == "prefill":
+        if cfg.continuous_inputs:
+            specs["frames"] = _d((B, T, cfg.d_model), ("batch", None, None), dtype=bf)
+        else:
+            specs["tokens"] = _d((B, T), ("batch", None), dtype="int32")
+        if cfg.family == "vlm":
+            specs["image_embeds"] = _d((B, cfg.vlm.n_image_tokens, cfg.d_model),
+                                       ("batch", "img", None), dtype=bf)
+    elif shape.kind == "decode":
+        specs["token"] = _d((B,), ("batch",), dtype="int32")
+        specs["pos"] = _d((B,), ("batch",), dtype="int32")
+    else:
+        raise ValueError(shape.kind)
+    return specs

@@ -1,0 +1,87 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Dispatch avoids the GShard (tokens × experts × capacity) one-hot blow-up:
+tokens are routed by argsort over expert assignment, gathered into a dense
+(experts, capacity, d) block, processed by batched expert matmuls (EP-sharded
+over the "experts" logical axis), and combined back with router gates.
+Capacity overflow drops tokens (standard); an aux load-balancing loss is
+returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(factor * n_tokens * top_k / n_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_block(cfg, p, x):
+    """x: (B,T,D) -> (y, aux_loss). Params:
+    router (D,E); experts: w_gate/w_up (E,D,F), w_down (E,F,D);
+    shared: standard MLP params with F_shared = n_shared * expert_d_ff.
+    """
+    mcfg = cfg.moe
+    B, T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    xf = x.reshape(B * T, D)
+    n = B * T
+    cap = _capacity(n, K, E, mcfg.capacity_factor)
+
+    # ---- router (fp32) ----
+    logits = jnp.einsum("nd,de->ne", xf, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (n,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch-style) ----
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * E * mcfg.aux_loss_weight
+
+    # ---- sort-based dispatch ----
+    flat_expert = expert_ids.reshape(-1)                       # (n*K,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n), K)
+    # position of each (token,k) within its expert queue
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)   # (n*K,E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1
+    keep = pos_in_expert < cap
+    slot = flat_expert * cap + pos_in_expert                   # (n*K,) in [0, E*cap)
+    slot = jnp.where(keep, slot, E * cap)                      # overflow -> trash slot
+
+    gathered = jnp.zeros((E * cap + 1, D), xf.dtype).at[slot].set(xf[flat_token])
+    gathered = gathered[:-1].reshape(E, cap, D)
+    gathered = constrain(gathered, "experts", None, None)
+
+    # ---- expert compute (EP over "experts") ----
+    if cfg.activation in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", gathered, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", gathered, p["w_up"])
+        act = jax.nn.silu(g) if cfg.activation == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("ecd,edf->ecf", gathered, p["w_up"])
+        h = jnp.square(jax.nn.relu(h)) if cfg.activation == "squared_relu" else jax.nn.gelu(h)
+    h = constrain(h, "experts", None, "expert_mlp")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])         # (E,cap,D)
+    out_e = constrain(out_e, "experts", None, None)
+
+    # ---- combine ----
+    out_flat = out_e.reshape(E * cap, D)
+    safe_slot = jnp.minimum(slot, E * cap - 1)
+    per_assign = out_flat[safe_slot] * (flat_gate * keep)[:, None].astype(out_flat.dtype)
+    y = jnp.zeros((n, D), out_flat.dtype).at[flat_token].add(per_assign)
+
+    # ---- shared experts (always-on) ----
+    if mcfg.n_shared:
+        from repro.models.layers import mlp_block
+        y = y + mlp_block(cfg, p["shared"], xf[None]).reshape(n, D)
+
+    return y.reshape(B, T, D).astype(x.dtype), aux

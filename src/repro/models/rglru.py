@@ -1,0 +1,88 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin). [arXiv:2402.19427]
+
+h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t),  a_t = exp(−c·softplus(Λ)·r_t)
+with r_t, i_t block-diagonal-projected gates. Training uses an associative scan
+(log-depth); decode is a single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+
+_C = 8.0  # Griffin's fixed scaling constant
+_N_BLOCKS = 8
+
+
+def _block_diag_proj(x, w):
+    """x: (B,T,W); w: (nb, W/nb, W/nb) block-diagonal projection."""
+    B, T, Wd = x.shape
+    nb = w.shape[0]
+    xb = x.reshape(B, T, nb, Wd // nb)
+    return jnp.einsum("btnw,nwv->btnv", xb, w).reshape(B, T, Wd)
+
+
+def rglru_scan(x, a):
+    """Associative scan of h_t = a_t h_{t-1} + x_t over axis 1 (fp32)."""
+    def combine(l, r):
+        (al, xl), (ar, xr) = l, r
+        return al * ar, xl * ar + xr
+
+    a_out, x_out = lax.associative_scan(combine, (a, x), axis=1)
+    return x_out
+
+
+def rglru_block(cfg, p, x, *, state=None, conv_state=None, mode="train"):
+    """Full recurrent sub-layer: in-proj + conv + RG-LRU + gated out-proj.
+
+    x: (B,T,D). Params: w_x, w_y (D,W), conv (cw, W), gate_i/gate_r
+    (nb, W/nb, W/nb), lam (W,), w_out (W,D).
+    Returns (out, new_state, new_conv_state); state (B,W) fp32.
+    """
+    r = cfg.rglru
+    B, T, D = x.shape
+    W = r.lru_width or cfg.d_model
+    cw = r.conv_width
+
+    gate_branch = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_y"]))
+    xb = jnp.einsum("btd,dw->btw", x, p["w_x"])
+    xb = constrain(xb, "batch", "seq", "state")
+
+    # causal depthwise conv
+    new_conv_state = None
+    if mode == "decode":
+        window = jnp.concatenate([conv_state, xb], axis=1)       # (B,cw,W)
+        new_conv_state = window[:, 1:]
+        xb = jnp.einsum("bcw,cw->bw", window, p["conv"])[:, None]
+    else:
+        pad = jnp.zeros((B, cw - 1, W), xb.dtype)
+        xp = jnp.concatenate([pad, xb], axis=1)
+        xb = sum(xp[:, i:i + T] * p["conv"][i] for i in range(cw))
+        if mode == "prefill":
+            new_conv_state = xp[:, T:T + cw - 1]
+
+    # gates
+    r_t = jax.nn.sigmoid(_block_diag_proj(xb, p["gate_r"]).astype(jnp.float32))
+    i_t = jax.nn.sigmoid(_block_diag_proj(xb, p["gate_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_t  # (B,T,W)
+    a = jnp.exp(log_a)
+    gated_x = (xb.astype(jnp.float32) * i_t) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+
+    if mode == "decode":
+        h = a[:, 0] * state + gated_x[:, 0]                      # (B,W)
+        new_state = h
+        h = h[:, None]
+    else:
+        h = rglru_scan(gated_x, a)                               # (B,T,W)
+        if state is not None:
+            # fold incoming state into every step: h_t += (prod a_1..t) * s0
+            decay = jnp.exp(jnp.cumsum(log_a, axis=1))
+            h = h + decay * state[:, None]
+        new_state = h[:, -1]
+
+    out = h.astype(x.dtype) * gate_branch
+    out = jnp.einsum("btw,wd->btd", out, p["w_out"])
+    return out.astype(x.dtype), new_state, new_conv_state

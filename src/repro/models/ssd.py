@@ -1,0 +1,169 @@
+"""Mamba-2 SSD (state-space duality) block — chunked training form and
+single-step decode recurrence. [arXiv:2405.21060]
+
+Training uses the block decomposition: intra-chunk (quadratic within a chunk,
+attention-like) + inter-chunk state recurrence (scan over chunks). The x/B/C/dt
+projections are separate parameters so each output dim shards cleanly
+(x -> "state" over the model axis; B/C/dt are small and replicated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.flags import pscan
+from repro.dist.sharding import constrain
+
+
+def _segsum(logA):
+    """logA: (..., c) -> segment-sum matrix (..., c, c): sum_{k=j+1..i} logA_k."""
+    c = logA.shape[-1]
+    cs = jnp.cumsum(logA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_scan(xh, dt, A, Bmat, Cmat, chunk: int, init_state=None,
+             compute_dtype=jnp.float32):
+    """Chunked SSD. xh: (B,T,H,P); dt: (B,T,H) (post-softplus); A: (H,) < 0;
+    Bmat/Cmat: (B,T,N) (single group, broadcast over heads).
+    Returns (y (B,T,H,P) fp32, final_state (B,H,P,N) fp32).
+
+    compute_dtype=bf16 casts the chunk-local einsum operands (the L decay
+    matrix, scores, inputs) to bf16 with fp32 accumulation — the log-space
+    cumulative sums and the inter-chunk state recurrence stay fp32. Halves
+    the dominant HBM traffic of the (B,nc,H,c,c) tensors (§Perf).
+    """
+    Bb, T, H, P = xh.shape
+    N = Bmat.shape[-1]
+    c = min(chunk, T)
+    if T % c:  # ragged tail: dt=0 padding is an exact identity step
+        pad = c - T % c
+        z = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        xh, dt, Bmat, Cmat = z(xh), z(dt), z(Bmat), z(Cmat)
+        y, final = ssd_scan(xh, dt, A, Bmat, Cmat, chunk,
+                            init_state=init_state,
+                            compute_dtype=compute_dtype)
+        return y[:, :T], final
+    nc = T // c
+    cdt, f32 = compute_dtype, jnp.float32
+
+    logA = (A[None, None, :] * dt).astype(f32)                   # (B,T,H), <= 0
+    xeff = (xh * dt[..., None]).astype(f32)
+
+    r = lambda z: z.reshape(Bb, nc, c, *z.shape[2:])
+    logA_c, x_c = r(logA), r(xeff.astype(cdt))
+    B_c, C_c = r(Bmat.astype(cdt)), r(Cmat.astype(cdt))
+
+    # ---- intra-chunk ----
+    L = jnp.exp(_segsum(jnp.transpose(logA_c, (0, 1, 3, 2)))).astype(cdt)
+    scores = jnp.einsum("bzin,bzjn->bzij", C_c, B_c,
+                        preferred_element_type=cdt)              # (B,nc,c,c)
+    y_intra = jnp.einsum("bzij,bzhij,bzjhp->bzihp", scores, L, x_c,
+                         preferred_element_type=f32)
+
+    # ---- chunk-final states ----
+    logA_sum = jnp.sum(logA_c, axis=2)                           # (B,nc,H)
+    cum = jnp.cumsum(logA_c, axis=2)                             # (B,nc,c,H)
+    decay_to_end = jnp.exp(logA_sum[:, :, None, :] - cum).astype(cdt)
+    states = jnp.einsum("bzjh,bzjn,bzjhp->bzhpn", decay_to_end, B_c, x_c,
+                        preferred_element_type=f32)
+    states = constrain(states, "batch", None, "state", None, None)
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(logA_sum)                              # (B,nc,H)
+
+    def step(s, inp):
+        st, dec = inp
+        return s * dec[:, :, None, None] + st, s
+
+    s0 = (jnp.zeros((Bb, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = pscan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (B,nc,H,P,N)
+    prev_states = constrain(prev_states, "batch", None, "state", None, None)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cum).astype(cdt)                  # (B,nc,c,H)
+    y_inter = jnp.einsum("bzin,bzih,bzhpn->bzihp",
+                         C_c, decay_from_start, prev_states.astype(cdt),
+                         preferred_element_type=f32)
+
+    y = (y_intra + y_inter).reshape(Bb, T, H, P)
+    return y, final
+
+
+def _causal_conv(x, w, T):
+    """Depthwise causal conv. x: (B,T,C); w: (cw,C)."""
+    cw = w.shape[0]
+    pad = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + T] * w[i] for i in range(cw))
+    return out, xp[:, T:T + cw - 1]                              # (tail = last cw-1 raw)
+
+
+def ssd_block(cfg, p, x, *, state=None, conv_state=None, mode="train"):
+    """Full Mamba-2 block. x: (B,T,D). Returns (out, new_state, new_conv_state).
+
+    Params: w_z, w_x (D,Din); w_B, w_C (D,N); w_dt (D,H); conv_x (cw,Din);
+    conv_B, conv_C (cw,N); dt_bias (H,); A_log (H,); Dskip (H,);
+    norm_scale (Din,); out_proj (Din,D).
+    conv_state: dict(x=(B,cw-1,Din), B=(B,cw-1,N), C=(B,cw-1,N)).
+    """
+    c = cfg.ssd
+    B, T, D = x.shape
+    Din = c.expand * cfg.d_model
+    H = Din // c.head_dim
+    N, P, W = c.d_state, c.head_dim, c.conv_width
+
+    z = jnp.einsum("btd,de->bte", x, p["w_z"])
+    xr = jnp.einsum("btd,de->bte", x, p["w_x"])
+    xr = constrain(xr, "batch", "seq", "state")
+    Br = jnp.einsum("btd,dn->btn", x, p["w_B"])
+    Cr = jnp.einsum("btd,dn->btn", x, p["w_C"])
+    dt = jnp.einsum("btd,dh->bth", x, p["w_dt"])
+
+    new_conv_state = None
+    if mode == "decode":
+        wx = jnp.concatenate([conv_state["x"], xr], axis=1)      # (B,cw,Din)
+        wB = jnp.concatenate([conv_state["B"], Br], axis=1)
+        wC = jnp.concatenate([conv_state["C"], Cr], axis=1)
+        new_conv_state = {"x": wx[:, 1:], "B": wB[:, 1:], "C": wC[:, 1:]}
+        xh = jnp.einsum("bwe,we->be", wx, p["conv_x"])[:, None]
+        Bmat = jnp.einsum("bwe,we->be", wB, p["conv_B"])[:, None]
+        Cmat = jnp.einsum("bwe,we->be", wC, p["conv_C"])[:, None]
+    else:
+        xh, tx = _causal_conv(xr, p["conv_x"], T)
+        Bmat, tB = _causal_conv(Br, p["conv_B"], T)
+        Cmat, tC = _causal_conv(Cr, p["conv_C"], T)
+        if mode == "prefill":
+            new_conv_state = {"x": tx, "B": tB, "C": tC}
+
+    xh, Bmat, Cmat = jax.nn.silu(xh), jax.nn.silu(Bmat), jax.nn.silu(Cmat)
+    xh = xh.reshape(B, -1, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+
+    if mode == "decode":
+        a = jnp.exp(A[None, :] * dt[:, 0])                       # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", Bmat[:, 0].astype(jnp.float32),
+                         (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+        new_state = state.astype(jnp.float32) * a[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), new_state)
+        y = y[:, None] + xh.astype(jnp.float32) * p["Dskip"][None, None, :, None]
+    else:
+        cdt = jnp.bfloat16 if c.compute_dtype == "bfloat16" else jnp.float32
+        y, new_state = ssd_scan(xh, dt, A, Bmat, Cmat, c.chunk,
+                                init_state=state, compute_dtype=cdt)
+        y = y + xh.astype(jnp.float32) * p["Dskip"][None, None, :, None]
+
+    y = y.reshape(B, -1, Din)
+    # gated RMSNorm (norm-before-gate)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * lax.rsqrt(var + 1e-6) * (1.0 + p["norm_scale"].astype(jnp.float32))
+    out = jnp.einsum("bte,ed->btd", yf.astype(x.dtype), p["out_proj"])
+    return out, new_state, new_conv_state

@@ -1,0 +1,20 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum((s + 1.0) / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+
+
+def step_decay(step, *, base_lr: float, decay: float = 0.95, every: int = 100):
+    """The paper's schedule: lr * 0.95 every 100 rounds."""
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    return base_lr * decay ** jnp.floor(s / every)

@@ -1,0 +1,98 @@
+"""Serving caches per architecture family.
+
+``cache_defs(cfg, batch, seq)`` returns a pytree of ParamDef — used both to
+allocate real caches (``init_cache``) and as ShapeDtypeStruct stand-ins for
+the dry-run. KV caches are sharded batch->"data" and sequence->"model"
+(flash-decoding split-K; see DESIGN.md), recurrent states width->"model".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import ParamDef, _d
+
+
+def _kv_defs(cfg, B, S, n_stack=None, stack_axis="layers", extra=()):
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (B, S, KVH, hd)
+    axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    if n_stack is not None:
+        shape = (n_stack,) + shape
+        axes = (stack_axis,) + axes
+    for n, a in reversed(list(extra)):   # extra dims end up outermost
+        shape = (n,) + shape
+        axes = (a,) + axes
+    return {"k": _d(shape, axes), "v": _d(shape, axes)}
+
+
+def cache_defs(cfg: ArchConfig, B: int, S: int):
+    f = cfg.family
+    if f in ("dense",):
+        return {"kv": _kv_defs(cfg, B, S, cfg.n_layers)}
+    if f == "moe":
+        out = {}
+        n = cfg.n_layers
+        if cfg.moe.first_dense_d_ff:
+            out["layer0_kv"] = _kv_defs(cfg, B, S)
+            n -= 1
+        out["kv"] = _kv_defs(cfg, B, S, n)
+        return out
+    if f == "hybrid":
+        r = cfg.rglru
+        W = r.lru_width or cfg.d_model
+        nb = cfg.n_layers // len(r.pattern)
+        n_tail = cfg.n_layers - nb * len(r.pattern)
+        win = min(r.window, S)
+
+        def rec_cache(stack, axis):
+            return {"state": _d((stack, B, W), (axis, "batch", "state"),
+                                dtype="float32"),
+                    "conv": _d((stack, B, r.conv_width - 1, W),
+                               (axis, "batch", None, "state"))}
+
+        out = {"blocks": {"rec1": rec_cache(nb, "blocks"),
+                          "rec2": rec_cache(nb, "blocks"),
+                          "attn": _kv_defs(cfg, B, win, nb, "blocks")}}
+        if n_tail:
+            out["tail"] = rec_cache(n_tail, "layers")
+        return out
+    if f == "ssm":
+        c = cfg.ssd
+        Din = c.expand * cfg.d_model
+        H = Din // c.head_dim
+        L = cfg.n_layers
+        return {"layers": {
+            "state": _d((L, B, H, c.head_dim, c.d_state),
+                        ("layers", "batch", "state", None, None), dtype="float32"),
+            "conv": {
+                "x": _d((L, B, c.conv_width - 1, Din),
+                        ("layers", "batch", None, "state")),
+                "B": _d((L, B, c.conv_width - 1, c.d_state),
+                        ("layers", "batch", None, None)),
+                "C": _d((L, B, c.conv_width - 1, c.d_state),
+                        ("layers", "batch", None, None)),
+            }}}
+    if f == "vlm":
+        ce = cfg.vlm.cross_every
+        nb = cfg.n_layers // ce
+        I = cfg.vlm.n_image_tokens
+        KVH, hd = cfg.n_kv_heads, cfg.head_dim
+        return {"blocks": {
+            "self": _kv_defs(cfg, B, S, ce - 1, "layers",
+                             extra=[(nb, "blocks")]),
+            "cross": {
+                "k": _d((nb, B, I, KVH, hd),
+                        ("blocks", "batch", "img", "kv_heads", "head_dim")),
+                "v": _d((nb, B, I, KVH, hd),
+                        ("blocks", "batch", "img", "kv_heads", "head_dim")),
+            }}}
+    raise ValueError(f"no decode cache for family {f!r}")
+
+
+def init_cache(cfg: ArchConfig, B: int, S: int):
+    defs = cache_defs(cfg, B, S)
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, p.resolved_dtype(cfg)), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,0 +1,200 @@
+"""Prefill and decode steps per architecture family.
+
+``prefill_fn(model, params, batch)`` -> (last_logits (B,V) fp32, cache)
+``decode_fn(model, params, cache, batch)`` -> (logits (B,V) fp32, new_cache)
+batch for decode: {"token": (B,), "pos": (B,)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.flags import pscan
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models.model import (_dense_layer, _moe_layer, _rec_layer,
+                                _ssd_layer, _cross_layer, _img_kv,
+                                unembed_table)
+
+
+def _logits(cfg, params, h_last):
+    """h_last: (B,D) -> (B,V) fp32."""
+    table = unembed_table(cfg, params)
+    out = jnp.einsum("bd,vd->bv", h_last, table,
+                     preferred_element_type=jnp.float32)
+    return constrain(out, "batch", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill_fn(model, params, batch):
+    cfg = model.cfg
+    if cfg.continuous_inputs:
+        h = jnp.einsum("btd,de->bte", batch["frames"], params["in_proj"]["w"])
+        h = h.astype(jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
+    else:
+        h = L.embed(cfg, params["embed"], batch["tokens"])
+    B, T = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    f = cfg.family
+
+    if f in ("dense", "audio"):
+        def body(h, lp):
+            h, c = _dense_layer(cfg, lp, h, positions, mode="prefill")
+            return h, c
+        h, caches = pscan(body, h, params["layers"])
+        cache = None if cfg.is_encoder else {"kv": caches}
+
+    elif f == "moe":
+        cache = {}
+        if cfg.moe.first_dense_d_ff:
+            h, c0 = _dense_layer(cfg, params["layer0"], h, positions,
+                                 mode="prefill")
+            cache["layer0_kv"] = c0
+
+        def body(h, lp):
+            h, c, _aux = _moe_layer(cfg, lp, h, positions, mode="prefill")
+            return h, c
+        h, caches = pscan(body, h, params["layers"])
+        cache["kv"] = caches
+
+    elif f == "hybrid":
+        win = min(cfg.rglru.window, T)
+
+        def body(h, bp):
+            h, s1, c1 = _rec_layer(cfg, bp["rec1"], h, mode="prefill")
+            h, s2, c2 = _rec_layer(cfg, bp["rec2"], h, mode="prefill")
+            h, kv = _dense_layer(cfg, bp["attn"], h, positions, mode="prefill",
+                                 window=win)
+            return h, {"rec1": {"state": s1, "conv": c1},
+                       "rec2": {"state": s2, "conv": c2}, "attn": kv}
+        h, blocks = pscan(body, h, params["blocks"])
+        cache = {"blocks": blocks}
+        if "tail" in params:
+            def tbody(h, lp):
+                h, s, c = _rec_layer(cfg, lp, h, mode="prefill")
+                return h, {"state": s, "conv": c}
+            h, tail = pscan(tbody, h, params["tail"])
+            cache["tail"] = tail
+
+    elif f == "ssm":
+        def body(h, lp):
+            h, s, c = _ssd_layer(cfg, lp, h, mode="prefill")
+            return h, {"state": s, "conv": c}
+        h, caches = pscan(body, h, params["layers"])
+        cache = {"layers": caches}
+
+    elif f == "vlm":
+        img = batch["image_embeds"].astype(h.dtype)
+
+        def body(h, bp):
+            def sbody(h, lp):
+                h2, c = _dense_layer(cfg, lp, h, positions, mode="prefill")
+                return h2, c
+            h, self_kv = pscan(sbody, h, bp["self"])
+            ik, iv = _img_kv(cfg, bp["cross"]["attn"], img)
+            h = _cross_layer(cfg, bp["cross"], h, (ik, iv), mode="prefill")
+            return h, {"self": self_kv, "cross": {"k": ik, "v": iv}}
+        h, blocks = pscan(body, h, params["blocks"])
+        cache = {"blocks": blocks}
+    else:
+        raise ValueError(f)
+
+    h = L.apply_norm(cfg, h, params["final_norm"])
+    return _logits(cfg, params, h[:, -1]), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_fn(model, params, cache, batch):
+    cfg = model.cfg
+    token, pos = batch["token"], batch["pos"]
+    h = L.embed(cfg, params["embed"], token[:, None])       # (B,1,D)
+    positions = pos[:, None]
+    f = cfg.family
+
+    if f == "dense":
+        def body(h, xs):
+            lp, lc = xs
+            h, c = _dense_layer(cfg, lp, h, positions, mode="decode",
+                                cache=lc, kv_len=pos)
+            return h, c
+        h, kv = pscan(body, h, (params["layers"], cache["kv"]))
+        new_cache = {"kv": kv}
+
+    elif f == "moe":
+        new_cache = {}
+        if cfg.moe.first_dense_d_ff:
+            h, c0 = _dense_layer(cfg, params["layer0"], h, positions,
+                                 mode="decode", cache=cache["layer0_kv"],
+                                 kv_len=pos)
+            new_cache["layer0_kv"] = c0
+
+        def body(h, xs):
+            lp, lc = xs
+            h, c, _aux = _moe_layer(cfg, lp, h, positions, mode="decode",
+                                    cache=lc, kv_len=pos)
+            return h, c
+        h, kv = pscan(body, h, (params["layers"], cache["kv"]))
+        new_cache["kv"] = kv
+
+    elif f == "hybrid":
+        win = cache["blocks"]["attn"]["k"].shape[2]
+
+        def body(h, xs):
+            bp, bc = xs
+            h, s1, c1 = _rec_layer(cfg, bp["rec1"], h, mode="decode",
+                                   state=bc["rec1"]["state"],
+                                   conv=bc["rec1"]["conv"])
+            h, s2, c2 = _rec_layer(cfg, bp["rec2"], h, mode="decode",
+                                   state=bc["rec2"]["state"],
+                                   conv=bc["rec2"]["conv"])
+            h, kv = _dense_layer(cfg, bp["attn"], h, positions, mode="decode",
+                                 cache=bc["attn"], kv_len=pos, window=win)
+            return h, {"rec1": {"state": s1, "conv": c1},
+                       "rec2": {"state": s2, "conv": c2}, "attn": kv}
+        h, blocks = pscan(body, h, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": blocks}
+        if "tail" in params:
+            def tbody(h, xs):
+                lp, lc = xs
+                h, s, c = _rec_layer(cfg, lp, h, mode="decode",
+                                     state=lc["state"], conv=lc["conv"])
+                return h, {"state": s, "conv": c}
+            h, tail = pscan(tbody, h, (params["tail"], cache["tail"]))
+            new_cache["tail"] = tail
+
+    elif f == "ssm":
+        def body(h, xs):
+            lp, lc = xs
+            h, s, c = _ssd_layer(cfg, lp, h, mode="decode",
+                                 state=lc["state"], conv=lc["conv"])
+            return h, {"state": s, "conv": c}
+        h, caches = pscan(body, h, (params["layers"], cache["layers"]))
+        new_cache = {"layers": caches}
+
+    elif f == "vlm":
+        def body(h, xs):
+            bp, bc = xs
+
+            def sbody(h, xs2):
+                lp, lc = xs2
+                h2, c = _dense_layer(cfg, lp, h, positions, mode="decode",
+                                     cache=lc, kv_len=pos)
+                return h2, c
+            h, self_kv = pscan(sbody, h, (bp["self"], bc["self"]))
+            ik, iv = bc["cross"]["k"], bc["cross"]["v"]
+            h = _cross_layer(cfg, bp["cross"], h, (ik, iv), mode="decode")
+            return h, {"self": self_kv, "cross": bc["cross"]}
+        h, blocks = pscan(body, h, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": blocks}
+    else:
+        raise ValueError(f"family {f!r} has no decode step")
+
+    h = L.apply_norm(cfg, h, params["final_norm"])
+    return _logits(cfg, params, h[:, 0]), new_cache

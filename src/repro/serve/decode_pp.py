@@ -1,0 +1,226 @@
+"""Pipeline-parallel weight-stationary decode (dense family).
+
+The baseline decode shards params 2-D (FSDP x TP): with batch on the "data"
+axis, every matmul's d-contraction crosses the batch axis, so GSPMD must
+all-gather ~params/16 bytes of weights per chip per layer per step —
+~50 GB/chip/step for llama3-405b, making decode collective-bound (§Perf).
+
+This module instead repurposes the "data" axis as PIPELINE STAGES:
+  - layer stack split into `stages` groups, stage dim sharded over "data";
+  - within a stage, tensor parallelism over "model" (heads/ffn), so the only
+    per-layer collectives are activation-sized psums/gathers (~MBs);
+  - the KV cache keeps sequence sharded over "model" (flash-decode split-K);
+  - the decode batch is split into `n_micro` microbatches that rotate through
+    the stages via a roll (lowered to collective-permute), GPipe-style:
+    ticks = stages + n_micro - 1.
+
+Weights never move: transport per step drops from ~50 GB to ~10s of MB per
+chip. The price is re-reading stage weights from HBM once per microbatch —
+decode becomes memory-bound (the unavoidable term). Padding: n_layers is
+padded up to stages*per_stage with zero-initialized layers, which are exact
+identities for pre-norm residual blocks (zero out-projections).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.dist.sharding import constrain
+from repro.flags import pscan
+from repro.models import layers as L
+from repro.models.model import ParamDef, _d, _dense_layer_defs, _stack, \
+    unembed_table
+from repro.serve.cache import _kv_defs
+
+
+# ---------------------------------------------------------------------------
+# Defs
+# ---------------------------------------------------------------------------
+
+def pp_param_defs(cfg, stages: int):
+    """Dense model defs with the layer stack reshaped (stages, per_stage, ...)
+    and stage-dim sharded over "data" (logical axis "stage")."""
+    assert cfg.family == "dense"
+    per_stage = -(-cfg.n_layers // stages)          # ceil
+    layer = _dense_layer_defs(cfg)
+    stacked = _stack(_stack(layer, per_stage), stages, "stage")
+    D, V = cfg.d_model, cfg.vocab
+    return {
+        "embed": {"embedding": _d((V, D), ("vocab", None), fan_in=D)},
+        "layers": stacked,
+        "final_norm": {"scale": _d((D,), (None,), dtype="float32",
+                                   init="zeros")},
+        "unembed": {"w": _d((V, D), ("vocab", None), fan_in=D)},
+    }
+
+
+def pp_cache_defs(cfg, batch: int, seq: int, stages: int, n_micro: int):
+    per_stage = -(-cfg.n_layers // stages)
+    mb = batch // n_micro
+    KVH, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (stages, per_stage, n_micro, mb, seq, KVH, hd)
+    axes = ("stage", None, None, None, "cache_seq", "kv_heads", "head_dim")
+    return {"kv": {"k": _d(shape, axes), "v": _d(shape, axes)}}
+
+
+def reshape_params_for_pp(cfg, params, stages: int):
+    """(L, ...) stacks -> zero-padded (stages, per_stage, ...)."""
+    per_stage = -(-cfg.n_layers // stages)
+    pad = stages * per_stage - cfg.n_layers
+
+    def f(x):
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+        return x.reshape(stages, per_stage, *x.shape[1:])
+
+    out = dict(params)
+    out["layers"] = jax.tree.map(f, params["layers"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step
+# ---------------------------------------------------------------------------
+
+def _stage_apply(cfg, stage_params, h, stage_cache, pos, micro_valid):
+    """Run one stage's per_stage layers for one microbatch.
+    h: (mb,1,D); stage_cache k/v: (per_stage, mb, S, KVH, hd)."""
+
+    def body(h, xs):
+        lp, lc = xs
+        hn = L.apply_norm(cfg, h, lp["attn_norm"])
+        a, new_kv = L.attention_block(cfg, lp["attn"], hn, pos[:, None],
+                                      mode="decode", layer_cache=lc,
+                                      kv_len=pos)
+        h = h + a
+        h = h + L.mlp_block(cfg, lp["mlp"],
+                            L.apply_norm(cfg, h, lp["mlp_norm"]))
+        return h, new_kv
+
+    h_out, new_kv = pscan(body, h, (stage_params,
+                                    {"k": stage_cache["k"],
+                                     "v": stage_cache["v"]}))
+    # invalid (bubble) microbatches must not mutate the cache
+    keep = micro_valid.astype(h_out.dtype)
+    new_kv = jax.tree.map(
+        lambda new, old: jnp.where(micro_valid, new, old),
+        new_kv, {"k": stage_cache["k"], "v": stage_cache["v"]})
+    h_out = h_out * keep + h * (1 - keep)
+    return h_out, new_kv
+
+
+def _make_cache_ops(mesh, n_micro: int):
+    """Stage-local micro-index select/update on the (stages, per_stage,
+    n_micro, mb, S, KVH, hd) cache.
+
+    GSPMD cannot prove that a fancy-index gather along the stage dim is
+    aligned with the stage sharding and lowers it to a full cross-stage
+    all-reduce of the cache slice (~17 GB/device/step measured on
+    llama3-405b). A narrow shard_map makes the stage-locality explicit:
+    each device dynamic-slices its own stage block — zero communication.
+    """
+    if mesh is None:
+        def sel(kc, midx):
+            si = jnp.arange(kc.shape[0])[:, None]
+            li = jnp.arange(kc.shape[1])[None, :]
+            return kc[si, li, midx[:, None]]
+
+        def upd(kc, new, midx):
+            si = jnp.arange(kc.shape[0])[:, None]
+            li = jnp.arange(kc.shape[1])[None, :]
+            return kc.at[si, li, midx[:, None]].set(new)
+        return sel, upd
+
+    from jax.sharding import PartitionSpec as P
+    try:
+        from jax import shard_map as _shard_map
+        shard_map = lambda f, **kw: _shard_map(f, **kw)
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as _sm
+        shard_map = lambda f, **kw: _sm(f, **kw)
+    cspec = P("data", None, None, None, "model", None, None)
+    ospec = P("data", None, None, "model", None, None)
+    ispec = P("data")
+
+    def _sel(kc_loc, mi_loc):
+        return lax.dynamic_index_in_dim(kc_loc, mi_loc[0], axis=2,
+                                        keepdims=False)
+
+    def _upd(kc_loc, new_loc, mi_loc):
+        return lax.dynamic_update_slice_in_dim(
+            kc_loc, new_loc[:, :, None], mi_loc[0], axis=2)
+
+    sel = shard_map(_sel, mesh=mesh, in_specs=(cspec, ispec), out_specs=ospec)
+    upd = shard_map(_upd, mesh=mesh, in_specs=(cspec, ospec, ispec),
+                    out_specs=cspec)
+    return sel, upd
+
+
+def decode_pp_fn(cfg, params, cache, batch, *, stages: int, n_micro: int,
+                 mesh=None):
+    """Pipeline-parallel decode step. batch: token (B,), pos (B,).
+    Returns (logits (B,V) fp32, new_cache)."""
+    token, pos = batch["token"], batch["pos"]
+    B = token.shape[0]
+    mb = B // n_micro
+    D, V = cfg.d_model, cfg.vocab
+
+    h_in = L.embed(cfg, params["embed"], token[:, None])       # (B,1,D)
+    h_in = h_in.reshape(n_micro, mb, 1, D)
+    pos_m = pos.reshape(n_micro, mb)
+
+    ticks = stages + n_micro - 1
+    kc, vc = cache["kv"]["k"], cache["kv"]["v"]
+    cache_sel, cache_upd = _make_cache_ops(mesh, n_micro)
+
+    # per-stage rolling buffers of (h, pos)
+    buf_h = jnp.zeros((stages, mb, 1, D), h_in.dtype)
+    buf_p = jnp.zeros((stages, mb), jnp.int32)
+    out_h = jnp.zeros((n_micro, mb, 1, D), h_in.dtype)
+
+    stage_ids = jnp.arange(stages)
+
+    def tick(carry, t):
+        buf_h, buf_p, kc, vc, out_h = carry
+        # feed stage 0 with microbatch t (if any)
+        feed = jnp.clip(t, 0, n_micro - 1)
+        buf_h = buf_h.at[0].set(jnp.where(t < n_micro, h_in[feed], buf_h[0]))
+        buf_p = buf_p.at[0].set(jnp.where(t < n_micro, pos_m[feed], buf_p[0]))
+
+        micro_idx = t - stage_ids                                # (stages,)
+        valid = (micro_idx >= 0) & (micro_idx < n_micro)
+        midx = jnp.clip(micro_idx, 0, n_micro - 1)
+
+        # stage-local gather of each stage's current microbatch cache slice
+        kc_t, vc_t = cache_sel(kc, midx), cache_sel(vc, midx)
+
+        h2, new_kv = jax.vmap(
+            lambda sp, h, k, v, p, ok: _stage_apply(
+                cfg, sp, h, {"k": k, "v": v}, p, ok)
+        )(params["layers"], buf_h, kc_t, vc_t, buf_p, valid)
+
+        # stage-local scatter back (invalid stages already carry old slices)
+        kc = cache_upd(kc, new_kv["k"], midx)
+        vc = cache_upd(vc, new_kv["v"], midx)
+
+        # the last stage emits a finished microbatch
+        done = t - (stages - 1)
+        out_h = jnp.where(
+            (done >= 0) & (done < n_micro),
+            out_h.at[jnp.clip(done, 0, n_micro - 1)].set(h2[-1]), out_h)
+
+        # rotate: stage s feeds stage s+1 (collective-permute over "data")
+        buf_h = jnp.roll(h2, 1, axis=0)
+        buf_p = jnp.roll(buf_p, 1, axis=0)
+        return (buf_h, buf_p, kc, vc, out_h), None
+
+    (buf_h, buf_p, kc, vc, out_h), _ = pscan(
+        tick, (buf_h, buf_p, kc, vc, out_h), jnp.arange(ticks))
+
+    h = out_h.reshape(B, 1, D)
+    h = L.apply_norm(cfg, h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h[:, 0], unembed_table(cfg, params),
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, "batch", "vocab"), {"kv": {"k": kc, "v": vc}}

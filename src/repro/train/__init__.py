@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, init_train_state  # noqa: F401
+from repro.train.step import make_train_step  # noqa: F401

@@ -1,0 +1,36 @@
+"""TrainState pytree + abstract/sharded construction."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState, adamw_init
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    step: jnp.ndarray
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(model, rng, *, opt_state_dtype: str = None) -> TrainState:
+    params = model.init(rng)
+    dt = opt_state_dtype or model.cfg.opt_state_dtype
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=adamw_init(params, state_dtype=dt))
+
+
+def abstract_train_state(model) -> TrainState:
+    """ShapeDtypeStruct skeleton (dry-run: no allocation)."""
+    params = model.abstract_params()
+    dt = jnp.dtype(model.cfg.opt_state_dtype)
+    mv = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, dt), params)
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), params=params,
+        opt=AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                       m=mv, v=jax.tree.map(lambda x: x, mv)))

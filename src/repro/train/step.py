@@ -1,0 +1,93 @@
+"""Train step builder: microbatched gradient accumulation (lax.scan), LR
+schedule, AdamW update, optional gradient compression (QSGD-style int8
+quantize-dequantize on the DP all-reduce path — see dist/collectives.py)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, TrainConfig
+from repro.dist.collectives import quantize_dequantize_int8
+from repro.dist.sharding import constrain
+from repro.optim.adamw import adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.train.state import TrainState
+
+
+def _split_micro(batch, n_micro: int):
+    """(B, ...) -> (n_micro, B/n_micro, ...) keeping the per-shard batch rows
+    contiguous (reshape to (B/n, n) then moveaxis) so the data-axis sharding
+    survives without an all-to-all."""
+    def f(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        y = x.reshape(b // n_micro, n_micro, *x.shape[1:])
+        return jnp.moveaxis(y, 1, 0)
+    return jax.tree.map(f, batch)
+
+
+def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
+                    grad_compress: Optional[str] = None,
+                    constrain_grads: bool = True):
+    """Returns train_step(state, batch) -> (state', metrics)."""
+    cfg: ArchConfig = model.cfg
+    acc_dtype = jnp.dtype(cfg.opt_state_dtype)
+    grad_compress = grad_compress or tcfg.grad_compression
+
+    def _constrain_grads(grads):
+        # pin gradients to the parameter sharding so the cross-data reduction
+        # lowers to reduce-scatter (not a full all-reduce)
+        if not constrain_grads:
+            return grads
+        return jax.tree.map(
+            lambda g, d: constrain(g, *d.axes), grads, model.defs,
+            is_leaf=lambda x: hasattr(x, "axes"))
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss_fn(params, mb)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        if n_micro == 1:
+            (loss, mets), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def body(acc, mb):
+                mb = jax.tree.map(lambda x: constrain(x, "batch"), mb)
+                (l, _m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                g = _constrain_grads(g)
+                acc_g = jax.tree.map(
+                    lambda a, gg: a + gg.astype(acc_dtype), acc[0], g)
+                return (acc_g, acc[1] + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                 state.params)
+            (grads, loss_sum), _ = lax.scan(body, (zeros, jnp.zeros((), jnp.float32)),
+                                            micro)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+            mets = {}
+
+        if grad_compress == "int8":
+            grads = jax.tree.map(quantize_dequantize_int8, grads)
+
+        lr = warmup_cosine(state.step, peak_lr=tcfg.lr,
+                           warmup_steps=tcfg.warmup_steps,
+                           total_steps=tcfg.total_steps)
+        new_params, new_opt, opt_m = adamw_update(
+            grads, state.opt, state.params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        metrics = {"loss": loss, "lr": lr, **opt_m}
+        if isinstance(mets, dict):
+            metrics.update({k: v for k, v in mets.items()
+                            if jnp.ndim(v) == 0})
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return train_step

@@ -1,0 +1,38 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run's 512 placeholder
+# devices are set only inside launch/dryrun.py subprocesses).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_lm_batch(cfg, rng_np, B, T, n_domains=None):
+    """Synthetic batch for any arch family."""
+    import jax.numpy as jnp
+    C = n_domains or cfg.n_domains
+    batch = {}
+    if cfg.continuous_inputs:
+        batch["frames"] = jnp.asarray(
+            rng_np.randn(B, T, cfg.d_model).astype(np.float32)).astype(jnp.bfloat16)
+        batch["mask"] = jnp.ones((B, T), bool)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng_np.randint(0, cfg.vocab, (B, T)).astype(np.int32))
+    batch["labels"] = jnp.asarray(
+        rng_np.randint(0, cfg.vocab, (B, T)).astype(np.int32))
+    batch["domain"] = jnp.asarray(rng_np.randint(0, C, (B,)).astype(np.int32))
+    batch["weights"] = jnp.ones((B,), np.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng_np.randn(B, cfg.vlm.n_image_tokens, cfg.d_model)
+            .astype(np.float32)).astype(jnp.bfloat16)
+    return batch

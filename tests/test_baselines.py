@@ -1,0 +1,62 @@
+"""Baseline selection strategies (paper §4.1 comparators)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import STRATEGIES, camel, titan_cis
+
+
+def _stats(seed=0, N=50, C=4, D=6):
+    rs = np.random.RandomState(seed)
+    return {
+        "loss": jnp.asarray(rs.rand(N).astype(np.float32)),
+        "gnorm": jnp.asarray(rs.rand(N).astype(np.float32) + 0.1),
+        "entropy": jnp.asarray(rs.rand(N).astype(np.float32)),
+        "sketch": jnp.asarray(rs.randn(N, 8).astype(np.float32)),
+        "features": jnp.asarray(rs.randn(N, D).astype(np.float32)),
+        "domain": jnp.asarray(rs.randint(0, C, N).astype(np.int32)),
+    }, C
+
+
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_strategy_contract(name):
+    stats, C = _stats()
+    N = stats["loss"].shape[0]
+    valid = jnp.ones((N,), bool).at[-5:].set(False)
+    idx, w = STRATEGIES[name](jax.random.PRNGKey(0), stats, valid, 8)
+    assert idx.shape == (8,) and w.shape == (8,)
+    live = np.asarray(idx)[np.asarray(w) > 0]
+    assert (live < N - 5).all(), f"{name} picked invalid samples"
+    assert np.isfinite(np.asarray(w)).all()
+
+
+def test_low_high_loss_ordering():
+    stats, C = _stats()
+    valid = jnp.ones_like(stats["loss"], bool)
+    loss = np.asarray(stats["loss"])
+    ll, _ = STRATEGIES["ll"](jax.random.PRNGKey(0), stats, valid, 5)
+    hl, _ = STRATEGIES["hl"](jax.random.PRNGKey(0), stats, valid, 5)
+    assert loss[np.asarray(ll)].max() <= np.sort(loss)[4] + 1e-6
+    assert loss[np.asarray(hl)].min() >= np.sort(loss)[-5] - 1e-6
+
+
+def test_camel_spreads_selection():
+    """Greedy facility-location should cover both clusters."""
+    rs = np.random.RandomState(0)
+    f = np.concatenate([rs.randn(25, 4) + 8, rs.randn(25, 4) - 8]).astype(np.float32)
+    stats = {"features": jnp.asarray(f), "loss": jnp.zeros((50,)),
+             "gnorm": jnp.ones((50,)), "entropy": jnp.zeros((50,)),
+             "sketch": jnp.zeros((50, 2)),
+             "domain": jnp.zeros((50,), jnp.int32)}
+    idx, _ = camel(jax.random.PRNGKey(0), stats, jnp.ones((50,), bool), 6)
+    picked = np.asarray(idx)
+    assert (picked < 25).any() and (picked >= 25).any()
+
+
+def test_titan_cis_wrapper():
+    stats, C = _stats(seed=2)
+    valid = jnp.ones_like(stats["loss"], bool)
+    idx, w = titan_cis(jax.random.PRNGKey(0), stats, valid, 10, n_classes=C)
+    assert idx.shape == (10,)
+    assert (np.asarray(w) >= 0).all()

@@ -1,0 +1,63 @@
+"""Checkpointing: atomic writes, bf16 round-trip, keep-k, corruption fallback."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import (CheckpointManager, find_latest,
+                                   restore_checkpoint, save_checkpoint)
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"w": (jnp.ones((5,)) * 0.5).astype(jnp.bfloat16),
+                  "n": jnp.asarray(7, jnp.int32)}}
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    t = _tree()
+    p = save_checkpoint(str(tmp_path), 3, t)
+    restored, manifest = restore_checkpoint(p, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t))
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_find_latest_skips_corrupt(tmp_path):
+    t = _tree()
+    p1 = save_checkpoint(str(tmp_path), 1, t)
+    p2 = save_checkpoint(str(tmp_path), 2, t)
+    # corrupt the newest: truncate the manifest (simulated failed node)
+    with open(os.path.join(p2, "manifest.json"), "w") as f:
+        f.write("{bad json")
+    assert find_latest(str(tmp_path)) == p1
+
+
+def test_keep_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_0000000003", "step_0000000004"]
+
+
+def test_async_save_completes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert find_latest(str(tmp_path)).endswith("step_0000000005")
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    p = save_checkpoint(str(tmp_path), 1, {"a": jnp.ones((2, 2))})
+    try:
+        restore_checkpoint(p, {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+        assert False, "expected ValueError"
+    except ValueError:
+        pass

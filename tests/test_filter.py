@@ -1,0 +1,79 @@
+"""Coarse filter: running estimators, scoring, buffer semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filter import (buffer_examples, buffer_merge, buffer_valid,
+                               coarse_scores, init_buffer, init_filter_state,
+                               per_class_standardize, update_filter_state)
+
+
+def test_filter_state_first_update_initializes():
+    st = init_filter_state(3, 8)
+    f = jnp.ones((10, 8)) * 2.0
+    d = jnp.zeros((10,), jnp.int32)
+    st2 = update_filter_state(st, f, d)
+    np.testing.assert_allclose(np.asarray(st2.centroids[0]), 2.0, rtol=1e-6)
+    np.testing.assert_allclose(float(st2.mean_norm2[0]), 8 * 4.0, rtol=1e-6)
+    # unseen classes untouched
+    np.testing.assert_allclose(np.asarray(st2.centroids[1]), 0.0)
+    assert float(st2.counts[0]) == 10
+
+
+def test_filter_state_ema_converges():
+    rs = np.random.RandomState(0)
+    st = init_filter_state(2, 4)
+    true = np.array([[1, 2, 3, 4], [-1, -2, -3, -4]], np.float32)
+    for i in range(300):
+        y = rs.randint(0, 2, 32)
+        f = true[y] + rs.randn(32, 4).astype(np.float32) * 0.1
+        st = update_filter_state(st, jnp.asarray(f), jnp.asarray(y),
+                                 momentum=0.9)
+    np.testing.assert_allclose(np.asarray(st.centroids), true, atol=0.15)
+
+
+def test_buffer_merge_keeps_top_scores():
+    specs = {"x": jax.ShapeDtypeStruct((4, 3), jnp.float32),
+             "domain": jax.ShapeDtypeStruct((4,), jnp.int32)}
+    buf = init_buffer(specs, 4)
+    window = {"x": jnp.arange(18, dtype=jnp.float32).reshape(6, 3),
+              "domain": jnp.arange(6, dtype=jnp.int32)}
+    scores = jnp.asarray([0.1, 5.0, 3.0, -2.0, 4.0, 0.0])
+    buf = buffer_merge(buf, window, scores)
+    assert set(np.asarray(buf["domain"])[buffer_valid(buf)].tolist()) == {0, 1, 2, 4}
+    # merge again with higher scores evicts lower
+    w2 = {"x": jnp.ones((2, 3)) * 99, "domain": jnp.asarray([7, 8], jnp.int32)}
+    buf = buffer_merge(buf, w2, jnp.asarray([10.0, 9.0]))
+    top = np.asarray(buf["domain"])[:4]
+    assert 7 in top and 8 in top
+
+
+def test_buffer_examples_strips_private_fields():
+    specs = {"x": jax.ShapeDtypeStruct((2, 3), jnp.float32)}
+    buf = init_buffer(specs, 2)
+    ex = buffer_examples(buf)
+    assert set(ex) == {"x"}
+
+
+def test_per_class_standardize_removes_offset():
+    rs = np.random.RandomState(1)
+    y = jnp.asarray(rs.randint(0, 3, 120))
+    s = jnp.asarray(rs.randn(120).astype(np.float32)) + \
+        jnp.asarray([0.0, 50.0, -30.0])[y]
+    z = np.asarray(per_class_standardize(s, y, 3))
+    for c in range(3):
+        m = np.asarray(y) == c
+        assert abs(z[m].mean()) < 1e-4
+        np.testing.assert_allclose(z[m].std(), 1.0, rtol=1e-3)
+
+
+def test_coarse_scores_prefer_representative_when_rep_weighted():
+    st = init_filter_state(1, 4)
+    center = jnp.ones((50, 4))
+    st = update_filter_state(st, center, jnp.zeros((50,), jnp.int32))
+    f = jnp.stack([jnp.ones((4,)), jnp.ones((4,)) * 10])  # near vs far
+    d = jnp.zeros((2,), jnp.int32)
+    s = np.asarray(coarse_scores(st, f, d, w_rep=1.0, w_div=0.0))
+    assert s[0] > s[1]
+    s2 = np.asarray(coarse_scores(st, f, d, w_rep=0.0, w_div=1.0))
+    assert s2[1] > s2[0]  # diversity prefers the far sample

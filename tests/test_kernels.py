@@ -1,0 +1,99 @@
+"""Kernel validation: shape/dtype sweeps, interpret-mode pallas vs the pure-jnp
+oracle, plus hypothesis property tests on the statistics themselves."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.repdiv.ops import repdiv_scores
+from repro.kernels.repdiv.ref import repdiv_ref
+from repro.kernels.score.ops import score_from_logits
+from repro.kernels.score.ref import score_ref
+
+SHAPES_SCORE = [(8, 128, 4), (64, 1000, 16), (37, 2048, 8), (256, 4096, 16),
+                (5, 63, 2)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("N,V,r", SHAPES_SCORE)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_score_kernel_matches_ref(N, V, r, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(N * V + r), 3)
+    logits = (jax.random.normal(k1, (N, V), jnp.float32) * 3).astype(dtype)
+    labels = jax.random.randint(k2, (N,), 0, V)
+    R = jax.random.normal(k3, (V, r), jnp.float32) / np.sqrt(r)
+    ref = score_ref(logits, labels, R)
+    out = score_from_logits(logits, labels, R, impl="interpret",
+                            n_block=32, v_block=512)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    for k in ["loss", "pnorm2", "entropy", "py", "psketch"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=tol, atol=tol, err_msg=k)
+
+
+@pytest.mark.parametrize("N,D,C", [(100, 300, 8), (64, 512, 6), (17, 64, 3),
+                                   (9, 1000, 2)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_repdiv_kernel_matches_ref(N, D, C, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(N * D + C), 3)
+    f = jax.random.normal(k1, (N, D)).astype(dtype)
+    cent = jax.random.normal(k2, (C, D))
+    m2 = jax.random.uniform(k3, (C,), minval=0.5, maxval=2.0) * D
+    y = jax.random.randint(k1, (N,), 0, C)
+    ref = repdiv_ref(f, cent, m2, y, 1.0, 0.5)
+    out = repdiv_scores(f, cent, m2, y, w_rep=1.0, w_div=0.5,
+                        impl="interpret", n_block=32, d_block=128)
+    tol = 1e-3 if dtype == jnp.float32 else 0.15
+    for k in ["score", "rep", "div"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=tol, atol=tol * D, err_msg=k)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(8, 300), st.integers(0, 10**6))
+def test_score_statistics_properties(n, v, seed):
+    """loss >= 0 (it's CE), 0 <= pnorm2 <= 2, entropy >= 0, p_y in (0,1],
+    and psketch is exactly R^T(p - e_y)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    logits = jax.random.normal(k1, (n, v)) * 4
+    labels = jax.random.randint(k2, (n,), 0, v)
+    out = score_ref(logits, labels)
+    assert (np.asarray(out["loss"]) >= -1e-5).all()
+    p2 = np.asarray(out["pnorm2"])
+    assert (p2 >= -1e-5).all() and (p2 <= 2.0 + 1e-5).all()
+    assert (np.asarray(out["entropy"]) >= -1e-4).all()
+    py = np.asarray(out["py"])
+    assert (py > 0).all() and (py <= 1 + 1e-6).all()
+    # loss-vs-py identity: loss = -log p_y
+    np.testing.assert_allclose(np.asarray(out["loss"]), -np.log(py),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_repdiv_equal_weights_degenerate_per_class():
+    """DESIGN.md analytical finding: Rep+Div with equal weights is a
+    per-class constant (the x-dependent terms cancel exactly)."""
+    k = jax.random.PRNGKey(0)
+    f = jax.random.normal(k, (200, 64))
+    cent = jax.random.normal(jax.random.fold_in(k, 1), (5, 64))
+    m2 = jax.random.uniform(jax.random.fold_in(k, 2), (5,)) * 64
+    y = jax.random.randint(jax.random.fold_in(k, 3), (200,), 0, 5)
+    s = np.asarray(repdiv_ref(f, cent, m2, y, 1.0, 1.0)["score"])
+    for c in range(5):
+        vals = s[np.asarray(y) == c]
+        if len(vals) > 1:
+            assert np.allclose(vals, vals[0], atol=1e-3)
+
+
+def test_score_kernel_huge_vocab_tiling():
+    """Vocab far larger than the tile: online logsumexp must stay exact."""
+    N, V = 16, 50_000
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    logits = jax.random.normal(k1, (N, V)) * 10  # large dynamic range
+    labels = jax.random.randint(k2, (N,), 0, V)
+    ref = score_ref(logits, labels)
+    out = score_from_logits(logits, labels, None, impl="interpret",
+                            n_block=16, v_block=2048)
+    for k in ["loss", "pnorm2", "entropy", "py"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-4, atol=1e-5, err_msg=k)

@@ -1,0 +1,112 @@
+"""Layer-level property tests: attention equivalences, rope, norms, remat."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(rng, B=2, T=64, KVH=2, G=2, D=16, Tk=None):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    Tk = Tk or T
+    q = jax.random.normal(k1, (B, T, KVH, G, D))
+    k = jax.random.normal(k2, (B, Tk, KVH, D))
+    v = jax.random.normal(k3, (B, Tk, KVH, D))
+    return q, k, v
+
+
+@pytest.mark.parametrize("q_chunk,k_chunk", [(16, 16), (32, 64), (64, 32)])
+def test_chunked_attention_matches_dense(q_chunk, k_chunk):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    ref = L.dense_attention(q, k, v, causal=True)
+    out = L.chunked_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                              k_chunk=k_chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_non_causal():
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    ref = L.dense_attention(q, k, v, causal=False)
+    out = L.chunked_attention(q, k, v, causal=False, q_chunk=16, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_local_attention_matches_dense_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(2))
+    ref = L.dense_attention(q, k, v, causal=True, window=window)
+    out = L.local_chunked_attention(q, k, v, window=window, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_last_row_of_dense():
+    """Decoding one token against a T-long cache == last row of the dense
+    causal attention over T+1 tokens."""
+    B, T, KVH, G, D = 2, 32, 2, 2, 16
+    rng = jax.random.PRNGKey(3)
+    q, k, v = _qkv(rng, B=B, T=T + 1, KVH=KVH, G=G, D=D)
+    ref = L.dense_attention(q, k, v, causal=True)[:, -1:]
+    valid = jnp.ones((B, T + 1), bool)
+    out = L.decode_attention(q[:, -1:], k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    rng = jax.random.PRNGKey(4)
+    x = jax.random.normal(rng, (1, 8, 2, 16))
+    pos = jnp.arange(8)[None, :]
+    y = L.rope(x, pos, theta=10_000.0)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               rtol=1e-5)
+    # dot products depend only on relative offset
+    q = L.rope(x, pos, theta=10_000.0)
+    k = L.rope(x, pos + 5, theta=10_000.0)   # shift both by same amount
+    q2 = L.rope(x, pos + 7, theta=10_000.0)
+    k2 = L.rope(x, pos + 12, theta=10_000.0)
+    d1 = jnp.einsum("bthd,bshd->bths", q, k)
+    d2 = jnp.einsum("bthd,bshd->bths", q2, k2)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4,
+                               atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_rmsnorm_properties(seed):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (4, 32)) * 10
+    scale = jnp.zeros((32,))
+    y = L.rmsnorm(x, scale)
+    rms = np.sqrt(np.mean(np.square(np.asarray(y, np.float32)), axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    # scale-invariance of direction
+    y2 = L.rmsnorm(x * 100, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_layernorm_zero_mean_unit_var():
+    rng = jax.random.PRNGKey(5)
+    x = jax.random.normal(rng, (4, 64)) * 3 + 7
+    y = L.layernorm(x, jnp.zeros((64,)), jnp.zeros((64,)))
+    ya = np.asarray(y, np.float32)
+    np.testing.assert_allclose(ya.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(ya.var(-1), 1.0, rtol=1e-3)
+
+
+def test_softmax_xent_matches_manual():
+    rng = jax.random.PRNGKey(6)
+    logits = jax.random.normal(rng, (5, 11))
+    labels = jnp.asarray([0, 3, 10, 2, 7])
+    got = float(L.softmax_xent(logits, labels))
+    p = jax.nn.log_softmax(logits)
+    want = float(-jnp.mean(jnp.take_along_axis(p, labels[:, None], 1)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)

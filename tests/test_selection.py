@@ -1,0 +1,88 @@
+"""C-IS selection unit + statistical tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import (allocate, cis_select, class_moments,
+                                  intra_class_probs, is_select)
+
+
+def _stats(seed=0, N=60, C=4, K=8):
+    rs = np.random.RandomState(seed)
+    dom = rs.randint(0, C, N)
+    dom[:C] = np.arange(C)
+    g = rs.randn(N, K).astype(np.float32)
+    return {
+        "gnorm": jnp.asarray(np.linalg.norm(g, axis=-1)),
+        "sketch": jnp.asarray(g),
+        "domain": jnp.asarray(dom),
+        "loss": jnp.asarray(rs.rand(N).astype(np.float32)),
+    }, C
+
+
+def test_cis_select_shapes_and_validity():
+    stats, C = _stats()
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool)
+    idx, w, diag = cis_select(jax.random.PRNGKey(0), stats, valid, 16, C)
+    assert idx.shape == (16,) and w.shape == (16,)
+    assert (np.asarray(idx) >= 0).all() and (np.asarray(idx) < N).all()
+    assert (np.asarray(w) > 0).all()
+    assert np.asarray(diag["alloc"]).sum() == 16
+
+
+def test_cis_select_respects_validity():
+    stats, C = _stats()
+    N = stats["gnorm"].shape[0]
+    valid = jnp.zeros((N,), bool).at[:10].set(True)
+    idx, w, _ = cis_select(jax.random.PRNGKey(1), stats, valid, 8, C)
+    picked = np.asarray(idx)[np.asarray(w) > 0]
+    assert (picked < 10).all()
+
+
+def test_weighted_estimator_unbiased():
+    """E[mean_i w_i l_i] over selection randomness ≈ mean loss over the
+    candidate set (the unbiasedness the weights are built for)."""
+    stats, C = _stats(seed=3, N=80)
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool)
+    loss = np.asarray(stats["loss"])
+    target = loss.mean()
+    ests = []
+    for t in range(600):
+        idx, w, _ = cis_select(jax.random.PRNGKey(t), stats, valid, 12, C)
+        ests.append(float(np.mean(np.asarray(w) * loss[np.asarray(idx)])))
+    est = np.mean(ests)
+    assert abs(est - target) < 0.06 * max(target, 1e-6) + 0.01, (est, target)
+
+
+def test_is_select_unbiased():
+    stats, C = _stats(seed=4, N=80)
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool)
+    loss = np.asarray(stats["loss"])
+    target = loss.mean()
+    ests = []
+    for t in range(600):
+        idx, w = is_select(jax.random.PRNGKey(t), stats, valid, 12)
+        ests.append(float(np.mean(np.asarray(w) * loss[np.asarray(idx)])))
+    assert abs(np.mean(ests) - target) < 0.06 * target + 0.01
+
+
+def test_intra_class_probs_normalized():
+    stats, C = _stats()
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool)
+    P = np.asarray(intra_class_probs(stats, valid, C))
+    dom = np.asarray(stats["domain"])
+    for c in range(C):
+        np.testing.assert_allclose(P[dom == c].sum(), 1.0, rtol=1e-5)
+
+
+def test_class_moments_jensen():
+    stats, C = _stats(seed=9)
+    valid = jnp.ones_like(stats["gnorm"], bool)
+    mom = class_moments(stats, valid, C)
+    # I(y) well-defined (Jensen: (E||g||)^2 >= ||Eg||^2)
+    assert np.isfinite(np.asarray(mom["I"])).all()
+    assert (np.asarray(mom["I"]) >= 0).all()

@@ -1,0 +1,122 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. Titan improves over random selection on a stream with diverse class
+   importance (the paper's headline claim, at test scale).
+2. The LM-scale fused step trains a real (reduced) transformer with domain-
+   tagged data and produces sane selection diagnostics.
+3. The roofline toolchain parses collectives from real HLO.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TitanConfig, TrainConfig, get_config, replace
+from repro.core.pipeline import edge_hooks, lm_hooks, make_titan_step, titan_init
+from repro.data.stream import GaussianMixtureStream, SyntheticLMStream
+from repro.launch.roofline import collective_bytes, model_flops, roofline_terms
+from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_features,
+                               mlp_head_logits, mlp_init, mlp_loss,
+                               mlp_penultimate)
+from repro.models.model import build_model
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def test_titan_beats_random_on_hard_stream():
+    """Class-imbalanced stream (hard classes rare): with a tight data budget
+    Titan's C-IS should reach higher accuracy than random selection."""
+    C, IN, B, W, M = 5, 24, 8, 80, 24
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(48, 24), n_classes=C)
+    # rare classes are the hard ones
+    weights = np.array([0.4, 0.3, 0.15, 0.1, 0.05])
+    stream = GaussianMixtureStream(in_dim=IN, n_classes=C, seed=3,
+                                   class_noise=np.array([0.3, 0.3, 0.8, 1.0, 1.2]),
+                                   class_weights=weights)
+    xt, yt = stream.test_set(2000)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        return jax.tree.map(lambda a, gg: a - 0.08 * gg, p, g), {"loss": loss}
+
+    # Titan
+    f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
+                            penultimate=mlp_penultimate,
+                            head_logits=mlp_head_logits)
+    step = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
+                                   train_step_fn=train, params_of=lambda s: s,
+                                   batch_size=B, n_classes=C,
+                                   cfg=TitanConfig()))
+    params = mlp_init(ecfg, jax.random.PRNGKey(0))
+    w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+    ts = titan_init(jax.random.PRNGKey(1), w0, f_fn(params, w0), B, M, C)
+    for _ in range(250):
+        w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+        params, ts, _ = step(params, ts, w)
+    acc_titan = float(mlp_accuracy(ecfg, params, xt, yt))
+
+    # RS with the same budget
+    stream_rs = GaussianMixtureStream(in_dim=IN, n_classes=C, seed=3,
+                                      class_noise=np.array([0.3, 0.3, 0.8, 1.0, 1.2]),
+                                      class_weights=weights)
+    params_rs = mlp_init(ecfg, jax.random.PRNGKey(0))
+    tstep = jax.jit(train)
+    rs = np.random.RandomState(0)
+    for _ in range(250):
+        w = stream_rs.next_window(W)
+        sel = rs.choice(W, B, replace=False)
+        params_rs, _ = tstep(params_rs, {"x": jnp.asarray(w["x"][sel]),
+                                         "y": jnp.asarray(w["y"][sel])})
+    acc_rs = float(mlp_accuracy(ecfg, params_rs, xt, yt))
+    # Titan must at least match RS (and usually beat it on rare-hard classes)
+    assert acc_titan >= acc_rs - 0.02, (acc_titan, acc_rs)
+    assert acc_titan > 0.6
+
+
+def test_lm_titan_end_to_end_reduces_loss():
+    cfg = get_config("deepseek-moe-16b-reduced")
+    model = build_model(cfg)
+    tcfg = TrainConfig(lr=2e-3, warmup_steps=5, total_steps=60)
+    train_step = make_train_step(model, tcfg)
+    ttn = TitanConfig(stream_ratio=4, buffer_ratio=2, sketch_dim=4,
+                      score_seq_len=32)
+    f_fn, s_fn = lm_hooks(model, ttn, impl="ref")
+    B, W, T, C = 4, 16, 64, 8
+    step = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
+                                   train_step_fn=train_step,
+                                   params_of=lambda s: s.params,
+                                   batch_size=B, n_classes=C, cfg=ttn))
+    stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=T, n_domains=C, seed=0)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+    ts = titan_init(jax.random.PRNGKey(1), w0, f_fn(state.params, w0), B,
+                    B * 2, C)
+    losses = []
+    for i in range(40):
+        w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+        state, ts, m = step(state, ts, w)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-8:]) < np.mean(losses[:8]), losses
+    assert int(np.asarray(m["titan_alloc"]).sum()) == B
+
+
+def test_roofline_collective_parser():
+    hlo = """
+      %ag = bf16[16,128,256] all-gather(bf16[1,128,256] %x), dimensions={0}
+      %ar.1 = f32[1024] all-reduce(f32[1024] %y), to_apply=%sum
+      %t = (f32[8,8], f32[8,8]) all-reduce(f32[8,8] %a, f32[8,8] %b)
+      %done = f32[4] all-reduce-done(f32[4] %h)
+      %start = f32[4]{0} all-reduce-start(f32[4] %g)
+      %cp = u32[2] collective-permute(u32[2] %c), source_target_pairs={{0,1}}
+    """
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 256 * 2
+    assert out["all-reduce"] == 1024 * 4 + 2 * 8 * 8 * 4 + 4 * 4
+    assert out["collective-permute"] == 2 * 4
+    terms = roofline_terms({"flops": 1e15, "bytes accessed": 1e12},
+                           {"total": out["total"]})
+    assert terms["dominant"] == "compute_s"
+    cfg = get_config("llama3-405b")
+    from repro.configs.base import SHAPES
+    assert model_flops(cfg, SHAPES["train_4k"]) > 1e18
