@@ -1,8 +1,19 @@
-"""Kernel micro-benchmarks: fused score & repdiv — jnp-reference timings on
-CPU (shape sweep over paper-relevant vocab sizes) + interpret-mode validation.
-On TPU the same harness times the compiled pallas path (impl='pallas')."""
+"""Kernel micro-benchmarks: fused linear-score, score-from-logits & repdiv.
+
+CPU runs time the jnp-reference path (shape sweep over paper-relevant vocab
+sizes) + interpret-mode validation; on TPU the same harness times the
+compiled pallas paths. The linear-score section compares the fused
+(unembed-matmul-inside-the-kernel) path against the materialize-then-score
+baseline and reports the analytic HBM roofline at V in {32k, 128k, 256k}
+(see DESIGN.md §4): measured shapes shrink on CPU, the roofline is always
+evaluated at the full production shape.
+
+Writes machine-readable ``BENCH_kernels.json`` (per-kernel ns/op + achieved
+GB/s + roofline bytes) so the perf trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -10,8 +21,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.repdiv.ops import repdiv_scores
-from repro.kernels.score.ops import score_from_logits
-from repro.kernels.score.ref import score_ref
+from repro.kernels.score.ops import linear_score, score_from_logits
+from repro.kernels.score.ref import linear_score_ref, score_ref
+
+# (N, D, V, r): selection-chunk rows x hidden x vocab at paper-relevant
+# scale. N = 64 buffered sequences x 512-token scoring chunk — one
+# lm_sequence_stats kernel call at pod scale. The fusion win grows with
+# N/V relative to the irreducible V·D table read (DESIGN.md §4).
+LINEAR_SHAPES = [
+    (32_768, 4_096, 32_768, 16),
+    (32_768, 8_192, 131_072, 16),
+    (32_768, 8_192, 262_144, 16),
+]
 
 
 def _time(fn, *args, n=10):
@@ -24,10 +45,63 @@ def _time(fn, *args, n=10):
     return (time.perf_counter() - t0) / n
 
 
-def run():
-    impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+def linear_score_roofline(N, D, V, r):
+    """Analytic HBM bytes per call (fp32 words), fused vs unfused.
+
+    fused:   read h (N·D) + table (V·D) + R (V·r) + S (D·r), write outputs.
+    unfused: additionally writes AND re-reads the (N, V) fp32 logits.
+    """
+    outs = 4 * N * (5 + 2 * r)
+    common = 4 * (N * D + V * D + V * r + D * r)
+    fused = common + outs
+    unfused = common + outs + 4 * (2 * N * V)
+    return fused, unfused
+
+
+def run(smoke: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    impl = "pallas" if on_tpu else "ref"
     rows = []
-    for (N, V) in [(256, 8_192), (256, 50_280), (128, 128_256), (64, 256_000)]:
+
+    # --- fused linear-score vs materialize-then-score -----------------------
+    for (N, D, V, r) in (LINEAR_SHAPES[:1] if smoke else LINEAR_SHAPES):
+        fused_b, unfused_b = linear_score_roofline(N, D, V, r)
+        # measured shape: full on TPU, shrunk on CPU (the roofline above is
+        # always the full shape — CPU has no HBM to measure anyway)
+        if smoke:
+            Nm, Dm, Vm = 32, 64, 1024
+        elif on_tpu:
+            # cap N so the unfused baseline's (N, V) fp32 logits fit HBM
+            # (32k x 262k would be 34 GB); roofline stays full-shape
+            Nm, Dm, Vm = min(N, 2048), D, V
+        else:
+            Nm, Dm, Vm = 128, 256, min(V, 16_384)
+        ks = jax.random.split(jax.random.PRNGKey(V + D), 5)
+        h = jax.random.normal(ks[0], (Nm, Dm), jnp.float32)
+        table = jax.random.normal(ks[1], (Vm, Dm), jnp.float32) / np.sqrt(Dm)
+        y = jax.random.randint(ks[2], (Nm,), 0, Vm)
+        R = jax.random.normal(ks[3], (Vm, r)) / np.sqrt(r)
+        S = jax.random.normal(ks[4], (Dm, r)) / np.sqrt(r)
+        t_fused = _time(jax.jit(lambda a, b, c, d, e: linear_score(
+            a, b, c, d, e, impl=impl)), h, table, y, R, S)
+        t_unfused = _time(jax.jit(lambda a, b, c, d, e: linear_score(
+            a, b, c, d, e, impl="unfused")), h, table, y, R, S)
+        meas_fused_b, meas_unfused_b = linear_score_roofline(Nm, Dm, Vm, r)
+        rows.append({"kernel": "linear-score-fused", "N": N, "V": V, "D": D,
+                     "us_per_call": t_fused * 1e6,
+                     "GB/s": meas_fused_b / 1e9 / t_fused,
+                     "hbm_bytes": fused_b,
+                     "bytes_ratio_vs_unfused": unfused_b / fused_b})
+        rows.append({"kernel": "linear-score-unfused", "N": N, "V": V, "D": D,
+                     "us_per_call": t_unfused * 1e6,
+                     "GB/s": meas_unfused_b / 1e9 / t_unfused,
+                     "hbm_bytes": unfused_b,
+                     "bytes_ratio_vs_unfused": 1.0})
+
+    # --- score from pre-materialized logits ---------------------------------
+    score_shapes = [(64, 4_096)] if smoke else [
+        (256, 8_192), (256, 50_280), (128, 128_256), (64, 256_000)]
+    for (N, V) in score_shapes:
         k = jax.random.PRNGKey(N + V)
         logits = jax.random.normal(k, (N, V), jnp.float32)
         labels = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, V)
@@ -37,7 +111,11 @@ def run():
         gb = (N * V * 4) / 1e9
         rows.append({"kernel": "score", "N": N, "V": V,
                      "us_per_call": dt * 1e6, "GB/s": gb / dt})
-    for (N, D, C) in [(1024, 1024, 8), (2048, 2560, 8), (1024, 8192, 16)]:
+
+    # --- repdiv -------------------------------------------------------------
+    repdiv_shapes = [(256, 256, 4)] if smoke else [
+        (1024, 1024, 8), (2048, 2560, 8), (1024, 8192, 16)]
+    for (N, D, C) in repdiv_shapes:
         k = jax.random.PRNGKey(N + D)
         f = jax.random.normal(k, (N, D))
         cent = jax.random.normal(jax.random.fold_in(k, 1), (C, D))
@@ -47,7 +125,8 @@ def run():
         dt = _time(fn, f, cent, m2, y)
         rows.append({"kernel": "repdiv", "N": N, "V": D,
                      "us_per_call": dt * 1e6, "GB/s": (N * D * 4) / 1e9 / dt})
-    # interpret-mode validation at one shape (kernel == oracle)
+
+    # --- interpret-mode validation (kernel == oracle) -----------------------
     N, V = 64, 4096
     k = jax.random.PRNGKey(0)
     logits = jax.random.normal(k, (N, V)) * 3
@@ -59,16 +138,54 @@ def run():
                   for x in ("loss", "pnorm2", "entropy"))
     rows.append({"kernel": "score-interpret-maxerr", "N": N, "V": V,
                  "us_per_call": 0.0, "GB/s": max_err})
+    N, V, D = 32, 1024, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    h = jax.random.normal(ks[0], (N, D))
+    table = jax.random.normal(ks[1], (V, D)) / np.sqrt(D)
+    labels = jax.random.randint(ks[2], (N,), 0, V)
+    lref = linear_score_ref(h, table, labels)
+    lout = linear_score(h, table, labels, impl="interpret",
+                        n_block=16, v_block=256, d_block=32)
+    max_err = max(float(jnp.max(jnp.abs(lout[x] - lref[x])))
+                  for x in ("loss", "pnorm2", "entropy", "hnorm2"))
+    rows.append({"kernel": "linear-score-interpret-maxerr", "N": N, "V": V,
+                 "us_per_call": 0.0, "GB/s": max_err})
     return rows
 
 
-def main(fast: bool = True):
-    rows = run()
+def write_json(rows, path: str = "BENCH_kernels.json"):
+    """Normalize rows into the cross-PR perf-tracking schema."""
+    payload = {
+        "schema": "bench_kernels/v1",
+        "backend": jax.default_backend(),
+        "kernels": [
+            {"kernel": r["kernel"], "N": r["N"], "V_or_D": r["V"],
+             "ns_per_op": r["us_per_call"] * 1e3, "gbps": r["GB/s"],
+             **({"hbm_bytes": r["hbm_bytes"],
+                 "bytes_ratio_vs_unfused": r["bytes_ratio_vs_unfused"]}
+                if "hbm_bytes" in r else {})}
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(fast: bool = True, *, smoke: bool = False,
+         json_path: str = "BENCH_kernels.json"):
+    rows = run(smoke=smoke)
     print("# Kernel micro-benchmarks")
-    print(f"{'kernel':24s} {'N':>6s} {'V/D':>8s} {'us/call':>10s} {'GB/s|err':>10s}")
+    print(f"{'kernel':28s} {'N':>6s} {'V/D':>8s} {'us/call':>10s} "
+          f"{'GB/s|err':>10s} {'bytes_ratio':>12s}")
     for r in rows:
-        print(f"{r['kernel']:24s} {r['N']:6d} {r['V']:8d} "
-              f"{r['us_per_call']:10.1f} {r['GB/s']:10.3f}")
+        line = (f"{r['kernel']:28s} {r['N']:6d} {r['V']:8d} "
+                f"{r['us_per_call']:10.1f} {r['GB/s']:10.3f}")
+        ratio = r.get("bytes_ratio_vs_unfused")
+        print(line + (f" {ratio:11.1f}" if ratio is not None else ""))
+    if json_path:
+        write_json(rows, json_path)
+        print(f"# wrote {json_path}")
     return rows
 
 

@@ -68,9 +68,14 @@ def main() -> None:
                 f"{[r for r in best if r['noise']=='label40'][0]['final_acc']:.3f}"))
 
     print("=" * 70)
-    name, dt, out = run("kernels", bench_kernels.main)
+    name, dt, out = run("kernels", bench_kernels.main)   # writes BENCH_kernels.json
     csv.append(("kernel_score_v256k_us", dt,
                 f"{[r for r in out if r['V']==256000][0]['us_per_call']:.0f}"))
+    fused128k = [r for r in out if r["kernel"] == "linear-score-fused"
+                 and r["V"] == 131_072]
+    if fused128k:
+        csv.append(("kernel_fused_v128k_bytes_ratio", dt,
+                    f"{fused128k[0]['bytes_ratio_vs_unfused']:.2f}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

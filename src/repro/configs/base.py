@@ -241,6 +241,14 @@ class TitanConfig:
                                   # otherwise collapses the buffer; DESIGN.md)
     weight_clip: float = 0.0      # 0 = off; else clip selection weights
     evict_selected: bool = True   # consume selected samples from the buffer
+    score_impl: str = "auto"      # fused linear-score kernel impl:
+                                  # auto|pallas|interpret|ref|unfused
+    score_n_block: int = 0        # fused-kernel tile sizes; 0 = autotune
+    score_v_block: int = 0        #   (keyed on (D, V, r) — see
+    score_d_block: int = 0        #   kernels/score/ops.autotune_blocks)
+    dense_slot_sampling: bool = False  # C-IS: use the O(B·N) dense slot-
+                                  # logits sampler instead of the segment
+                                  # inverse-CDF path (parity/debug only)
     buffer_decay: float = 0.8     # per-round freshness decay of buffered
                                   # coarse scores: prevents high-scoring
                                   # outliers (e.g. mislabeled samples) from

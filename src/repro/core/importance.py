@@ -11,7 +11,8 @@ per-token-sum proxy  gnorm^2 = sum_t ||delta_t||^2 ||h_t||^2  and a
 Johnson-Lindenstrauss sketch of vec(G) for the class-mean-gradient term:
     sketch(G) = sum_t (R^T delta_t) kron (S^T h_t)          (r x r dims)
 with E<sketch_i, sketch_j> = <vec G_i, vec G_j>. Everything comes out of one
-pass over the logits via the fused score kernel — no backprop.
+pass over the unembed table via the fused linear-score kernel — logits never
+materialize in HBM, and no backprop (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.flags import pscan
-from repro.kernels.score.ops import score_from_logits
+from repro.kernels.score.ops import linear_score
 from repro.models.model import unembed_table
 
 
@@ -36,20 +37,23 @@ def sketch_matrices(seed_key, V: int, d: int, r: int):
 
 def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
                       sketch_dim: int = 16, chunk: int = 512,
-                      impl: str = "auto") -> Dict[str, jnp.ndarray]:
+                      impl: str = "auto", n_block: int = 0, v_block: int = 0,
+                      d_block: int = 0) -> Dict[str, jnp.ndarray]:
     """Per-sequence Titan statistics from final hidden states.
 
-    h: (B,T,D); labels: (B,T) int32 (-1 = pad). Scans seq chunks so (B,T,V)
-    logits never materialize; each chunk goes through the fused score kernel.
+    h: (B,T,D); labels: (B,T) int32 (-1 = pad). Scans seq chunks; each chunk
+    goes through the fused linear-score kernel, which computes the unembed
+    matmul tile-by-tile on the MXU — the (B,chunk,V) logits never exist in
+    HBM (impl="unfused" restores the materialize-then-score path as fallback
+    and roofline baseline; see DESIGN.md §4).
     Returns: loss (B,), gnorm (B,), entropy (B,), sketch (B, r*r).
     """
     B, T, D = h.shape
-    V = cfg.vocab
     table = unembed_table(cfg, params)
     r = sketch_dim
     if sketch_key is None:
         sketch_key = jax.random.PRNGKey(0)
-    R, S = sketch_matrices(sketch_key, V, D, r)
+    R, S = sketch_matrices(sketch_key, cfg.vocab, D, r)
 
     chunk = min(chunk, T)
     assert T % chunk == 0
@@ -59,17 +63,15 @@ def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
         loss_s, gn2_s, ent_s, sk_s, cnt = carry
         hc = lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
         yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
-        hf = hc.astype(jnp.float32)
-        logits = jnp.einsum("btd,vd->btv", hc, table,
-                            preferred_element_type=jnp.float32)
-        out = score_from_logits(logits.reshape(B * chunk, V),
-                                jnp.maximum(yc, 0).reshape(-1), R, impl=impl)
+        out = linear_score(hc.reshape(B * chunk, D), table,
+                           yc.reshape(-1), R, S, impl=impl,
+                           n_block=n_block, v_block=v_block, d_block=d_block)
         valid = (yc >= 0).astype(jnp.float32)                     # (B,chunk)
         loss_t = out["loss"].reshape(B, chunk) * valid
         pn2_t = out["pnorm2"].reshape(B, chunk) * valid
         psk_t = out["psketch"].reshape(B, chunk, r) * valid[..., None]
-        hn2 = jnp.sum(jnp.square(hf), axis=-1)                    # (B,chunk)
-        sh = jnp.einsum("btd,dr->btr", hf, S)                     # (B,chunk,r)
+        hn2 = out["hnorm2"].reshape(B, chunk)                     # (B,chunk)
+        sh = out["hsketch"].reshape(B, chunk, r)                  # (B,chunk,r)
         # kron accumulation: sk[b, i, j] += sum_t psk[b,t,i] * sh[b,t,j]
         sk_c = jnp.einsum("bti,btj->bij", psk_t, sh)
         return (loss_s + jnp.sum(loss_t, axis=1),

@@ -13,7 +13,7 @@ analogue of the paper's idle-processor offloading (see DESIGN.md §3).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +91,8 @@ def make_titan_step(*, features_fn: Callable, stats_fn: Callable,
         rng, key = jax.random.split(tstate.rng)
         idx, w, diag = cis_select(
             key, stats, valid, batch_size, n_classes,
-            with_replacement=cfg.with_replacement)
+            with_replacement=cfg.with_replacement,
+            dense_slots=cfg.dense_slot_sampling)
         if cfg.weight_clip:
             w = jnp.minimum(w, cfg.weight_clip)
         nb = {k: jnp.take(v, idx, axis=0) for k, v in examples.items()}
@@ -115,8 +116,13 @@ def make_titan_step(*, features_fn: Callable, stats_fn: Callable,
 # Hooks
 # ---------------------------------------------------------------------------
 
-def lm_hooks(model, cfg: TitanConfig, *, impl: str = "auto"):
-    """Titan hooks for the LM model zoo (sequence = sample, domain = class)."""
+def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None):
+    """Titan hooks for the LM model zoo (sequence = sample, domain = class).
+
+    `impl` overrides cfg.score_impl for the fused linear-score kernel; the
+    tile sizes come from cfg.score_{n,v,d}_block (0 = autotune).
+    """
+    impl = cfg.score_impl if impl is None else impl
 
     def _truncate(ex):
         if not cfg.score_seq_len:
@@ -135,7 +141,10 @@ def lm_hooks(model, cfg: TitanConfig, *, impl: str = "auto"):
         ex = _truncate(ex)
         h = model.final_hidden(params, ex)
         return lm_sequence_stats(model.cfg, params, h, ex["labels"],
-                                 sketch_dim=cfg.sketch_dim, impl=impl)
+                                 sketch_dim=cfg.sketch_dim, impl=impl,
+                                 n_block=cfg.score_n_block,
+                                 v_block=cfg.score_v_block,
+                                 d_block=cfg.score_d_block)
 
     return features_fn, stats_fn
 

@@ -74,9 +74,54 @@ def intra_class_probs(stats, valid, n_classes: int):
     return jnp.where(valid, gnorm / jnp.maximum(per_class_total, _EPS), 0.0)
 
 
+def _sample_slots_dense(rng, slot_class, base_logits, domain,
+                        with_replacement: bool):
+    """Reference sampler: materializes the (B, N) per-slot logits matrix."""
+    slot_logits = jnp.where(domain[None, :] == slot_class[:, None],
+                            base_logits[None, :], -jnp.inf)        # (B,N)
+    if with_replacement:
+        idx = jax.random.categorical(rng, slot_logits, axis=-1)
+    else:
+        g = jax.random.gumbel(rng, slot_logits.shape)
+        idx = jnp.argmax(slot_logits + g, axis=-1)
+    ok = jnp.isfinite(jnp.take_along_axis(slot_logits, idx[:, None], 1)[:, 0])
+    return idx, ok
+
+
+def _sample_slots_segment(rng, slot_class, P, domain, valid, n_classes: int):
+    """O(N log N + B) per-slot categorical via segment-wise inverse CDF.
+
+    Each slot draws from its class's restricted categorical. Sorting
+    candidates by class makes the per-class CDF a contiguous span of one
+    global cumsum, so a slot's draw is a single searchsorted — no (B, N)
+    matrix. Both the categorical and the per-slot Gumbel-argmax of the dense
+    path reduce to an independent within-class categorical per slot, so one
+    sampler serves with- and without-replacement semantics.
+    """
+    order = jnp.argsort(domain)                                    # (N,)
+    p_sorted = jnp.take(P, order)
+    cs = jnp.cumsum(p_sorted)                                      # (N,)
+    onehot = jax.nn.one_hot(domain, n_classes, dtype=jnp.float32)
+    totals = onehot.T @ P                                          # (C,) ~1 or 0
+    offsets = jnp.cumsum(totals) - totals                          # exclusive
+    u = jax.random.uniform(rng, slot_class.shape, minval=1e-7,
+                           maxval=1.0 - 1e-7)                      # (B,)
+    t_c = jnp.take(totals, slot_class)
+    target = jnp.take(offsets, slot_class) + u * t_c
+    pos = jnp.clip(jnp.searchsorted(cs, target, side="left"),
+                   0, domain.shape[0] - 1)
+    idx = jnp.take(order, pos)
+    # fp boundary slips and empty classes: the pick must be a valid candidate
+    # of the slot's own class
+    ok = (t_c > 0) & jnp.take(valid, idx) & \
+        (jnp.take(domain, idx) == slot_class)
+    return idx, ok
+
+
 def cis_select(rng, stats: Dict, valid, batch: int, n_classes: int,
                *, with_replacement: bool = True,
-               class_counts: Optional[jnp.ndarray] = None
+               class_counts: Optional[jnp.ndarray] = None,
+               dense_slots: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
     """Select `batch` samples by C-IS.
 
@@ -84,9 +129,10 @@ def cis_select(rng, stats: Dict, valid, batch: int, n_classes: int,
     valid: (N,) bool candidate mask.
     class_counts: optional |S_y| override (e.g. stream counts); defaults to
     candidate counts in the buffer.
+    dense_slots: use the O(B·N)-memory dense slot-logits sampler instead of
+    the segment-wise inverse-CDF path (kept for parity tests / debugging).
     Returns (idx (B,), weights (B,), diagnostics).
     """
-    N = stats["gnorm"].shape[0]
     mom = class_moments(stats, valid, n_classes)
     n_y = mom["n_y"] if class_counts is None else class_counts
     I = (n_y * jnp.sqrt(jnp.maximum(
@@ -98,27 +144,23 @@ def cis_select(rng, stats: Dict, valid, batch: int, n_classes: int,
     slot_class = jnp.repeat(jnp.arange(n_classes), alloc,
                             total_repeat_length=batch)             # (B,)
 
-    gnorm = jnp.maximum(stats["gnorm"], _EPS)
-    base_logits = jnp.where(valid, jnp.log(gnorm), -jnp.inf)       # (N,)
-    slot_logits = jnp.where(
-        stats["domain"][None, :] == slot_class[:, None],
-        base_logits[None, :], -jnp.inf)                            # (B,N)
-
-    if with_replacement:
-        idx = jax.random.categorical(rng, slot_logits, axis=-1)
+    P = intra_class_probs(stats, valid, n_classes)
+    if dense_slots:
+        gnorm = jnp.maximum(stats["gnorm"], _EPS)
+        base_logits = jnp.where(valid, jnp.log(gnorm), -jnp.inf)   # (N,)
+        idx, ok = _sample_slots_dense(rng, slot_class, base_logits,
+                                      stats["domain"], with_replacement)
     else:
-        g = jax.random.gumbel(rng, slot_logits.shape)
-        idx = jnp.argmax(slot_logits + g, axis=-1)
+        idx, ok = _sample_slots_segment(rng, slot_class, P, stats["domain"],
+                                        valid, n_classes)
 
     # unbiasedness weights: w = B / (n * |B_y| * P_y(x))
-    P = intra_class_probs(stats, valid, n_classes)
     n_total = jnp.sum(mom["n_y"])
     alloc_of_slot = jnp.take(alloc, slot_class).astype(jnp.float32)
     w = batch / (n_total * jnp.maximum(alloc_of_slot, 1.0) *
                  jnp.maximum(jnp.take(P, idx), _EPS))
-    # guard: if a slot's class had zero candidates the categorical is
-    # degenerate — give it zero weight so it cannot poison the update
-    ok = jnp.isfinite(jnp.take_along_axis(slot_logits, idx[:, None], 1)[:, 0])
+    # guard: a slot whose class had zero candidates is degenerate — give it
+    # zero weight so it cannot poison the update
     w = jnp.where(ok, w, 0.0)
     diag = {"I": I, "alloc": alloc, "n_y": mom["n_y"],
             "mean_gnorm": mom["mean_gnorm"]}

@@ -105,9 +105,12 @@ class GaussianMixtureStream:
 
 
 def save_stream_shard(path: str, window: Dict[str, np.ndarray]):
-    tmp = path + ".tmp"
+    """Atomically write a window shard: write to a sibling tmp file, then
+    rename. The tmp name must end in .npz or np.savez appends the suffix
+    itself and the rename source would not exist."""
+    tmp = path + ".tmp.npz"
     np.savez(tmp, **window)
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    os.replace(tmp, path)
 
 
 @dataclass

@@ -1,0 +1,6 @@
+from repro.dist.sharding import (  # noqa: F401
+    AxisRules, constrain, logical_to_spec, param_shardings, rules_for,
+)
+from repro.dist.collectives import (  # noqa: F401
+    make_compressed_allreduce, quantize_dequantize_int8,
+)

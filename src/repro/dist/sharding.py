@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules.
+
+Params and activations carry *logical* axis names (``ParamDef.axes``,
+``constrain(x, "batch", "seq", ...)``). A rule set maps logical names to mesh
+axes; ``AxisRules`` binds a rule set to a concrete mesh and installs itself as
+the ambient context so that ``constrain`` — sprinkled through the model code —
+becomes ``with_sharding_constraint`` under pjit and the identity elsewhere
+(single-device tests, CPU dry runs outside a rules ctx).
+
+Rules are derived per arch: a candidate ``logical -> mesh axis`` preference
+table is filtered against the arch's actual parameter dims so that every
+sharded dim divides the production mesh (16 data x 16 model). That keeps the
+divisibility invariant arch-agnostic instead of hand-maintaining overrides.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Preferred mesh axis per logical param/activation axis. "model" shards the
+# wide, per-param-unique dims; "batch" is the only data-parallel logical axis.
+_PARAM_PREFS = {
+    "vocab": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "heads": "model",
+    "state": "model",
+}
+_ACT_PREFS = {
+    "batch": "data",
+    "vocab": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "heads": "model",
+    "state": "model",
+}
+
+_PRODUCTION_SIZES = {"data": 16, "model": 16}
+
+
+def _dedupe(entries) -> Tuple:
+    """A PartitionSpec may not repeat a mesh axis: keep first occurrence."""
+    seen, out = set(), []
+    for e in entries:
+        parts = e if isinstance(e, tuple) else (e,)
+        if e is None or any(p in seen for p in parts):
+            out.append(None)
+        else:
+            seen.update(parts)
+            out.append(e)
+    return tuple(out)
+
+
+def logical_to_spec(axes, rules: Dict[str, Optional[str]]) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec under `rules`."""
+    return P(*_dedupe(tuple(rules.get(a) for a in axes)))
+
+
+def rules_for(arch: str, mode: str,
+              sizes: Optional[Dict[str, int]] = None) -> Dict[str, Optional[str]]:
+    """Param-sharding rules for `arch` (base name, e.g. "qwen2-72b").
+
+    Starts from `_PARAM_PREFS` and drops any mapping whose logical axis labels
+    a param dim not divisible by the mesh axis size — checked against every
+    occurrence in the arch's ParamDef tree, so per-arch quirks (e.g. head
+    counts that don't divide 16) degrade to replication instead of erroring.
+    `mode` ("train" | "prefill" | "decode" | ...) is accepted for future
+    mode-dependent layouts; the param layout is currently mode-invariant.
+    """
+    sizes = dict(_PRODUCTION_SIZES if sizes is None else sizes)
+    from repro.configs import get_config
+    from repro.models.model import ParamDef, build_param_defs
+    try:
+        defs = build_param_defs(get_config(arch))
+    except KeyError:
+        return dict(_PARAM_PREFS)
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    rules = dict(_PARAM_PREFS)
+    for d in leaves:
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax)
+            if mesh_ax is None:
+                continue
+            if dim % sizes.get(mesh_ax, 1) != 0:
+                rules[ax] = None
+    return rules
+
+
+class AxisRules:
+    """Rule set bound to a mesh; also the ambient context for `constrain`."""
+
+    def __init__(self, arch: str, mode: str, mesh, *, multi_pod: bool = False,
+                 seq_shard: bool = False, batch_sharded: bool = True):
+        self.arch, self.mode, self.mesh = arch, mode, mesh
+        self.multi_pod = multi_pod
+        sizes = {a: s for a, s in zip(mesh.axis_names, mesh.devices.shape)}
+        self.param_rules = rules_for(arch, mode, sizes)
+        act = dict(_ACT_PREFS)
+        act["batch"] = (("pod", "data") if multi_pod else "data") \
+            if batch_sharded else None
+        if seq_shard:
+            # sequence-sharded activations take the model axis; anything else
+            # mapped to "model" is dropped by _dedupe at spec-build time
+            act["seq"] = "model"
+        self.act_rules = {k: v for k, v in act.items()
+                          if v is None or self._on_mesh(v)}
+
+    def _on_mesh(self, axis) -> bool:
+        parts = axis if isinstance(axis, tuple) else (axis,)
+        return all(p in self.mesh.axis_names for p in parts)
+
+    def spec(self, *axes) -> P:
+        merged = dict(self.param_rules)
+        merged.update(self.act_rules)
+        return P(*_dedupe(tuple(
+            a if self._on_mesh(a) else None
+            for a in (merged.get(x) for x in axes))))
+
+    def sharding(self, *axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*axes))
+
+    @contextlib.contextmanager
+    def ctx(self):
+        old = _CTX.rules
+        _CTX.rules = self
+        try:
+            yield self
+        finally:
+            _CTX.rules = old
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[AxisRules] = None
+
+
+_CTX = _Ctx()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return _CTX.rules
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint under an active AxisRules ctx; identity
+    otherwise (single-device tests, plain CPU runs)."""
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    if x.ndim != len(axes):
+        return x  # shape diverged from annotation (e.g. squeezed dims): skip
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*axes))
+
+
+def param_shardings(defs, rules: AxisRules):
+    """ParamDef tree -> NamedSharding tree under `rules`."""
+    from repro.models.model import ParamDef
+    return jax.tree.map(lambda d: rules.sharding(*d.axes), defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))

@@ -1,1 +1,3 @@
-from repro.kernels.score.ops import score_from_logits  # noqa: F401
+from repro.kernels.score.ops import (  # noqa: F401
+    autotune_blocks, linear_score, score_from_logits,
+)

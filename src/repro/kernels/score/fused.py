@@ -1,0 +1,180 @@
+"""Fused linear-score Pallas TPU kernel: unembed matmul + score statistics.
+
+`score.py` consumes pre-materialized logits — the caller must first write the
+(N, V) fp32 logits to HBM and the kernel reads them back: 2·N·V·4 bytes of
+HBM traffic that dominates selection cost at V up to 256k. This kernel takes
+the final hidden states (N, D) and the unembed table (V, D) directly: each
+(n_block, v_block) logits tile is produced on the MXU from (n_block, d_block)
+x (v_block, d_block) operand tiles, accumulated over D tiles in VMEM, and
+immediately folded into the online-logsumexp score accumulators — the logits
+matrix never exists in HBM (the Liger/flash-style fused-linear-CE pattern,
+extended with the JL-sketch moments).
+
+HBM traffic: fused reads N·D + V·D (+ tiny outputs) vs. unfused N·V written
++ N·V read + N·D + V·D. At one selection call (N = 32k token rows, D=8k,
+V=128k) that is a ~7.4x reduction (see DESIGN.md §4 for the roofline math).
+
+Per token row the kernel emits: CE loss, ||p - e_y||^2, entropy, p_y, the
+sketch R^T(p - e_y), plus the hidden-side factors ||h||^2 and S^T h needed
+for Titan's grad-norm / Kronecker-sketch statistics — so one pass over the
+weights yields everything importance.py needs.
+
+Grid: (N/nb, V/vb, D/db) with D minor — the logits tile finishes its D
+reduction, is folded into the running softmax moments, then the VMEM tile is
+reused for the next vocab tile. Padded vocab columns (table zero-padded to a
+v_block multiple) are masked to -1e30 inside the kernel via `v_actual`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(h_ref, table_ref, labels_ref, R_ref, S_ref,
+            loss_ref, pnorm2_ref, entropy_ref, py_ref, psk_ref,
+            hn2_ref, hsk_ref,
+            acc_ref, m_ref, s1_ref, s2_ref, sl_ref, ly_ref, rsum_ref, ry_ref,
+            *, nv: int, nd: int, v_blk: int, v_actual: int):
+    j = pl.program_id(1)
+    d = pl.program_id(2)
+
+    @pl.when((j == 0) & (d == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s1_ref[...] = jnp.zeros_like(s1_ref)
+        s2_ref[...] = jnp.zeros_like(s2_ref)
+        sl_ref[...] = jnp.zeros_like(sl_ref)
+        ly_ref[...] = jnp.zeros_like(ly_ref)
+        rsum_ref[...] = jnp.zeros_like(rsum_ref)
+        ry_ref[...] = jnp.zeros_like(ry_ref)
+
+    h = h_ref[...]                                             # (NB, DB)
+
+    @pl.when(j == 0)
+    def _hidden_stats():
+        # ||h||^2 and S^T h accumulate over D tiles; only depend on the row
+        # block, so compute them once per row block (at the first vocab tile)
+        hf = h.astype(jnp.float32)
+        pn2 = jnp.sum(hf * hf, axis=1, keepdims=True)
+        psk = jnp.dot(hf, S_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        # select (not multiply-mask): the d==0 read is uninitialized memory
+        hn2_ref[...] = jnp.where(d == 0, jnp.zeros_like(pn2),
+                                 hn2_ref[...]) + pn2
+        hsk_ref[...] = jnp.where(d == 0, jnp.zeros_like(psk),
+                                 hsk_ref[...]) + psk
+
+    # logits tile accumulates over the D (contraction) tiles on the MXU
+    part = jax.lax.dot_general(
+        h, table_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (NB, VB)
+    if nd > 1:
+        prev = jnp.where(d == 0, jnp.zeros_like(acc_ref), acc_ref[...])
+        acc_ref[...] = prev + part
+    else:
+        acc_ref[...] = part
+
+    @pl.when(d == nd - 1)
+    def _fold():
+        l = acc_ref[...]                                       # (NB, VB) fp32
+        y = labels_ref[...]                                    # (NB, 1)
+        col = j * v_blk + jax.lax.broadcasted_iota(jnp.int32, l.shape, 1)
+        l = jnp.where(col < v_actual, l, NEG)                  # mask V padding
+        is_y = (col == y).astype(jnp.float32)
+        Rt = R_ref[...].astype(jnp.float32)                    # (VB, r)
+
+        ly_ref[...] += jnp.sum(jnp.where(is_y > 0, l, 0.0), axis=1,
+                               keepdims=True)
+        ry_ref[...] += jnp.dot(is_y, Rt, preferred_element_type=jnp.float32)
+
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, jnp.max(l, axis=1, keepdims=True))
+        alpha = jnp.exp(m_old - m_new)
+        e = jnp.exp(l - m_new)
+        s1_old = s1_ref[...]
+        s1_ref[...] = s1_old * alpha + jnp.sum(e, axis=1, keepdims=True)
+        s2_ref[...] = s2_ref[...] * alpha * alpha + jnp.sum(e * e, axis=1,
+                                                            keepdims=True)
+        # sl tracks sum e*(l - m) (max-relative): entropy = log s1 - sl/s1
+        sl_ref[...] = alpha * (sl_ref[...] + (m_old - m_new) * s1_old) + \
+            jnp.sum(e * (l - m_new), axis=1, keepdims=True)
+        rsum_ref[...] = rsum_ref[...] * alpha + jnp.dot(
+            e, Rt, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(j == nv - 1)
+        def _finish():
+            m, s1, s2 = m_ref[...], s1_ref[...], s2_ref[...]
+            sl, ly = sl_ref[...], ly_ref[...]
+            lse = m + jnp.log(s1)
+            py = jnp.exp(ly - lse)
+            loss_ref[...] = lse - ly
+            py_ref[...] = py
+            pnorm2_ref[...] = s2 / (s1 * s1) - 2.0 * py + 1.0
+            entropy_ref[...] = jnp.log(s1) - sl / s1
+            psk_ref[...] = rsum_ref[...] / s1 - ry_ref[...]
+
+
+def linear_score_pallas(h, table, labels, R, S, *, v_actual: int,
+                        n_block: int = 256, v_block: int = 1024,
+                        d_block: int = 512, interpret: bool = False):
+    """h (N,D); table (V,D); labels (N,); R (V,r); S (D,r).
+
+    N/V/D must be multiples of the block sizes (ops.py pads; padded table
+    rows give logit 0, masked to -1e30 via `v_actual`). Returns dict of
+    fp32 stats: loss/pnorm2/entropy/py/hnorm2 (N,), psketch/hsketch (N,r).
+    """
+    N, D = h.shape
+    V = table.shape[0]
+    r = R.shape[1]
+    assert N % n_block == 0 and V % v_block == 0 and D % d_block == 0, (
+        (N, V, D), (n_block, v_block, d_block))
+    assert S.shape == (D, r), (S.shape, D, r)
+    nr, nv, nd = N // n_block, V // v_block, D // d_block
+
+    row = jax.ShapeDtypeStruct((N, 1), jnp.float32)
+    out_sds = [row, row, row, row,                       # loss/pnorm2/ent/py
+               jax.ShapeDtypeStruct((N, r), jnp.float32),   # psketch
+               row,                                         # hnorm2
+               jax.ShapeDtypeStruct((N, r), jnp.float32)]   # hsketch
+    row_spec = pl.BlockSpec((n_block, 1), lambda i, j, d: (i, 0))
+    sk_spec = pl.BlockSpec((n_block, r), lambda i, j, d: (i, 0))
+    out_specs = [row_spec, row_spec, row_spec, row_spec, sk_spec,
+                 row_spec, sk_spec]
+    in_specs = [
+        pl.BlockSpec((n_block, d_block), lambda i, j, d: (i, d)),   # h
+        pl.BlockSpec((v_block, d_block), lambda i, j, d: (j, d)),   # table
+        pl.BlockSpec((n_block, 1), lambda i, j, d: (i, 0)),         # labels
+        pl.BlockSpec((v_block, r), lambda i, j, d: (j, 0)),         # R
+        pl.BlockSpec((d_block, r), lambda i, j, d: (d, 0)),         # S
+    ]
+    scratch = [
+        pltpu.VMEM((n_block, v_block), jnp.float32),  # acc (logits tile)
+        pltpu.VMEM((n_block, 1), jnp.float32),        # m
+        pltpu.VMEM((n_block, 1), jnp.float32),        # s1
+        pltpu.VMEM((n_block, 1), jnp.float32),        # s2
+        pltpu.VMEM((n_block, 1), jnp.float32),        # sl
+        pltpu.VMEM((n_block, 1), jnp.float32),        # ly
+        pltpu.VMEM((n_block, r), jnp.float32),        # rsum
+        pltpu.VMEM((n_block, r), jnp.float32),        # ry
+    ]
+    kernel = functools.partial(_kernel, nv=nv, nd=nd, v_blk=v_block,
+                               v_actual=v_actual)
+    loss, pnorm2, entropy, py, psk, hn2, hsk = pl.pallas_call(
+        kernel,
+        grid=(nr, nv, nd),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_sds,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(h, table, labels[:, None], R, S)
+    return {"loss": loss[:, 0], "pnorm2": pnorm2[:, 0],
+            "entropy": entropy[:, 0], "py": py[:, 0], "psketch": psk,
+            "hnorm2": hn2[:, 0], "hsketch": hsk}

@@ -1,4 +1,8 @@
-"""jit'd wrapper for the fused score statistics with impl dispatch.
+"""jit'd wrappers for the score-statistics kernels with impl dispatch.
+
+Two entry points:
+  score_from_logits(logits, ...)  — pre-materialized (N, V) logits
+  linear_score(h, table, ...)     — fused unembed+score: logits never in HBM
 
 impl:
   "auto"      pallas on TPU, jnp reference elsewhere (CPU dry-runs lower the
@@ -6,6 +10,8 @@ impl:
   "pallas"    force compiled pallas kernel
   "interpret" pallas kernel in interpret mode (CPU validation)
   "ref"       pure-jnp oracle
+  "unfused"   (linear_score only) materialize logits then score_from_logits —
+              the pre-fusion path, kept as fallback and roofline baseline
 """
 from __future__ import annotations
 
@@ -14,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.score.ref import score_ref
+from repro.kernels.score.fused import linear_score_pallas
+from repro.kernels.score.ref import linear_score_ref, score_ref
 from repro.kernels.score.score import score_pallas
 
 
@@ -55,4 +62,94 @@ def score_from_logits(logits, labels, R=None, *, impl: str = "auto",
     out = {k: v[:N] for k, v in out.items()}
     if not want_sketch:
         out.pop("psketch")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fused linear-score: block autotune table + dispatch
+# ---------------------------------------------------------------------------
+
+# Measured-good block sizes keyed on (D, V, r) for the paper-relevant shapes
+# (bench_kernels.py sweep). VMEM budget per step is roughly
+# 4·(v·d + n·v + n·d) bytes — all entries stay under ~12 MB.
+_FUSED_BLOCKS = {
+    (4_096, 32_768, 16): (256, 2048, 512),
+    (4_096, 131_072, 16): (256, 2048, 512),
+    (4_096, 262_144, 16): (256, 2048, 512),
+    (8_192, 131_072, 16): (128, 2048, 1024),
+    (8_192, 262_144, 16): (128, 2048, 1024),
+    (8_192, 128_256, 16): (128, 2048, 1024),
+    (8_192, 256_000, 16): (128, 2048, 1024),
+}
+_VMEM_BUDGET = 12 * 2**20
+
+
+def autotune_blocks(D: int, V: int, r: int, N: int = 1 << 30):
+    """(n_block, v_block, d_block) for the fused kernel: exact table hit on
+    the tuned shapes, VMEM-budget heuristic otherwise."""
+    hit = _FUSED_BLOCKS.get((D, V, r))
+    if hit is None:
+        n_block, v_block, d_block = 256, 2048, 512
+        while 4 * (v_block * d_block + n_block * (v_block + d_block)) > \
+                _VMEM_BUDGET and v_block > 256:
+            v_block //= 2
+    else:
+        n_block, v_block, d_block = hit
+    return (min(n_block, max(8, N)), min(v_block, V), min(d_block, D))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "n_block", "v_block",
+                                             "d_block"))
+def linear_score(h, table, labels, R=None, S=None, *, impl: str = "auto",
+                 n_block: int = 0, v_block: int = 0, d_block: int = 0):
+    """Fused unembed + score statistics. h (N,D) any float dtype; table
+    (V,D); labels (N,) int32 (negative labels are clamped to 0 — mask the
+    outputs, as lm_sequence_stats does); R (V,r) or None; S (D,r) or None.
+
+    Returns dict: loss, pnorm2, entropy, py, hnorm2 (N,) fp32
+    [+ psketch (N,r) if R] [+ hsketch (N,r) if S]. Block sizes of 0 resolve
+    via `autotune_blocks`.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    labels = jnp.maximum(labels, 0)
+    want_psk, want_hsk = R is not None, S is not None
+    if impl == "ref":
+        return linear_score_ref(h, table, labels, R, S)
+
+    N, D = h.shape
+    V = table.shape[0]
+    if impl == "unfused":
+        logits = jnp.einsum("nd,vd->nv", h, table,
+                            preferred_element_type=jnp.float32)
+        out = score_from_logits(logits, labels, R)
+        hf = h.astype(jnp.float32)
+        out["hnorm2"] = jnp.sum(jnp.square(hf), axis=-1)
+        if want_hsk:
+            out["hsketch"] = hf @ S.astype(jnp.float32)
+        return out
+
+    r = (R.shape[1] if want_psk else S.shape[1] if want_hsk else 8)
+    if R is None:
+        R = jnp.zeros((V, r), jnp.float32)
+    if S is None:
+        S = jnp.zeros((D, r), jnp.float32)
+    nb, vb, db = autotune_blocks(D, V, r, N)
+    n_block, v_block, d_block = (n_block or nb, v_block or vb, d_block or db)
+    n_block = min(n_block, max(8, N))
+    v_block, d_block = min(v_block, V), min(d_block, D)
+    hp = _pad_to(_pad_to(h, n_block, 0, 0.0), d_block, 1, 0.0)
+    tp = _pad_to(_pad_to(table, v_block, 0, 0.0), d_block, 1, 0.0)
+    yp = _pad_to(labels, n_block, 0, 0)
+    Rp = _pad_to(R, v_block, 0, 0.0)
+    Sp = _pad_to(S, d_block, 0, 0.0)
+    out = linear_score_pallas(hp, tp, yp, Rp, Sp, v_actual=V,
+                              n_block=n_block, v_block=v_block,
+                              d_block=d_block,
+                              interpret=(impl == "interpret"))
+    out = {k: v[:N] for k, v in out.items()}
+    if not want_psk:
+        out.pop("psketch")
+    if not want_hsk:
+        out.pop("hsketch")
     return out

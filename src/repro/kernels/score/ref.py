@@ -15,6 +15,20 @@ import jax
 import jax.numpy as jnp
 
 
+def linear_score_ref(h, table, labels, R=None, S=None):
+    """Oracle for the fused linear-score kernel: materializes the (N, V)
+    logits (h @ table^T) and reuses `score_ref`, plus the hidden-side
+    factors ||h||^2 and S^T h. CPU/validation only — the whole point of the
+    fused kernel is that production never builds these logits."""
+    hf = h.astype(jnp.float32)
+    logits = hf @ table.astype(jnp.float32).T
+    out = score_ref(logits, labels, R)
+    out["hnorm2"] = jnp.sum(jnp.square(hf), axis=-1)
+    if S is not None:
+        out["hsketch"] = hf @ S.astype(jnp.float32)
+    return out
+
+
 def score_ref(logits, labels, R=None):
     lf = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lf, axis=-1)

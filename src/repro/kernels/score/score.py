@@ -49,10 +49,14 @@ def _kernel(logits_ref, labels_ref, R_ref,
     m_new = jnp.maximum(m_old, jnp.max(l, axis=1, keepdims=True))
     alpha = jnp.exp(m_old - m_new)
     e = jnp.exp(l - m_new)
-    s1_ref[...] = s1_ref[...] * alpha + jnp.sum(e, axis=1, keepdims=True)
+    s1_old = s1_ref[...]
+    s1_ref[...] = s1_old * alpha + jnp.sum(e, axis=1, keepdims=True)
     s2_ref[...] = s2_ref[...] * alpha * alpha + jnp.sum(e * e, axis=1,
                                                         keepdims=True)
-    sl_ref[...] = sl_ref[...] * alpha + jnp.sum(e * l, axis=1, keepdims=True)
+    # sl tracks sum e*(l - m): max-relative, so entropy = log s1 - sl/s1
+    # avoids the lse - (sum p*l) cancellation at large |l|
+    sl_ref[...] = alpha * (sl_ref[...] + (m_old - m_new) * s1_old) + \
+        jnp.sum(e * (l - m_new), axis=1, keepdims=True)
     rsum_ref[...] = rsum_ref[...] * alpha + jnp.dot(
         e, Rt, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
@@ -66,7 +70,7 @@ def _kernel(logits_ref, labels_ref, R_ref,
         loss_ref[...] = lse - ly
         py_ref[...] = py
         pnorm2_ref[...] = s2 / (s1 * s1) - 2.0 * py + 1.0
-        entropy_ref[...] = lse - sl / s1
+        entropy_ref[...] = jnp.log(s1) - sl / s1
         psk_ref[...] = rsum_ref[...] / s1 - ry_ref[...]
 
 

@@ -162,7 +162,7 @@ def _titan_select_probe_cost(cfg, shape, rules, ttn: TitanConfig
     model = build_model(cfg)
     B = shape.global_batch
     W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
-    f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+    f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
     noop = lambda state, batch: (state, {})
     step = make_titan_step(features_fn=f_fn, stats_fn=s_fn, train_step_fn=noop,
                            params_of=lambda s: s, batch_size=B,

@@ -227,7 +227,7 @@ def _lower_titan(model, tcfg, shape: ShapeConfig, rules: AxisRules, nm: int,
     B = shape.global_batch
     W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
     train_step = make_train_step(model, tcfg, n_micro=nm)
-    f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+    f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
     step = make_titan_step(features_fn=f_fn, stats_fn=s_fn,
                            train_step_fn=train_step,
                            params_of=lambda s: s.params,

@@ -28,7 +28,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         return jax.make_mesh(
             shape, axes, devices=devs[:n],
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:  # older jax without axis_types/devices kwargs
+    except (TypeError, AttributeError):  # older jax without axis_types
         return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 

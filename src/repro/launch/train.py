@@ -81,7 +81,7 @@ def main(argv=None):
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
                           score_seq_len=min(args.seq, 1024), sketch_dim=8)
-        f_fn, s_fn = lm_hooks(model, ttn, impl="auto")
+        f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
         tstep = jax.jit(make_titan_step(
             features_fn=f_fn, stats_fn=s_fn, train_step_fn=train_step,
             params_of=lambda s: s.params, batch_size=args.batch,

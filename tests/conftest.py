@@ -10,6 +10,47 @@ import numpy as np
 import pytest
 
 
+def hypothesis_stubs():
+    """(given, settings, st) — real hypothesis when installed, else stubs
+    that mark the property tests skipped (the image lacks hypothesis)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def given(*a, **k):
+            return lambda f: pytest.mark.skip(
+                reason="hypothesis not installed")(f)
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        class _St:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        return given, settings, _St()
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--bench-smoke", action="store_true", default=False,
+        help="run the kernel-benchmark smoke test (writes BENCH_kernels.json)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "bench_smoke: benchmark smoke tests (need --bench-smoke)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--bench-smoke"):
+        return
+    skip = pytest.mark.skip(reason="needs --bench-smoke")
+    for item in items:
+        if "bench_smoke" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

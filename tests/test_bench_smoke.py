@@ -1,0 +1,35 @@
+"""Benchmark-harness smoke test (opt-in: ``pytest --bench-smoke``).
+
+Runs the kernel micro-benchmarks at tiny shapes and checks the
+machine-readable ``BENCH_kernels.json`` contract that tracks the perf
+trajectory across PRs."""
+import json
+import os
+
+import pytest
+
+pytestmark = pytest.mark.bench_smoke
+
+
+def test_bench_kernels_smoke_writes_json(tmp_path):
+    from benchmarks import bench_kernels
+
+    path = os.path.join(str(tmp_path), "BENCH_kernels.json")
+    rows = bench_kernels.main(smoke=True, json_path=path)
+    assert rows, "benchmark produced no rows"
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "bench_kernels/v1"
+    kernels = {r["kernel"] for r in payload["kernels"]}
+    assert {"linear-score-fused", "linear-score-unfused",
+            "score", "repdiv"} <= kernels
+    for r in payload["kernels"]:
+        assert {"kernel", "N", "V_or_D", "ns_per_op", "gbps"} <= set(r)
+    fused = [r for r in payload["kernels"]
+             if r["kernel"] == "linear-score-fused"]
+    # acceptance: >= 5x analytic HBM bytes-moved reduction from fusion
+    assert all(r["bytes_ratio_vs_unfused"] >= 5.0 for r in fused), fused
+    # interpret-mode kernels agree with the oracle
+    errs = [r["gbps"] for r in payload["kernels"]
+            if r["kernel"].endswith("interpret-maxerr")]
+    assert errs and all(e < 1e-4 for e in errs), errs

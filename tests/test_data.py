@@ -55,3 +55,18 @@ def test_file_backed_stream_roundtrip(tmp_path):
     assert w["tokens"].shape == (4, 8)
     w2 = fs.next_window(2)
     assert w2["tokens"].shape == (2, 8)
+
+
+def test_save_stream_shard_atomic_roundtrip(tmp_path):
+    """save_stream_shard must write exactly `path` (no stray .tmp/.npz
+    leftovers) and the values must survive the round trip bit-exactly."""
+    s = GaussianMixtureStream(in_dim=6, n_classes=3, seed=9)
+    w = s.next_window(16)
+    p = os.path.join(str(tmp_path), "w0.npz")
+    save_stream_shard(p, w)
+    assert sorted(os.listdir(str(tmp_path))) == ["w0.npz"]
+    fs = FileBackedStream((p,))
+    back = fs.next_window(16)
+    assert sorted(back) == sorted(w)
+    for k in w:
+        np.testing.assert_array_equal(back[k], w[k])

@@ -3,7 +3,11 @@ and JL-sketch convergence to exact gradient inner products."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from conftest import hypothesis_stubs
+
+given, settings, st = hypothesis_stubs()
 
 from repro.core.importance import (exact_head_stats, lm_sequence_stats,
                                    sketch_matrices)
@@ -99,3 +103,26 @@ def test_lm_stats_respect_label_mask():
                              impl="ref")
     assert not np.allclose(np.asarray(full["loss"]), np.asarray(half["loss"]))
     assert np.isfinite(np.asarray(half["gnorm"])).all()
+
+
+def test_lm_sequence_stats_fused_matches_unfused():
+    """The fused linear-score path (interpret-mode pallas) must agree with
+    the materialize-then-score fallback and the jnp oracle."""
+    cfg = replace(get_config("qwen2-72b-reduced"), param_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rs = np.random.RandomState(5)
+    B, T = 3, 64
+    toks = jnp.asarray(rs.randint(0, cfg.vocab, (B, T)).astype(np.int32))
+    labels = jnp.asarray(rs.randint(0, cfg.vocab, (B, T)).astype(np.int32))
+    labels = labels.at[1, T // 2:].set(-1)   # ragged: one padded sequence
+    h = model.final_hidden(params, {"tokens": toks})
+    outs = {impl: lm_sequence_stats(cfg, params, h, labels, sketch_dim=4,
+                                    impl=impl, n_block=32, v_block=128,
+                                    d_block=32)
+            for impl in ("ref", "unfused", "interpret")}
+    for impl in ("unfused", "interpret"):
+        for k in outs["ref"]:
+            np.testing.assert_allclose(
+                np.asarray(outs[impl][k]), np.asarray(outs["ref"][k]),
+                rtol=1e-4, atol=1e-4, err_msg=f"{impl}:{k}")

@@ -4,12 +4,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_stubs
+
+given, settings, st = hypothesis_stubs()
 
 from repro.kernels.repdiv.ops import repdiv_scores
 from repro.kernels.repdiv.ref import repdiv_ref
-from repro.kernels.score.ops import score_from_logits
-from repro.kernels.score.ref import score_ref
+from repro.kernels.score.ops import (autotune_blocks, linear_score,
+                                     score_from_logits)
+from repro.kernels.score.ref import linear_score_ref, score_ref
 
 SHAPES_SCORE = [(8, 128, 4), (64, 1000, 16), (37, 2048, 8), (256, 4096, 16),
                 (5, 63, 2)]
@@ -97,3 +101,100 @@ def test_score_kernel_huge_vocab_tiling():
     for k in ["loss", "pnorm2", "entropy", "py"]:
         np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
                                    rtol=1e-4, atol=1e-5, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Fused linear-score kernel (unembed matmul fused into the score pass)
+# ---------------------------------------------------------------------------
+
+# deliberately ragged: N, V, D all indivisible by the tile sizes below
+SHAPES_LINEAR = [(32, 1000, 96, 8), (16, 4096, 64, 16), (37, 2049, 100, 4),
+                 (8, 63, 17, 2), (64, 513, 33, 16)]
+
+
+@pytest.mark.parametrize("N,V,D,r", SHAPES_LINEAR)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_linear_score_matches_oracle(N, V, D, r, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(N * V + D + r), 5)
+    h = jax.random.normal(ks[0], (N, D), jnp.float32).astype(dtype)
+    table = (jax.random.normal(ks[1], (V, D), jnp.float32) /
+             np.sqrt(D)).astype(dtype)
+    labels = jax.random.randint(ks[2], (N,), 0, V)
+    R = jax.random.normal(ks[3], (V, r), jnp.float32) / np.sqrt(r)
+    S = jax.random.normal(ks[4], (D, r), jnp.float32) / np.sqrt(r)
+    ref = linear_score_ref(h, table, labels, R, S)
+    out = linear_score(h, table, labels, R, S, impl="interpret",
+                       n_block=16, v_block=512, d_block=32)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    for k in ["loss", "pnorm2", "entropy", "py", "psketch",
+              "hnorm2", "hsketch"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=tol, atol=tol * max(1.0, D / 8),
+                                   err_msg=k)
+
+
+def test_linear_score_matches_materialized_path():
+    """Fused kernel == einsum-then-score_from_logits on the same inputs."""
+    N, V, D, r = 48, 3000, 80, 8
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    h = jax.random.normal(ks[0], (N, D), jnp.float32)
+    table = jax.random.normal(ks[1], (V, D), jnp.float32) / np.sqrt(D)
+    labels = jax.random.randint(ks[2], (N,), 0, V)
+    R = jax.random.normal(ks[3], (V, r), jnp.float32) / np.sqrt(r)
+    logits = jnp.einsum("nd,vd->nv", h, table,
+                        preferred_element_type=jnp.float32)
+    base = score_from_logits(logits, labels, R, impl="interpret",
+                             n_block=16, v_block=512)
+    fused = linear_score(h, table, labels, R, impl="interpret",
+                         n_block=16, v_block=512, d_block=16)
+    for k in ["loss", "pnorm2", "entropy", "py", "psketch"]:
+        np.testing.assert_allclose(np.asarray(fused[k]), np.asarray(base[k]),
+                                   rtol=2e-4, atol=2e-4, err_msg=k)
+    unfused = linear_score(h, table, labels, R, impl="unfused")
+    for k in ["loss", "pnorm2", "entropy", "py", "psketch"]:
+        np.testing.assert_allclose(np.asarray(unfused[k]),
+                                   np.asarray(base[k]),
+                                   rtol=2e-4, atol=2e-4, err_msg=k)
+
+
+def test_linear_score_negative_labels_clamped():
+    """-1-padded labels must not crash or produce NaN (masking is the
+    caller's contract; the kernel clamps to class 0)."""
+    N, V, D = 20, 300, 48
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    h = jax.random.normal(ks[0], (N, D), jnp.float32)
+    table = jax.random.normal(ks[1], (V, D), jnp.float32) / 7.0
+    y = jax.random.randint(ks[2], (N,), -1, V)
+    ref = linear_score_ref(h, table, jnp.maximum(y, 0))
+    out = linear_score(h, table, y, impl="interpret",
+                       n_block=8, v_block=128, d_block=16)
+    for k in ["loss", "pnorm2", "entropy", "py", "hnorm2"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-4, atol=1e-4, err_msg=k)
+        assert np.isfinite(np.asarray(out[k])).all(), k
+
+
+def test_linear_score_huge_vocab_tiling():
+    """Vocab and hidden dim far larger than one tile: the D-accumulated
+    logits + online logsumexp must stay exact (incl. V padding mask)."""
+    N, V, D = 16, 50_000, 96
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    h = jax.random.normal(ks[0], (N, D)) * 3
+    table = jax.random.normal(ks[1], (V, D)) / np.sqrt(D) * 3
+    labels = jax.random.randint(ks[2], (N,), 0, V)
+    ref = linear_score_ref(h, table, labels)
+    out = linear_score(h, table, labels, impl="interpret",
+                       n_block=16, v_block=2048, d_block=32)
+    for k in ["loss", "pnorm2", "entropy", "py"]:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=2e-4, atol=2e-5, err_msg=k)
+
+
+def test_autotune_blocks_fit_vmem_and_divide():
+    for (D, V, r) in [(4096, 32_768, 16), (8192, 131_072, 16),
+                      (8192, 262_144, 16), (1000, 7777, 4), (64, 512, 8)]:
+        nb, vb, db = autotune_blocks(D, V, r)
+        assert nb >= 8 and vb >= 1 and db >= 1
+        assert vb <= V and db <= D
+        vmem = 4 * (vb * db + nb * (vb + db))
+        assert vmem <= 14 * 2**20, (D, V, r, vmem)

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_stubs
+
+given, settings, st = hypothesis_stubs()
 
 from repro.models import layers as L
 

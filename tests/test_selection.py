@@ -86,3 +86,53 @@ def test_class_moments_jensen():
     # I(y) well-defined (Jensen: (E||g||)^2 >= ||Eg||^2)
     assert np.isfinite(np.asarray(mom["I"])).all()
     assert (np.asarray(mom["I"]) >= 0).all()
+
+
+def test_segment_sampler_parity_with_dense():
+    """The segment inverse-CDF sampler must match the dense (B,N) slot-logits
+    sampler distributionally: same class discipline, same within-class
+    marginals, same unbiased-estimator property."""
+    stats, C = _stats(seed=7, N=120)
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool).at[5:15].set(False)
+    dom = np.asarray(stats["domain"])
+    B = 20
+
+    counts = {True: np.zeros(N), False: np.zeros(N)}
+    for dense in (True, False):
+        for t in range(400):
+            idx, w, diag = cis_select(jax.random.PRNGKey(t), stats, valid, B,
+                                      C, dense_slots=dense)
+            idx, w = np.asarray(idx), np.asarray(w)
+            # class discipline: every positively-weighted pick belongs to its
+            # slot's class and is a valid candidate
+            slot_class = np.repeat(np.arange(C), np.asarray(diag["alloc"]))
+            ok = w > 0
+            assert (dom[idx[ok]] == slot_class[ok]).all()
+            assert np.asarray(valid)[idx[ok]].all()
+            np.add.at(counts[dense], idx[ok], 1)
+    # within-class selection frequencies agree between the two samplers
+    for c in range(C):
+        m = (dom == c) & np.asarray(valid)
+        if counts[True][m].sum() < 50:
+            continue
+        fa = counts[True][m] / counts[True][m].sum()
+        fb = counts[False][m] / counts[False][m].sum()
+        np.testing.assert_allclose(fa, fb, atol=0.05)
+
+
+def test_segment_sampler_unbiased():
+    """mean_i(w_i l_i) stays an unbiased candidate-mean-loss estimate under
+    the segment sampler (same property the dense path is tested for)."""
+    stats, C = _stats(seed=13, N=80)
+    N = stats["gnorm"].shape[0]
+    valid = jnp.ones((N,), bool)
+    loss = np.asarray(stats["loss"])
+    target = loss.mean()
+    ests = []
+    for t in range(600):
+        idx, w, _ = cis_select(jax.random.PRNGKey(t), stats, valid, 12, C,
+                               dense_slots=False)
+        ests.append(float(np.mean(np.asarray(w) * loss[np.asarray(idx)])))
+    est = np.mean(ests)
+    assert abs(est - target) < 0.06 * max(target, 1e-6) + 0.01, (est, target)

@@ -11,7 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_stubs
+
+given, settings, st = hypothesis_stubs()
 
 from repro.core.selection import allocate
 from repro.core.theory import (cis_allocation, decomposition, is_allocation,
