@@ -1,6 +1,7 @@
 """Fig 10: federated learning — 50 non-IID clients (5 of 6 classes each),
-20% participation, 3 local iterations; Titan selection on-device vs RS.
-Reports rounds-to-target and final global accuracy."""
+20% participation, 3 local iterations; on-device selection through the
+TitanEngine (policy titan-cis) vs RS. Reports rounds-to-target and final
+global accuracy."""
 from __future__ import annotations
 
 import jax
@@ -8,11 +9,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TitanConfig
-from repro.core.pipeline import edge_hooks, make_titan_step, titan_init
+from repro.core.engine import TitanEngine
 from repro.data.stream import GaussianMixtureStream
-from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_features,
-                               mlp_head_logits, mlp_init, mlp_loss,
-                               mlp_penultimate)
+from repro.hooks import har_hooks
+from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_init,
+                               mlp_loss)
 
 
 def run(method="titan", n_clients=50, rounds=40, seed=0, B=10, W=50, M=20,
@@ -40,14 +41,9 @@ def run(method="titan", n_clients=50, rounds=40, seed=0, B=10, W=50, M=20,
         loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
         return jax.tree.map(lambda a, gg: a - 0.08 * gg, p, g), {"loss": loss}
 
-    f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
-                            penultimate=mlp_penultimate,
-                            head_logits=mlp_head_logits)
-    tcfg = TitanConfig()
-    tstep = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
-                                    train_step_fn=train,
-                                    params_of=lambda s: s, batch_size=B,
-                                    n_classes=C, cfg=tcfg))
+    engine = TitanEngine.from_config(
+        TitanConfig(), hooks=har_hooks(ecfg), train_step_fn=train,
+        params_of=lambda s: s, batch_size=B, n_classes=C, buffer_size=M)
     plain = jax.jit(train)
     accs = []
     for rnd in range(rounds):
@@ -59,12 +55,12 @@ def run(method="titan", n_clients=50, rounds=40, seed=0, B=10, W=50, M=20,
             if method == "titan":
                 w0 = {k: jnp.asarray(v) for k, v in
                       client_streams[c].next_window(W).items()}
-                ts = titan_init(jax.random.PRNGKey(seed + c), w0,
-                                f_fn(p, w0), B, M, C)
+                es = engine.init(jax.random.PRNGKey(seed + c), p, w0)
                 for _ in range(local_iters):
                     w = {k: jnp.asarray(v) for k, v in
                          client_streams[c].next_window(W).items()}
-                    p, ts, _ = tstep(p, ts, w)
+                    es, _ = engine.step(es, w)
+                p = es.train
             else:
                 for _ in range(local_iters):
                     w = client_streams[c].next_window(W)

@@ -13,10 +13,10 @@ import numpy as np
 from benchmarks.common import default_task
 from repro.configs.base import TitanConfig
 from repro.core.baselines import titan_cis
-from repro.core.pipeline import edge_hooks, make_titan_step, titan_init
+from repro.core.engine import TitanEngine
 from repro.data.stream import GaussianMixtureStream
-from repro.models.edge import (mlp_features, mlp_head_logits, mlp_init,
-                               mlp_loss, mlp_penultimate)
+from repro.hooks import har_hooks
+from repro.models.edge import mlp_init
 from benchmarks.common import _make_train, _window_stats
 
 
@@ -54,19 +54,15 @@ def run(seed=0):
 
     t_seq = _timeit(jax.jit(sequential), params, w)
 
-    f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
-                            penultimate=mlp_penultimate,
-                            head_logits=mlp_head_logits)
-    tcfg = TitanConfig()
-    step = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
-                                   train_step_fn=train, params_of=lambda s: s,
-                                   batch_size=task.B, n_classes=C, cfg=tcfg))
-    ts = titan_init(jax.random.PRNGKey(1), w, f_fn(params, w), task.B,
-                    task.M, C)
-    t_fused = _timeit(lambda p, t, ww: step(p, t, ww)[0], params, ts, w)
+    engine = TitanEngine.from_config(
+        TitanConfig(), hooks=har_hooks(ecfg), train_step_fn=train,
+        params_of=lambda s: s, batch_size=task.B, n_classes=C,
+        buffer_size=task.M)
+    estate = engine.init(jax.random.PRNGKey(1), params, w)
+    t_fused = _timeit(lambda e, ww: engine.step(e, ww)[0], estate, w)
 
     buf_bytes = sum(x.size * x.dtype.itemsize
-                    for x in jax.tree.leaves(ts.buffer))
+                    for x in jax.tree.leaves(estate.buffer))
     return {"train_only_ms": t_train * 1e3, "sequential_ms": t_seq * 1e3,
             "fused_pipeline_ms": t_fused * 1e3,
             "pipeline_overhead_pct":

@@ -1,0 +1,108 @@
+"""Policy micro-benchmarks: per-policy selection overhead vs. random.
+
+Times every registered ``SelectionPolicy``'s jitted ``select`` over synthetic
+candidate stats at fixed window sizes (the paper's stream-velocity axis) and
+reports each policy's overhead relative to ``rs`` at the same window — the
+"does smarter selection pay for itself?" number that rides alongside the
+accuracy benchmarks.
+
+Writes machine-readable ``BENCH_policies.json`` (schema ``bench_policies/v1``:
+per-policy us/call + overhead_vs_rs per window) so the selection-cost
+trajectory is tracked across PRs, mirroring ``bench_kernels.py`` /
+``BENCH_kernels.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TitanConfig
+from repro.core.registry import PolicySpecs, available_policies, get_policy
+
+C, D, BATCH = 6, 32, 10   # paper's edge setting: |B|=10
+
+
+def _stats(N: int, seed: int = 0):
+    rs = np.random.RandomState(seed)
+    return {
+        "loss": jnp.asarray(rs.rand(N).astype(np.float32)),
+        "gnorm": jnp.asarray(rs.rand(N).astype(np.float32) + 0.1),
+        "entropy": jnp.asarray(rs.rand(N).astype(np.float32)),
+        "sketch": jnp.asarray(rs.randn(N, 8).astype(np.float32)),
+        "features": jnp.asarray(rs.randn(N, D).astype(np.float32)),
+        "domain": jnp.asarray(rs.randint(0, C, N).astype(np.int32)),
+    }
+
+
+def _time(fn, *args, n=30):
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return (time.perf_counter() - t0) / n
+
+
+def run(fast: bool = True, *, smoke: bool = False):
+    windows = [128] if smoke else ([256, 1024] if fast else [256, 1024, 4096])
+    cfg = TitanConfig()
+    rows = []
+    for W in windows:
+        stats = _stats(W)
+        valid = jnp.ones((W,), bool)
+        per_policy = {}
+        for name in available_policies():
+            pol = get_policy(name, cfg)
+            pstate = pol.init_state(PolicySpecs(n_classes=C, feat_dim=D,
+                                                batch_size=BATCH))
+            sel = jax.jit(lambda k, st, s, v, _p=pol:
+                          _p.select(k, st, s, v, BATCH))
+            dt = _time(sel, jax.random.PRNGKey(0), pstate, stats, valid)
+            per_policy[name] = dt
+        t_rs = per_policy["rs"]
+        for name, dt in per_policy.items():
+            rows.append({"policy": name, "window": W,
+                         "us_per_call": dt * 1e6,
+                         "overhead_vs_rs": dt / max(t_rs, 1e-12)})
+    return rows
+
+
+def write_json(rows, path: str = "BENCH_policies.json"):
+    """Normalize rows into the cross-PR selection-cost tracking schema."""
+    payload = {
+        "schema": "bench_policies/v1",
+        "backend": jax.default_backend(),
+        "batch": BATCH,
+        "policies": [
+            {"policy": r["policy"], "window": r["window"],
+             "us_per_call": r["us_per_call"],
+             "overhead_vs_rs": r["overhead_vs_rs"]}
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(fast: bool = True, *, smoke: bool = False,
+         json_path: str = "BENCH_policies.json"):
+    rows = run(fast, smoke=smoke)
+    print("# Policy selection-overhead micro-benchmarks")
+    print(f"{'policy':12s} {'window':>7s} {'us/call':>10s} {'x vs rs':>8s}")
+    for r in rows:
+        print(f"{r['policy']:12s} {r['window']:7d} {r['us_per_call']:10.1f} "
+              f"{r['overhead_vs_rs']:8.2f}")
+    if json_path:
+        write_json(rows, json_path)
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

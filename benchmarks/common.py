@@ -1,10 +1,13 @@
 """Shared benchmark harness: the paper's edge training protocol.
 
 Stream v samples/round -> select |B| -> one SGD round; measure test accuracy,
-per-round wall time, and per-round selection time. Methods: the 7 baselines
-(core/baselines.py) + Titan (two-stage pipeline) + C-IS without the filter.
-The default task mirrors the paper's HAR setting (MLP on a class-conditioned
-feature stream with heterogeneous class difficulty).
+per-round wall time, and per-round selection time. Methods come from the
+SelectionPolicy registry: the 7 baselines + "cis" (C-IS without the filter,
+sequential select-then-train so selection time is measurable) + "titan" (the
+full two-stage pipeline through the TitanEngine facade — selection
+co-executes with the update, no separate select phase). The default task
+mirrors the paper's HAR setting (MLP on a class-conditioned feature stream
+with heterogeneous class difficulty).
 """
 from __future__ import annotations
 
@@ -17,10 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import TitanConfig
-from repro.core.baselines import STRATEGIES, titan_cis
+from repro.core.engine import TitanEngine
 from repro.core.importance import exact_head_stats
-from repro.core.pipeline import edge_hooks, make_titan_step, titan_init
+from repro.core.registry import PolicySpecs, get_policy
 from repro.data.stream import GaussianMixtureStream
+from repro.hooks import har_hooks
 from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_features,
                                mlp_head_logits, mlp_init, mlp_loss,
                                mlp_penultimate)
@@ -81,47 +85,44 @@ def run_method(method: str, task: EdgeTask, rounds: int, *, seed=0,
     round_times: List[float] = []
 
     if method == "titan":
-        f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
-                                penultimate=mlp_penultimate,
-                                head_logits=mlp_head_logits)
-        step = jax.jit(make_titan_step(
-            features_fn=f_fn, stats_fn=s_fn, train_step_fn=train,
-            params_of=lambda s: s, batch_size=task.B, n_classes=C, cfg=tcfg))
+        engine = TitanEngine.from_config(
+            tcfg, hooks=har_hooks(ecfg, filter_blocks=tcfg.filter_blocks),
+            train_step_fn=train, params_of=lambda s: s, batch_size=task.B,
+            n_classes=C, buffer_size=task.M)
         w0 = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
-        ts = titan_init(jax.random.PRNGKey(seed + 1), w0, f_fn(params, w0),
-                        task.B, task.M, C)
+        estate = engine.init(jax.random.PRNGKey(seed + 1), params, w0)
         for r in range(rounds):
             w = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
             t0 = time.perf_counter()
-            params, ts, m = step(params, ts, w)
+            estate, m = engine.step(estate, w)
             jax.block_until_ready(m["loss"])
             dt = time.perf_counter() - t0
             if r >= 3:
                 round_times.append(dt)
                 sel_times.append(0.0)  # co-executed: no separate select phase
             if (r + 1) % eval_every == 0:
-                accs.append(float(mlp_accuracy(ecfg, params, xt, yt)))
+                accs.append(float(mlp_accuracy(ecfg, estate.train, xt, yt)))
     else:
         stats_fn = jax.jit(lambda p, w: _window_stats(ecfg, p, w))
+        feats_fn = jax.jit(lambda p, w: mlp_features(ecfg, p, w["x"], 1))
         tstep = jax.jit(train)
-        if method == "cis":
-            sel = jax.jit(lambda k, s, v: titan_cis(k, s, v, task.B,
-                                                    n_classes=C))
-        else:
-            strat = STRATEGIES[method]
-            sel = jax.jit(lambda k, s, v: strat(k, s, v, task.B))
+        pol = get_policy("titan-cis" if method == "cis" else method, tcfg)
+        pstate = pol.init_state(PolicySpecs(n_classes=C, feat_dim=ecfg.hidden[0],
+                                            batch_size=task.B))
+        sel = jax.jit(lambda k, st, s, v: pol.select(k, st, s, v, task.B))
         for r in range(rounds):
             w = {k: jnp.asarray(v) for k, v in stream.next_window(task.W).items()}
             t0 = time.perf_counter()
-            if method == "rs":
-                stats = {"domain": w["domain"]}  # RS needs no scoring pass
-                key = jax.random.PRNGKey(seed * 7919 + r)
-                idx = jax.random.choice(key, task.W, (task.B,), replace=False)
-                wts = jnp.ones((task.B,), jnp.float32)
-            else:
+            key = jax.random.PRNGKey(seed * 7919 + r)
+            if pol.needs_stats:
                 stats = stats_fn(params, w)
-                key = jax.random.PRNGKey(seed * 7919 + r)
-                idx, wts = sel(key, stats, jnp.ones((task.W,), bool))
+            elif pol.needs_features:   # ocs/camel: feature pass only
+                stats = {"features": feats_fn(params, w),
+                         "domain": w["domain"]}
+            else:
+                stats = {"domain": w["domain"]}  # RS needs no scoring pass
+            idx, wts, pstate = sel(key, pstate, stats,
+                                   jnp.ones((task.W,), bool))
             jax.block_until_ready(idx)
             t1 = time.perf_counter()
             batch = {"x": w["x"][idx], "y": w["y"][idx], "weights": wts}

@@ -11,7 +11,8 @@ def main() -> None:
     fast = "--full" not in sys.argv
     from benchmarks import (bench_fig2, bench_fig5a, bench_fig5b, bench_fig5c,
                             bench_fig6, bench_fig8, bench_fig9, bench_fig10,
-                            bench_fig11, bench_kernels, bench_table1)
+                            bench_fig11, bench_kernels, bench_policies,
+                            bench_table1)
     csv = []
 
     def run(name, fn):
@@ -66,6 +67,12 @@ def main() -> None:
     best = [r for r in out if r["method"] == "titan"]
     csv.append(("fig11_titan_label40_acc", dt,
                 f"{[r for r in best if r['noise']=='label40'][0]['final_acc']:.3f}"))
+
+    print("=" * 70)
+    name, dt, out = run("policies", bench_policies.main)  # writes BENCH_policies.json
+    cis = [r for r in out if r["policy"] == "titan-cis"][-1]
+    csv.append(("policy_titan_cis_overhead_x", dt,
+                f"{cis['overhead_vs_rs']:.2f}"))
 
     print("=" * 70)
     name, dt, out = run("kernels", bench_kernels.main)   # writes BENCH_kernels.json

@@ -5,11 +5,16 @@
 Mirrors the paper's HAR setup (MLP over windowed IMU features, 6 activity
 classes, stream velocity v=100, batch 10, buffer 30) and compares Titan
 against random selection and classic importance sampling under the identical
-data budget — the Table-1 experiment at example scale.
+data budget — the Table-1 experiment at example scale. Every method runs
+through the same ``TitanEngine``; only the ``policy`` registry key changes
+(rs/is use a window-sized buffer, i.e. they select straight from the
+stream window).
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 import time
 
@@ -18,13 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import TitanConfig
-from repro.core.baselines import importance_sampling
-from repro.core.importance import exact_head_stats
-from repro.core.pipeline import edge_hooks, make_titan_step, titan_init
+from repro.core.engine import TitanEngine
 from repro.data.stream import GaussianMixtureStream
-from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_features,
-                               mlp_head_logits, mlp_init, mlp_loss,
-                               mlp_penultimate)
+from repro.hooks import har_hooks
+from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_init,
+                               mlp_loss)
 
 C, IN, B, W, M, ROUNDS, LR = 6, 90, 10, 100, 30, 300, 0.08
 
@@ -38,66 +41,38 @@ def make_stream():
 
 def main():
     ecfg = EdgeMLPConfig(in_dim=IN, hidden=(256, 128), n_classes=C)
-    stream = make_stream()
-    xt, yt = stream.test_set(3000)
+    stream0 = make_stream()
+    xt, yt = stream0.test_set(3000)
     xt, yt = jnp.asarray(xt), jnp.asarray(yt)
 
     def train(p, b):
         loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
         return jax.tree.map(lambda a, gg: a - LR * gg, p, g), {"loss": loss}
 
+    hooks = har_hooks(ecfg)
     results = {}
-
-    # ---- Titan ----
-    f_fn, s_fn = edge_hooks(ecfg, features=mlp_features,
-                            penultimate=mlp_penultimate,
-                            head_logits=mlp_head_logits)
-    step = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
-                                   train_step_fn=train, params_of=lambda s: s,
-                                   batch_size=B, n_classes=C,
-                                   cfg=TitanConfig()))
-    params = mlp_init(ecfg, jax.random.PRNGKey(0))
-    w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-    ts = titan_init(jax.random.PRNGKey(1), w0, f_fn(params, w0), B, M, C)
-    t0 = time.perf_counter()
-    curve = []
-    for r in range(ROUNDS):
-        w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-        params, ts, _ = step(params, ts, w)
-        if (r + 1) % 25 == 0:
-            curve.append(float(mlp_accuracy(ecfg, params, xt, yt)))
-    results["titan"] = (curve, time.perf_counter() - t0)
-
-    # ---- RS / IS with the same budget ----
-    for method in ("rs", "is"):
-        stream2 = make_stream()
+    # titan selects from a 30-deep Rep+Div-admitted buffer; the baselines get
+    # a window-sized buffer (select from the raw stream window)
+    for policy, bufsize in (("titan-cis", M), ("rs", W), ("is", W)):
+        engine = TitanEngine.from_config(
+            TitanConfig(policy=policy), hooks=hooks, train_step_fn=train,
+            batch_size=B, n_classes=C, buffer_size=bufsize)
+        stream = make_stream()
         params = mlp_init(ecfg, jax.random.PRNGKey(0))
-        tstep = jax.jit(train)
-        rs = np.random.RandomState(0)
+        w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+        st = engine.init(jax.random.PRNGKey(1), params, w0)
         t0 = time.perf_counter()
         curve = []
         for r in range(ROUNDS):
-            w = stream2.next_window(W)
-            if method == "rs":
-                sel = rs.choice(W, B, replace=False)
-                batch = {"x": jnp.asarray(w["x"][sel]),
-                         "y": jnp.asarray(w["y"][sel])}
-            else:
-                x, y = jnp.asarray(w["x"]), jnp.asarray(w["y"])
-                h = mlp_penultimate(ecfg, params, x)
-                stats = exact_head_stats(mlp_head_logits(ecfg, params, h),
-                                         y, h)
-                idx, wts = importance_sampling(
-                    jax.random.PRNGKey(r), stats, jnp.ones((W,), bool), B)
-                batch = {"x": x[idx], "y": y[idx], "weights": wts}
-            params, _ = tstep(params, batch)
+            w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+            st, _ = engine.step(st, w)
             if (r + 1) % 25 == 0:
-                curve.append(float(mlp_accuracy(ecfg, params, xt, yt)))
-        results[method] = (curve, time.perf_counter() - t0)
+                curve.append(float(mlp_accuracy(ecfg, st.train, xt, yt)))
+        results[policy] = (curve, time.perf_counter() - t0)
 
-    print(f"\n{'method':8s} {'final_acc':>9s} {'wall_s':>8s}  accuracy curve")
+    print(f"\n{'method':10s} {'final_acc':>9s} {'wall_s':>8s}  accuracy curve")
     for m, (curve, wall) in results.items():
-        print(f"{m:8s} {curve[-1]:9.3f} {wall:8.1f}  "
+        print(f"{m:10s} {curve[-1]:9.3f} {wall:8.1f}  "
               + " ".join(f"{a:.2f}" for a in curve))
 
 

@@ -1,15 +1,18 @@
 """Federated learning with on-device Titan selection (paper Appendix B).
 
-    PYTHONPATH=src python examples/federated.py [--rounds 40]
+    python examples/federated.py [--rounds 40]     # runs from any directory
 
 50 clients with non-IID local streams (each missing one class); every round a
-random 20% train 3 local iterations — selecting their local batches with
-Titan — and FedAvg aggregates. Compare against random local selection.
+random 20% train 3 local iterations — selecting their local batches through
+the ``TitanEngine`` (policy "titan-cis") — and FedAvg aggregates. Compare
+against random local selection.
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
-sys.path.insert(0, ".")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 import argparse
 

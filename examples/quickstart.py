@@ -3,19 +3,24 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a reduced Qwen2-style LM, streams domain-tagged synthetic text, and
-trains with the fused one-round-delay Titan step: coarse Rep/Div filter ->
-candidate buffer -> C-IS (optimal inter-class allocation + gradient-norm
-sampling) -> weighted SGD — all in one jitted program.
+trains through the ``TitanEngine`` facade: one jitted one-round-delay step
+fusing the model update with coarse Rep/Div filtering -> candidate buffer ->
+C-IS (optimal inter-class allocation + gradient-norm sampling) -> weighted
+SGD. Swap ``policy="titan-cis"`` for any registry entry ("rs", "is", "ll",
+"hl", "ce", "ocs", "camel") to run a paper-§4.1 baseline under the identical
+engine — one-flag experiments.
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import TitanConfig, TrainConfig, get_config
-from repro.core.pipeline import lm_hooks, make_titan_step, titan_init
+from repro.core.engine import TitanEngine
 from repro.data.stream import SyntheticLMStream
 from repro.models.model import build_model
 from repro.train.state import init_train_state
@@ -29,29 +34,26 @@ def main():
 
     tcfg = TrainConfig(lr=1e-3, warmup_steps=6, total_steps=steps)
     ttn = TitanConfig(stream_ratio=4, buffer_ratio=2, sketch_dim=8,
-                      score_seq_len=64)
-    features_fn, stats_fn = lm_hooks(model, ttn)
-    step = jax.jit(make_titan_step(
-        features_fn=features_fn, stats_fn=stats_fn,
-        train_step_fn=make_train_step(model, tcfg),
-        params_of=lambda s: s.params,
-        batch_size=B, n_classes=cfg.n_domains, cfg=ttn))
+                      score_seq_len=64, policy="titan-cis")
+    engine = TitanEngine.from_config(
+        ttn, model, train_step_fn=make_train_step(model, tcfg), batch_size=B)
 
     stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=T,
                                n_domains=cfg.n_domains, seed=0)
-    state = init_train_state(model, jax.random.PRNGKey(0))
     w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-    tstate = titan_init(jax.random.PRNGKey(1), w0,
-                        features_fn(state.params, w0), B, B * 2,
-                        cfg.n_domains)
+    state = engine.init(jax.random.PRNGKey(1),
+                        init_train_state(model, jax.random.PRNGKey(0)), w0)
 
     for i in range(steps):
         window = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-        state, tstate, m = step(state, tstate, window)
+        state, m = engine.step(state, window)
         if (i + 1) % 10 == 0:
-            alloc = ",".join(str(int(a)) for a in m["titan_alloc"])
+            # titan_alloc is a titan-cis diagnostic; other policies emit none
+            alloc = m.get("titan_alloc")
+            tag = ("domain-alloc [" + ",".join(str(int(a)) for a in alloc)
+                   + "]  " if alloc is not None else "")
             print(f"step {i+1:3d}  loss {float(m['loss']):.3f}  "
-                  f"domain-alloc [{alloc}]  mean_w {float(m['titan_mean_weight']):.2f}")
+                  f"{tag}mean_w {float(m['titan_mean_weight']):.2f}")
     print("done — Titan allocated the batch across domains by class "
           "importance I(y) every round.")
 

@@ -2,16 +2,22 @@
 full production stack (Titan selection, AdamW, checkpoints, straggler guard).
 
     # CI-sized (default): ~20M params, 200 steps
-    PYTHONPATH=src python examples/train_lm.py
+    python examples/train_lm.py                    # runs from any directory
 
     # full deliverable scale (~100M params; slower on CPU)
-    PYTHONPATH=src python examples/train_lm.py --size 100m --steps 300
+    python examples/train_lm.py --size 100m --steps 300
 
-Delegates to repro.launch.train — the same driver a real job would use.
+    # any registry policy rides the same engine (rs/is/ll/hl/ce/ocs/camel)
+    python examples/train_lm.py --policy rs
+
+Delegates to repro.launch.train — the same TitanEngine-backed driver a real
+job would use.
 """
+import os
 import sys
 
-sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 import argparse
 import dataclasses
@@ -36,7 +42,12 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/titan_lm_run")
     ap.add_argument("--no-titan", action="store_true")
+    ap.add_argument("--policy", default="",
+                    help="selection policy (registry key, default titan-cis; "
+                         "see --policy list on repro.launch.train)")
     args = ap.parse_args()
+    if args.no_titan and args.policy:
+        ap.error("--no-titan (plain streaming) conflicts with --policy")
 
     L, D, H, KV, FF, V = SIZES[args.size]
     base = get_config("qwen2-72b")
@@ -53,7 +64,7 @@ def main():
             "--ckpt-dir", args.ckpt_dir, "--log-every", "20",
             "--eval-every", "50", "--ckpt-every", "100"]
     if not args.no_titan:
-        argv.append("--titan")
+        argv += ["--policy", args.policy or "titan-cis"]
     train_mod.main(argv)
 
 

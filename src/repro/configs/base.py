@@ -224,6 +224,12 @@ def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
 @dataclass(frozen=True)
 class TitanConfig:
     enabled: bool = True
+    policy: str = "titan-cis"     # SelectionPolicy registry key (repro/core/
+                                  # registry.py): titan-cis | rs | is | ll |
+                                  # hl | ce | ocs | camel | any registered
+    policy_kwargs: Tuple[Tuple[str, float], ...] = ()
+                                  # extra kwargs forwarded to the policy's
+                                  # select fn (e.g. (("w_rep", 2.0),) for ocs)
     # paper ratios: v=100 streaming -> 30 buffered -> 10 selected (10:3:1)
     stream_ratio: int = 10        # candidates seen per selected sample
     buffer_ratio: int = 3         # buffer size per selected sample

@@ -3,8 +3,10 @@
   importance.py  per-sample last-layer gradient scores (exact + sketched)
   filter.py      coarse-grained Rep/Div filter + candidate buffer
   selection.py   C-IS: optimal inter-class allocation + intra-class sampling
-  pipeline.py    one-round-delay fused train+select step
-  baselines.py   RS / IS / LL / HL / CE / OCS / Camel
+  registry.py    SelectionPolicy protocol + registry (titan-cis + baselines)
+  engine.py      TitanEngine facade: one-round-delay engine, any policy
+  pipeline.py    legacy Titan-only fused step (reference implementation)
+  baselines.py   RS / IS / LL / HL / CE / OCS / Camel select functions
   theory.py      Theorem-2 variance decomposition diagnostics
 """
 from repro.core.filter import (  # noqa: F401
@@ -17,6 +19,11 @@ from repro.core.importance import (  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     TitanState, edge_hooks, lm_hooks, make_titan_step, titan_init,
 )
+from repro.core.registry import (  # noqa: F401
+    PolicySpecs, SelectionPolicy, available_policies, get_policy,
+    register_policy,
+)
+from repro.core.engine import EngineState, TitanEngine  # noqa: F401
 from repro.core.selection import (  # noqa: F401
     allocate, cis_select, class_moments, intra_class_probs, is_select,
 )

@@ -6,6 +6,10 @@ Camel — plus Titan's C-IS. Common signature:
 stats: dict with loss, gnorm, entropy, sketch, features, domain (leading N).
 Heuristic methods return unit weights (they do not correct for bias — that is
 exactly the paper's point about HDS).
+
+These bare functions are the computational core; ``repro.core.registry``
+wraps each as a first-class ``SelectionPolicy`` so they run end-to-end under
+``TitanEngine`` (one-flag baseline experiments).
 """
 from __future__ import annotations
 
@@ -20,15 +24,24 @@ NEG = -1e30
 
 
 def _topk(scores, valid, batch):
+    """Top-`batch` valid indices + unit weights. When fewer than `batch`
+    candidates are valid, top_k over the NEG-masked scores would silently
+    hand back masked indices — instead the surviving valid picks are
+    recycled round-robin into the dead slots (with-replacement semantics).
+    With zero valid candidates every weight is 0 so a masked index can never
+    carry weight into an update."""
     s = jnp.where(valid, scores, NEG)
-    _, idx = jax.lax.top_k(s, batch)
-    return idx
+    top, idx = jax.lax.top_k(s, batch)
+    ok = top > NEG / 2
+    n_ok = jnp.maximum(jnp.sum(ok.astype(jnp.int32)), 1)
+    idx = jnp.where(ok, idx, jnp.take(idx, jnp.arange(batch) % n_ok))
+    w = jnp.broadcast_to(jnp.any(ok).astype(jnp.float32), (batch,))
+    return idx, w
 
 
 def random_selection(rng, stats, valid, batch):
     scores = jax.random.uniform(rng, valid.shape)
-    idx = _topk(scores, valid, batch)
-    return idx, jnp.ones((batch,), jnp.float32)
+    return _topk(scores, valid, batch)
 
 
 def importance_sampling(rng, stats, valid, batch):
@@ -36,19 +49,16 @@ def importance_sampling(rng, stats, valid, batch):
 
 
 def low_loss(rng, stats, valid, batch):
-    idx = _topk(-stats["loss"], valid, batch)
-    return idx, jnp.ones((batch,), jnp.float32)
+    return _topk(-stats["loss"], valid, batch)
 
 
 def high_loss(rng, stats, valid, batch):
-    idx = _topk(stats["loss"], valid, batch)
-    return idx, jnp.ones((batch,), jnp.float32)
+    return _topk(stats["loss"], valid, batch)
 
 
 def cross_entropy(rng, stats, valid, batch):
     """Model-uncertainty selection: highest predictive entropy."""
-    idx = _topk(stats["entropy"], valid, batch)
-    return idx, jnp.ones((batch,), jnp.float32)
+    return _topk(stats["entropy"], valid, batch)
 
 
 def ocs(rng, stats, valid, batch, *, w_rep: float = 1.0, w_div: float = 1.0):
@@ -59,8 +69,7 @@ def ocs(rng, stats, valid, batch, *, w_rep: float = 1.0, w_div: float = 1.0):
     rep = -jnp.sum(jnp.square(f - mu), axis=-1)
     m2 = jnp.sum(jnp.sum(jnp.square(f), -1) * v) / jnp.maximum(jnp.sum(v), 1.0)
     div = jnp.sum(jnp.square(f), -1) + m2 - 2.0 * (f @ mu)
-    idx = _topk(w_rep * rep + w_div * div, valid, batch)
-    return idx, jnp.ones((batch,), jnp.float32)
+    return _topk(w_rep * rep + w_div * div, valid, batch)
 
 
 def camel(rng, stats, valid, batch):
@@ -81,12 +90,19 @@ def camel(rng, stats, valid, batch):
         cost = jnp.where(chosen, jnp.inf, cost)
         cost = jnp.where(valid, cost, jnp.inf)
         c = jnp.argmin(cost)
+        # batch > #valid: every remaining cost is inf and argmin would hand
+        # back index 0 regardless of validity — re-pick the first already-
+        # chosen (valid) candidate instead
+        exhausted = ~jnp.isfinite(jnp.take(cost, c))
+        c = jnp.where(exhausted, jnp.argmax(chosen), c)
         new_min = jnp.minimum(min_d, d[:, c])
         return (new_min, chosen.at[c].set(True)), c
 
     (_, _), idx = jax.lax.scan(step, (big, jnp.zeros((N,), bool)),
                                jnp.arange(batch))
-    return idx, jnp.ones((batch,), jnp.float32)
+    # zero valid candidates: the fallback picks are garbage — zero weights
+    w = jnp.broadcast_to(jnp.any(valid).astype(jnp.float32), (batch,))
+    return idx, w
 
 
 def titan_cis(rng, stats, valid, batch, *, n_classes: int,

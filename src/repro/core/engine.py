@@ -1,0 +1,187 @@
+"""TitanEngine: one streaming-selection engine, many policies.
+
+The facade over the paper's one-round-delay co-execution (§3.4, DESIGN.md
+§3). The engine owns everything that used to be hand-wired at every call
+site — jit, PRNG threading, the candidate buffer, the stale-parameter
+dataflow — while the *policy* (a ``SelectionPolicy`` from the registry)
+decides which samples matter:
+
+    engine = TitanEngine.from_config(ttn, model, train_step_fn=train_step,
+                                     batch_size=B, policy="titan-cis")
+    state  = engine.init(rng, train_state, first_window)
+    state, metrics = engine.step(state, window)       # one jitted program
+
+Each ``step`` fuses (A) the model update with the batch selected in the
+previous round and (B/C) stage-1 observation/admission of the incoming
+window + stage-2 selection of the *next* round's batch, both reading the
+pre-update parameters — so XLA can overlap selection compute with the train
+step's collectives. Swapping ``policy="rs" | "is" | ... `` turns the paper's
+Fig./Table baseline comparisons into one-flag experiments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TitanConfig
+from repro.core.filter import (NEG, buffer_examples, buffer_merge,
+                               buffer_valid, init_buffer)
+from repro.core.registry import PolicySpecs, SelectionPolicy, get_policy
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class EngineState:
+    """Everything one selection-training run threads between rounds."""
+    train: Any          # caller's train state (params pytree, TrainState, ...)
+    policy: Any         # SelectionPolicy state pytree
+    buffer: Dict        # candidate buffer (examples + _score)
+    next_batch: Dict    # batch selected last round (trained on this round)
+    rng: jax.Array
+    t: jax.Array        # round counter (recency admission for bufferless policies)
+
+
+def _default_params_of(s):
+    return getattr(s, "params", s)
+
+
+class TitanEngine:
+    """One engine, many policies. See module docstring.
+
+    Construct via :meth:`from_config` (LM models get hooks automatically) or
+    directly with explicit ``ModalityHooks``. ``step`` is jitted unless
+    ``jit=False``; ``step_fn`` is always the raw traceable callable for
+    custom lowering (shardings, cost probes — see launch/costing.py).
+    """
+
+    def __init__(self, *, hooks, train_step_fn: Callable,
+                 policy: Any = None,
+                 cfg: Optional[TitanConfig] = None,
+                 params_of: Optional[Callable] = None,
+                 batch_size: int, n_classes: int,
+                 buffer_size: Optional[int] = None, jit: bool = True):
+        self.cfg = cfg if cfg is not None else TitanConfig()
+        self.policy: SelectionPolicy = get_policy(
+            policy if policy is not None else self.cfg.policy, self.cfg)
+        self.hooks = hooks
+        self._train_step_fn = train_step_fn
+        self._params_of = params_of if params_of is not None else _default_params_of
+        self.batch_size = batch_size
+        self.n_classes = n_classes
+        self.buffer_size = (buffer_size if buffer_size is not None
+                            else batch_size * self.cfg.buffer_ratio)
+        self.step_fn = self._step
+        self.step = jax.jit(self._step) if jit else self._step
+
+    @classmethod
+    def from_config(cls, cfg: TitanConfig, model=None, *,
+                    train_step_fn: Callable, policy: Any = None,
+                    hooks=None, params_of: Optional[Callable] = None,
+                    batch_size: int, n_classes: Optional[int] = None,
+                    buffer_size: Optional[int] = None, jit: bool = True
+                    ) -> "TitanEngine":
+        """Build an engine from a TitanConfig.
+
+        For LM models (``build_model`` output) hooks default to the fused
+        linear-score ``lm_hooks``; other modalities pass ``hooks=`` from
+        ``repro.hooks``. ``policy`` defaults to ``cfg.policy``.
+        """
+        if hooks is None:
+            if model is None:
+                raise ValueError("from_config needs `model` (an LM from "
+                                 "build_model) or explicit `hooks=`")
+            from repro.hooks.lm import lm_hooks
+            hooks = lm_hooks(model, cfg)
+        if n_classes is None:
+            if model is None:
+                raise ValueError("from_config needs `n_classes` when no "
+                                 "model is given")
+            n_classes = model.cfg.n_domains
+        return cls(hooks=hooks, train_step_fn=train_step_fn, policy=policy,
+                   cfg=cfg, params_of=params_of, batch_size=batch_size,
+                   n_classes=n_classes, buffer_size=buffer_size, jit=jit)
+
+    @property
+    def window_size(self) -> int:
+        """Stream samples the engine expects per round (paper's velocity v)."""
+        return self.batch_size * self.cfg.stream_ratio
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def init(self, rng, train_state, window: Dict) -> EngineState:
+        """Bootstrap from the first stream window: warm the policy's
+        estimators, fill the buffer, take the first batch verbatim."""
+        params = self._params_of(train_state)
+        t0 = jnp.zeros((), jnp.int32)
+        obs = {"domain": window["domain"], "round": t0, "features": None}
+        feat_dim = 0
+        if self.policy.needs_window_features:
+            obs["features"] = self.hooks.features_fn(params, window)
+            feat_dim = int(obs["features"].shape[-1])
+        specs = PolicySpecs(n_classes=self.n_classes, feat_dim=feat_dim,
+                            batch_size=self.batch_size)
+        pstate = self.policy.init_state(specs)
+        pstate = self.policy.observe(pstate, window, obs)
+        scores = self.policy.admission_scores(pstate, window, obs)
+        wspecs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                  for k, v in window.items()}
+        buf = init_buffer(wspecs, self.buffer_size)
+        buf = buffer_merge(buf, window, scores)
+        nb = {k: v[:self.batch_size] for k, v in window.items()}
+        nb["weights"] = jnp.ones((self.batch_size,), jnp.float32)
+        return EngineState(train=train_state, policy=pstate, buffer=buf,
+                           next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1)
+
+    def _step(self, state: EngineState, window: Dict):
+        cfg = self.cfg
+        params = self._params_of(state.train)   # w_t: stale for selection
+
+        # (A) model update with the batch selected last round
+        new_train, metrics = self._train_step_fn(state.train, state.next_batch)
+
+        # (B) stage 1: observe the stream window, score it for admission
+        obs = {"domain": window["domain"], "round": state.t, "features": None}
+        if self.policy.needs_window_features:
+            obs["features"] = self.hooks.features_fn(params, window)
+        pstate = self.policy.observe(state.policy, window, obs)
+        scores = self.policy.admission_scores(pstate, window, obs)
+        old_buffer = state.buffer
+        if cfg.buffer_decay < 1.0:
+            # freshness decay: stale entries must re-earn their slot against
+            # incoming samples (stops outliers squatting in the buffer)
+            old_buffer = dict(old_buffer)
+            s = old_buffer["_score"]
+            old_buffer["_score"] = jnp.where(s > -1e29,
+                                             s * cfg.buffer_decay, s)
+        buffer = buffer_merge(old_buffer, window, scores)
+
+        # (C) stage 2: fine-grained selection over the candidate buffer
+        examples = buffer_examples(buffer)
+        stats: Dict = {"domain": examples["domain"]}
+        if self.policy.needs_stats:
+            stats.update(self.hooks.stats_fn(params, examples))
+            stats["domain"] = examples["domain"]
+        if self.policy.needs_features:
+            stats["features"] = self.hooks.features_fn(params, examples)
+        valid = buffer_valid(buffer)
+        rng, key = jax.random.split(state.rng)
+        idx, w, pstate = self.policy.select(key, pstate, stats, valid,
+                                            self.batch_size)
+        if cfg.weight_clip:
+            w = jnp.minimum(w, cfg.weight_clip)
+        nb = {k: jnp.take(v, idx, axis=0) for k, v in examples.items()}
+        nb["weights"] = w.astype(jnp.float32)
+        if cfg.evict_selected:
+            # selected data is consumed: training on it again next round
+            # would bias the stream estimate (and overfit a static buffer)
+            buffer = dict(buffer)
+            buffer["_score"] = buffer["_score"].at[idx].set(NEG)
+
+        metrics = dict(metrics)
+        metrics.update(self.policy.metrics(pstate))
+        metrics["titan_mean_weight"] = jnp.mean(w)
+        return EngineState(train=new_train, policy=pstate, buffer=buffer,
+                           next_batch=nb, rng=rng, t=state.t + 1), metrics

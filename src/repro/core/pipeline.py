@@ -1,5 +1,11 @@
 """Titan pipeline (paper §3.4): one-round-delay co-execution.
 
+DEPRECATED assembly surface: new code should construct the pipeline through
+``repro.core.engine.TitanEngine`` (``TitanEngine.from_config``), which owns
+jit, buffer management and PRNG threading for *any* registered
+``SelectionPolicy``. ``make_titan_step``/``titan_init`` remain as the
+reference implementation of the Titan-only path (and its tests).
+
 A single jitted step fuses
   (A) the model update with the batch selected in the previous round, and
   (B+C) coarse filtering of the incoming stream window + fine-grained C-IS
@@ -22,7 +28,6 @@ from repro.configs.base import TitanConfig
 from repro.core.filter import (FilterState, buffer_examples, buffer_merge,
                                buffer_valid, coarse_scores, init_buffer,
                                init_filter_state, update_filter_state)
-from repro.core.importance import exact_head_stats, lm_sequence_stats
 from repro.core.selection import cis_select
 
 
@@ -113,52 +118,20 @@ def make_titan_step(*, features_fn: Callable, stats_fn: Callable,
 
 
 # ---------------------------------------------------------------------------
-# Hooks
+# Hooks — moved to repro.hooks; thin re-exports kept for legacy call sites.
+# Imported lazily: repro.hooks.lm itself imports repro.core.importance.
 # ---------------------------------------------------------------------------
 
 def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None):
-    """Titan hooks for the LM model zoo (sequence = sample, domain = class).
-
-    `impl` overrides cfg.score_impl for the fused linear-score kernel; the
-    tile sizes come from cfg.score_{n,v,d}_block (0 = autotune).
-    """
-    impl = cfg.score_impl if impl is None else impl
-
-    def _truncate(ex):
-        if not cfg.score_seq_len:
-            return ex
-        k = cfg.score_seq_len
-        out = dict(ex)
-        for f in ("tokens", "labels", "frames", "mask"):
-            if f in out:
-                out[f] = out[f][:, :k]
-        return out
-
-    def features_fn(params, ex):
-        return model.features(params, _truncate(ex), n_blocks=cfg.filter_blocks)
-
-    def stats_fn(params, ex):
-        ex = _truncate(ex)
-        h = model.final_hidden(params, ex)
-        return lm_sequence_stats(model.cfg, params, h, ex["labels"],
-                                 sketch_dim=cfg.sketch_dim, impl=impl,
-                                 n_block=cfg.score_n_block,
-                                 v_block=cfg.score_v_block,
-                                 d_block=cfg.score_d_block)
-
-    return features_fn, stats_fn
+    """Deprecated alias for :func:`repro.hooks.lm.lm_hooks` (returns a
+    ModalityHooks, which still unpacks as ``features_fn, stats_fn``)."""
+    from repro.hooks.lm import lm_hooks as _lm_hooks
+    return _lm_hooks(model, cfg, impl=impl)
 
 
 def edge_hooks(ecfg, *, features, penultimate, head_logits,
                filter_blocks: int = 1):
-    """Titan hooks for edge classifiers (exact last-layer gradients)."""
-
-    def features_fn(params, ex):
-        return features(ecfg, params, ex["x"], filter_blocks).astype(jnp.float32)
-
-    def stats_fn(params, ex):
-        h = penultimate(ecfg, params, ex["x"])
-        logits = head_logits(ecfg, params, h)
-        return exact_head_stats(logits, ex["y"], h)
-
-    return features_fn, stats_fn
+    """Deprecated alias for :func:`repro.hooks.edge.edge_hooks`."""
+    from repro.hooks.edge import edge_hooks as _edge_hooks
+    return _edge_hooks(ecfg, features=features, penultimate=penultimate,
+                       head_logits=head_logits, filter_blocks=filter_blocks)

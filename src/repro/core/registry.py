@@ -1,0 +1,222 @@
+"""SelectionPolicy protocol + string-keyed registry (paper §4.1's family).
+
+The paper's two-stage pipeline is one point in a *family* of streaming
+selection strategies. Every strategy — Titan's coarse-filter + C-IS pair and
+the seven §4.1 baselines — is a ``SelectionPolicy``: a jit-compatible object
+whose state threads through the engine as a pytree.
+
+Contract (see DESIGN.md §5):
+
+    init_state(specs)                      -> state          (python, pre-jit)
+    observe(state, window, obs)            -> state           (stage-1 update)
+    admission_scores(state, window, obs)   -> (N,) scores     (buffer priority)
+    select(rng, state, stats, valid, batch)-> (idx, w, state) (stage-2 pick)
+    metrics(state)                         -> dict            (diagnostics)
+
+State-threading rules:
+  * ``init_state`` runs once, outside jit; it may record static shape info
+    (``specs``) on the policy object. Everything it returns must be a pytree
+    of arrays with a fixed structure.
+  * ``observe``/``admission_scores``/``select`` are traced — no python-side
+    mutation, no data-dependent shapes; thread every array through ``state``.
+  * ``select`` must return in-bounds indices even when ``batch`` exceeds the
+    valid-candidate count (recycle valid picks or zero the weights — never
+    hand back a masked index with positive weight).
+
+Policies are registered under a string key; ``get_policy(name, cfg)``
+instantiates one from a ``TitanConfig`` (which carries ``policy`` and
+``policy_kwargs``). Registering a new policy takes <20 lines — subclass
+``SelectionPolicy`` (or wrap a bare select fn in ``FunctionPolicy``) and call
+``register_policy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TitanConfig
+from repro.core.baselines import STRATEGIES
+from repro.core.filter import (FilterState, coarse_scores, init_filter_state,
+                               update_filter_state)
+from repro.core.selection import cis_select
+
+
+@dataclass(frozen=True)
+class PolicySpecs:
+    """Static shape info handed to ``init_state`` (python ints, not tracers)."""
+    n_classes: int
+    feat_dim: int = 0
+    batch_size: int = 0
+
+
+class SelectionPolicy:
+    """Base class: a stateless unit-weight heuristic. Subclasses override.
+
+    Class attributes tell the engine which inputs the policy consumes, so it
+    can skip the scoring/feature forward passes the policy will not read:
+
+      unit_weights   heuristic (no bias-correction weights; w == 1)
+      needs_stats    requires the fine-grained stats_fn pass (loss/gnorm/...)
+      needs_features requires feature vectors in ``stats`` (ocs/camel)
+      needs_window_features requires window features in ``obs`` (stage-1)
+    """
+    name: str = "?"
+    unit_weights: bool = True
+    needs_stats: bool = True
+    needs_features: bool = False
+    needs_window_features: bool = False
+
+    def __init__(self, cfg: Optional[TitanConfig] = None):
+        self.cfg = cfg if cfg is not None else TitanConfig()
+        self.specs: Optional[PolicySpecs] = None
+
+    def init_state(self, specs: PolicySpecs):
+        self.specs = specs
+        return ()
+
+    def observe(self, state, window, obs):
+        return state
+
+    def admission_scores(self, state, window, obs):
+        # recency: the candidate buffer degenerates to the most recent
+        # samples, so policies without a stage-1 filter select from a
+        # sliding window of the stream
+        n = window["domain"].shape[0]
+        return jnp.broadcast_to(
+            jnp.asarray(obs["round"]).astype(jnp.float32), (n,))
+
+    def select(self, rng, state, stats, valid, batch: int):
+        raise NotImplementedError
+
+    def metrics(self, state) -> Dict:
+        return {}
+
+
+class FunctionPolicy(SelectionPolicy):
+    """Adapter for bare ``fn(rng, stats, valid, batch) -> (idx, w)`` selectors
+    (the §4.1 baselines in core/baselines.py)."""
+
+    def __init__(self, cfg: Optional[TitanConfig], fn: Callable, name: str, *,
+                 unit_weights: bool = True, needs_stats: bool = True,
+                 needs_features: bool = False):
+        super().__init__(cfg)
+        self._fn = fn
+        self.name = name
+        self.unit_weights = unit_weights
+        self.needs_stats = needs_stats
+        self.needs_features = needs_features
+        # policy_kwargs ride the config for whichever policy is active;
+        # forward only the ones this fn accepts (a cfg tuned for ocs must not
+        # crash the other baselines in a registry sweep)
+        import inspect
+        accepted = inspect.signature(fn).parameters
+        self._kwargs = {k: v for k, v in dict(self.cfg.policy_kwargs or ()).items()
+                        if k in accepted}
+
+    def select(self, rng, state, stats, valid, batch: int):
+        idx, w = self._fn(rng, stats, valid, batch, **self._kwargs)
+        return idx, w, state
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TitanPolicyState:
+    filter: FilterState
+    alloc: jnp.ndarray       # (C,) int32   — last inter-class allocation
+    importance: jnp.ndarray  # (C,) float32 — last I(y) (Eq. 2)
+
+
+class TitanCISPolicy(SelectionPolicy):
+    """The paper's contribution: Rep+Div coarse admission (stage 1) and
+    classified importance sampling over the candidate buffer (stage 2)."""
+    name = "titan-cis"
+    unit_weights = False
+    needs_window_features = True
+
+    def init_state(self, specs: PolicySpecs):
+        self.specs = specs
+        C = specs.n_classes
+        return TitanPolicyState(
+            filter=init_filter_state(C, specs.feat_dim),
+            alloc=jnp.zeros((C,), jnp.int32),
+            importance=jnp.zeros((C,), jnp.float32))
+
+    def observe(self, state, window, obs):
+        f = update_filter_state(state.filter, obs["features"], obs["domain"],
+                                momentum=self.cfg.centroid_momentum)
+        return dataclasses.replace(state, filter=f)
+
+    def admission_scores(self, state, window, obs):
+        return coarse_scores(state.filter, obs["features"], obs["domain"],
+                             w_rep=self.cfg.rep_weight,
+                             w_div=self.cfg.div_weight,
+                             per_class_norm=self.cfg.per_class_norm)
+
+    def select(self, rng, state, stats, valid, batch: int):
+        assert self.specs is not None, "call init_state(specs) before select"
+        idx, w, diag = cis_select(
+            rng, stats, valid, batch, self.specs.n_classes,
+            with_replacement=self.cfg.with_replacement,
+            dense_slots=self.cfg.dense_slot_sampling)
+        state = dataclasses.replace(state, alloc=diag["alloc"],
+                                    importance=diag["I"])
+        return idx, w, state
+
+    def metrics(self, state) -> Dict:
+        return {"titan_alloc": state.alloc,
+                "titan_class_importance": state.importance}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[Optional[TitanConfig]], SelectionPolicy]] = {}
+
+
+def register_policy(name: str, factory: Optional[Callable] = None):
+    """``register_policy("x", factory)`` or ``@register_policy("x")``.
+    ``factory(cfg) -> SelectionPolicy``."""
+    def _reg(f):
+        _REGISTRY[name] = f
+        return f
+    return _reg(factory) if factory is not None else _reg
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: Any, cfg: Optional[TitanConfig] = None
+               ) -> SelectionPolicy:
+    """Instantiate a registered policy; pass-through for instances."""
+    if isinstance(name, SelectionPolicy):
+        return name
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown selection policy {name!r}; available: "
+            f"{', '.join(available_policies())}")
+    return _REGISTRY[name](cfg)
+
+
+register_policy("titan-cis", TitanCISPolicy)
+
+_BASELINE_FLAGS: Dict[str, Dict] = {
+    "rs": dict(needs_stats=False),
+    "is": dict(unit_weights=False),
+    "ll": {},
+    "hl": {},
+    "ce": {},
+    # ocs/camel read only feature vectors — no fine-grained scoring pass
+    "ocs": dict(needs_stats=False, needs_features=True),
+    "camel": dict(needs_stats=False, needs_features=True),
+}
+for _name, _flags in _BASELINE_FLAGS.items():
+    register_policy(
+        _name,
+        lambda cfg, _n=_name, _f=_flags: FunctionPolicy(
+            cfg, STRATEGIES[_n], _n, **_f))

@@ -182,4 +182,7 @@ def is_select(rng, stats, valid, batch: int, *, with_replacement=True):
     P = P / jnp.maximum(jnp.sum(P), _EPS)
     n = jnp.sum(valid.astype(jnp.float32))
     w = 1.0 / (n * jnp.maximum(jnp.take(P, idx), _EPS))
+    # zero valid candidates: the categorical over all -inf logits returns an
+    # arbitrary index — zero its weight so it cannot poison the update
+    w = jnp.where(jnp.take(P, idx) > 0, w, 0.0)
     return idx, w.astype(jnp.float32)

@@ -1,0 +1,13 @@
+"""Modality hooks: the model-side seam of the selection engine.
+
+  base.py    ModalityHooks (features_fn + stats_fn contract)
+  lm.py      language models from the model zoo (fused linear-score stats)
+  edge.py    generic linear-softmax-head classifiers (exact gradients)
+  har.py     human-activity recognition (EdgeMLP over IMU features)
+  vision.py  image classification (EdgeCNN)
+"""
+from repro.hooks.base import ModalityHooks  # noqa: F401
+from repro.hooks.edge import edge_hooks  # noqa: F401
+from repro.hooks.har import har_hooks  # noqa: F401
+from repro.hooks.lm import lm_hooks  # noqa: F401
+from repro.hooks.vision import vision_hooks  # noqa: F401

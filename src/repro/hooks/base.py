@@ -1,0 +1,33 @@
+"""ModalityHooks: the two model-side callables every selection engine needs.
+
+A modality (LM, vision, HAR, ...) plugs into the engine by providing
+
+    features_fn(params, examples) -> (N, D) fp32 shallow features
+        cheap forward over the first few blocks — feeds the stage-1 coarse
+        filter (centroid/norm estimators, Rep+Div admission scores)
+    stats_fn(params, examples) -> dict(loss, gnorm, entropy, sketch)
+        per-sample fine-grained statistics (last-layer gradient scores) —
+        feeds the stage-2 selection policies
+
+Both must be jit-traceable pure functions of (params, examples). The engine
+adds ``domain`` (and ``features`` for feature-space policies) to the stats
+dict before handing it to ``SelectionPolicy.select``.
+
+``ModalityHooks`` unpacks as ``features_fn, stats_fn = hooks`` for backward
+compatibility with the pre-registry tuple convention.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class ModalityHooks:
+    features_fn: Callable
+    stats_fn: Callable
+    name: str = "custom"
+
+    def __iter__(self):
+        # legacy ``f_fn, s_fn = lm_hooks(...)`` unpacking
+        return iter((self.features_fn, self.stats_fn))

@@ -1,0 +1,28 @@
+"""Generic hooks for edge classifiers with a linear softmax head.
+
+Any model exposing (features, penultimate, head_logits) gets exact
+last-layer gradient statistics — the paper's native setting. The HAR and
+vision modalities (har.py / vision.py) are thin instantiations over the
+EdgeMLP / EdgeCNN models.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.importance import exact_head_stats
+from repro.hooks.base import ModalityHooks
+
+
+def edge_hooks(ecfg, *, features, penultimate, head_logits,
+               filter_blocks: int = 1, name: str = "edge") -> ModalityHooks:
+    """Hooks for edge classifiers (exact last-layer gradients)."""
+
+    def features_fn(params, ex):
+        return features(ecfg, params, ex["x"], filter_blocks).astype(jnp.float32)
+
+    def stats_fn(params, ex):
+        h = penultimate(ecfg, params, ex["x"])
+        logits = head_logits(ecfg, params, h)
+        return exact_head_stats(logits, ex["y"], h)
+
+    return ModalityHooks(features_fn, stats_fn, name=name)

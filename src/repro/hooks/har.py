@@ -1,0 +1,14 @@
+"""HAR modality: MLP over windowed IMU features (the paper's HAR setup)."""
+from __future__ import annotations
+
+from repro.hooks.base import ModalityHooks
+from repro.hooks.edge import edge_hooks
+from repro.models.edge import (EdgeMLPConfig, mlp_features, mlp_head_logits,
+                               mlp_penultimate)
+
+
+def har_hooks(ecfg: EdgeMLPConfig, *, filter_blocks: int = 1) -> ModalityHooks:
+    return edge_hooks(ecfg, features=mlp_features,
+                      penultimate=mlp_penultimate,
+                      head_logits=mlp_head_logits,
+                      filter_blocks=filter_blocks, name="har")

@@ -1,0 +1,43 @@
+"""Titan hooks for the LM model zoo (sequence = sample, domain = class)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import TitanConfig
+from repro.core.importance import lm_sequence_stats
+from repro.hooks.base import ModalityHooks
+
+
+def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None
+             ) -> ModalityHooks:
+    """Hooks over any ``build_model`` LM: shallow-block features + fused
+    linear-score sequence stats.
+
+    `impl` overrides cfg.score_impl for the fused linear-score kernel; the
+    tile sizes come from cfg.score_{n,v,d}_block (0 = autotune).
+    """
+    impl = cfg.score_impl if impl is None else impl
+
+    def _truncate(ex):
+        if not cfg.score_seq_len:
+            return ex
+        k = cfg.score_seq_len
+        out = dict(ex)
+        for f in ("tokens", "labels", "frames", "mask"):
+            if f in out:
+                out[f] = out[f][:, :k]
+        return out
+
+    def features_fn(params, ex):
+        return model.features(params, _truncate(ex), n_blocks=cfg.filter_blocks)
+
+    def stats_fn(params, ex):
+        ex = _truncate(ex)
+        h = model.final_hidden(params, ex)
+        return lm_sequence_stats(model.cfg, params, h, ex["labels"],
+                                 sketch_dim=cfg.sketch_dim, impl=impl,
+                                 n_block=cfg.score_n_block,
+                                 v_block=cfg.score_v_block,
+                                 d_block=cfg.score_d_block)
+
+    return ModalityHooks(features_fn, stats_fn, name="lm")

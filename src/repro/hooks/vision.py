@@ -1,0 +1,15 @@
+"""Vision modality: small conv net standing in for the paper's IC models."""
+from __future__ import annotations
+
+from repro.hooks.base import ModalityHooks
+from repro.hooks.edge import edge_hooks
+from repro.models.edge import (EdgeCNNConfig, cnn_features, cnn_head_logits,
+                               cnn_penultimate)
+
+
+def vision_hooks(ecfg: EdgeCNNConfig, *, filter_blocks: int = 1
+                 ) -> ModalityHooks:
+    return edge_hooks(ecfg, features=cnn_features,
+                      penultimate=cnn_penultimate,
+                      head_logits=cnn_head_logits,
+                      filter_blocks=filter_blocks, name="vision")

@@ -154,19 +154,14 @@ def _forward_probe_cost(cfg, shape, rules, kind: str) -> Dict[str, float]:
     return _collect(c)
 
 
-def _titan_select_probe_cost(cfg, shape, rules, ttn: TitanConfig
-                             ) -> Dict[str, float]:
-    """Selection-only overhead: titan step with a no-op train sub-step."""
-    from repro.core.filter import FilterState
-    from repro.core.pipeline import TitanState, lm_hooks, make_titan_step
-    model = build_model(cfg)
-    B = shape.global_batch
-    W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
-    f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
-    noop = lambda state, batch: (state, {})
-    step = make_titan_step(features_fn=f_fn, stats_fn=s_fn, train_step_fn=noop,
-                           params_of=lambda s: s, batch_size=B,
-                           n_classes=cfg.n_domains, cfg=ttn)
+def engine_state_structs(engine, cfg, shape, rules, *, train_sds, train_sh,
+                         feat_dim: int):
+    """(EngineState sds, EngineState shardings, window sds, window shardings)
+    for lowering an engine step without running it. Policy state is
+    replicated; buffer/next_batch/window are batch-sharded examples."""
+    from repro.core.engine import EngineState
+    from repro.core.registry import PolicySpecs
+    B, M, W = engine.batch_size, engine.buffer_size, engine.window_size
     specs = input_specs(cfg, shape)
     ex_specs = {k: v for k, v in specs.items() if k != "weights"}
 
@@ -178,26 +173,46 @@ def _titan_select_probe_cost(cfg, shape, rules, ttn: TitanConfig
     def resized_sh(n):
         return {k: rules.sharding(*d.axes) for k, d in ex_specs.items()}
 
-    C, D = cfg.n_domains, cfg.d_model
     rep = rules.sharding()
-    t_sds = TitanState(
-        FilterState(jax.ShapeDtypeStruct((C, D), jnp.float32),
-                    jax.ShapeDtypeStruct((C,), jnp.float32),
-                    jax.ShapeDtypeStruct((C,), jnp.float32)),
-        dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32)),
-        dict(resized(B), weights=jax.ShapeDtypeStruct((B,), jnp.float32)),
-        jax.ShapeDtypeStruct((2,), jnp.uint32))
-    t_sh = TitanState(
-        FilterState(rep, rep, rep),
-        dict(resized_sh(M), _score=rules.sharding("batch")),
-        dict(resized_sh(B), weights=rules.sharding("batch")),
-        rep)
+    pstate = engine.policy.init_state(
+        PolicySpecs(n_classes=engine.n_classes, feat_dim=feat_dim,
+                    batch_size=B))
+    pol_sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pstate)
+    pol_sh = jax.tree.map(lambda x: rep, pstate)
+    e_sds = EngineState(
+        train=train_sds, policy=pol_sds,
+        buffer=dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32)),
+        next_batch=dict(resized(B),
+                        weights=jax.ShapeDtypeStruct((B,), jnp.float32)),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        t=jax.ShapeDtypeStruct((), jnp.int32))
+    e_sh = EngineState(
+        train=train_sh, policy=pol_sh,
+        buffer=dict(resized_sh(M), _score=rules.sharding("batch")),
+        next_batch=dict(resized_sh(B), weights=rules.sharding("batch")),
+        rng=rep, t=rep)
+    return e_sds, e_sh, resized(W), resized_sh(W)
+
+
+def _titan_select_probe_cost(cfg, shape, rules, ttn: TitanConfig
+                             ) -> Dict[str, float]:
+    """Selection-only overhead: engine step with a no-op train sub-step."""
+    from repro.core.engine import TitanEngine
+    model = build_model(cfg)
+    noop = lambda state, batch: (state, {})
+    eng = TitanEngine.from_config(ttn, model, train_step_fn=noop,
+                                  params_of=lambda s: s,
+                                  batch_size=shape.global_batch, jit=False)
     p_sh = jax.tree.map(lambda d: rules.sharding(*d.axes), model.defs,
                         is_leaf=IS_DEF)
     p_sds = jax.tree.map(lambda d: d.sds(cfg), model.defs, is_leaf=IS_DEF)
+    e_sds, e_sh, w_sds, w_sh = engine_state_structs(
+        eng, cfg, shape, rules, train_sds=p_sds, train_sh=p_sh,
+        feat_dim=cfg.d_model)
     with cost_probe():
-        c = jax.jit(step, in_shardings=(p_sh, t_sh, resized_sh(W))).lower(
-            p_sds, t_sds, resized(W)).compile()
+        c = jax.jit(eng.step_fn, in_shardings=(e_sh, w_sh)).lower(
+            e_sds, w_sds).compile()
     return _collect(c)
 
 

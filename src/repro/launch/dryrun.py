@@ -217,52 +217,22 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def _lower_titan(model, tcfg, shape: ShapeConfig, rules: AxisRules, nm: int,
                  score_seq: int = 1024):
-    """Lower the fused Titan train+select step (pod-scale selection config)."""
-    from repro.core.filter import FilterState
-    from repro.core.pipeline import TitanState, lm_hooks, make_titan_step
+    """Lower the fused engine train+select step (pod-scale selection config)."""
+    from repro.core.engine import TitanEngine
+    from repro.launch.costing import engine_state_structs
 
     cfg = model.cfg
     ttn = TitanConfig(stream_ratio=4, buffer_ratio=2, score_seq_len=score_seq,
                       filter_blocks=1, sketch_dim=16)
-    B = shape.global_batch
-    W, M = B * ttn.stream_ratio, B * ttn.buffer_ratio
     train_step = make_train_step(model, tcfg, n_micro=nm)
-    f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
-    step = make_titan_step(features_fn=f_fn, stats_fn=s_fn,
-                           train_step_fn=train_step,
-                           params_of=lambda s: s.params,
-                           batch_size=B, n_classes=cfg.n_domains, cfg=ttn)
-
-    specs = input_specs(cfg, shape)           # includes weights for next_batch
-    ex_specs = {k: v for k, v in specs.items() if k != "weights"}
-
-    def resized(n):
-        return {k: jax.ShapeDtypeStruct((n,) + tuple(d.shape[1:]),
-                                        d.resolved_dtype(cfg))
-                for k, d in ex_specs.items()}
-
-    def resized_sh(n):
-        return {k: rules.sharding(*d.axes) for k, d in ex_specs.items()}
-
-    window_sds = resized(W)
-    window_sh = resized_sh(W)
-    buf_sds = dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32))
-    buf_sh = dict(resized_sh(M), _score=rules.sharding("batch"))
-    nb_sds = dict(resized(B), weights=jax.ShapeDtypeStruct((B,), jnp.float32))
-    nb_sh = dict(resized_sh(B), weights=rules.sharding("batch"))
-    C, D = cfg.n_domains, cfg.d_model
-    rep = rules.sharding()
-    fstate_sds = FilterState(jax.ShapeDtypeStruct((C, D), jnp.float32),
-                             jax.ShapeDtypeStruct((C,), jnp.float32),
-                             jax.ShapeDtypeStruct((C,), jnp.float32))
-    fstate_sh = FilterState(rep, rep, rep)
-    t_sds = TitanState(fstate_sds, buf_sds, nb_sds,
-                       jax.ShapeDtypeStruct((2,), jnp.uint32))
-    t_sh = TitanState(fstate_sh, buf_sh, nb_sh, rep)
-    state_sds = abstract_train_state(model)
-    state_sh = _state_shardings(model, rules)
-    return jax.jit(step, in_shardings=(state_sh, t_sh, window_sh),
-                   donate_argnums=(0, 1)).lower(state_sds, t_sds, window_sds)
+    eng = TitanEngine.from_config(ttn, model, train_step_fn=train_step,
+                                  params_of=lambda s: s.params,
+                                  batch_size=shape.global_batch, jit=False)
+    e_sds, e_sh, window_sds, window_sh = engine_state_structs(
+        eng, cfg, shape, rules, train_sds=abstract_train_state(model),
+        train_sh=_state_shardings(model, rules), feat_dim=cfg.d_model)
+    return jax.jit(eng.step_fn, in_shardings=(e_sh, window_sh),
+                   donate_argnums=(0,)).lower(e_sds, window_sds)
 
 
 def build_pp_cell(arch: str, shape_name: str, *, multi_pod: bool = False,

@@ -1,16 +1,19 @@
 """End-to-end training driver.
 
     PYTHONPATH=src python -m repro.launch.train --arch mamba2-370m-reduced \
-        --steps 100 --batch 8 --seq 128 --titan --ckpt-dir /tmp/run1
+        --steps 100 --batch 8 --seq 128 --policy titan-cis --ckpt-dir /tmp/run1
 
 Runs on whatever devices exist (1 CPU device in this container; the
-production mesh path is exercised by dryrun.py). Features: Titan selection
-(or plain streaming), AdamW + warmup-cosine, checkpoint/auto-resume,
-straggler guard, eval loss, gradient compression.
+production mesh path is exercised by dryrun.py). Features: streaming data
+selection via TitanEngine with any registered policy (``--policy list``
+prints the registry; ``--titan`` is a legacy alias for titan-cis), AdamW +
+warmup-cosine, checkpoint/auto-resume, straggler guard, eval loss, gradient
+compression.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -19,12 +22,21 @@ import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager, find_latest, restore_checkpoint
 from repro.configs import TitanConfig, TrainConfig, get_config
-from repro.core.pipeline import lm_hooks, make_titan_step, titan_init
+from repro.core.engine import TitanEngine
+from repro.core.registry import available_policies, get_policy
 from repro.data.stream import SyntheticLMStream
 from repro.ft.elastic import StragglerGuard
 from repro.models.model import build_model
 from repro.train.state import TrainState, init_train_state
 from repro.train.step import make_train_step
+
+
+def _print_policy_registry(file=sys.stdout):
+    print("available selection policies:", file=file)
+    for name in available_policies():
+        p = get_policy(name, TitanConfig())
+        kind = "importance-weighted" if not p.unit_weights else "heuristic"
+        print(f"  {name:12s} {kind}", file=file)
 
 
 def main(argv=None):
@@ -34,7 +46,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--titan", action="store_true")
+    ap.add_argument("--titan", action="store_true",
+                    help="legacy alias for --policy titan-cis")
+    ap.add_argument("--policy", default="",
+                    help="selection policy from the registry "
+                         "('list' prints the available policies)")
     ap.add_argument("--stream-ratio", type=int, default=4)
     ap.add_argument("--buffer-ratio", type=int, default=2)
     ap.add_argument("--n-micro", type=int, default=1)
@@ -45,6 +61,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
+
+    if args.policy == "list":
+        _print_policy_registry()
+        return
+    if args.policy and args.policy not in available_policies():
+        print(f"error: unknown policy {args.policy!r}", file=sys.stderr)
+        _print_policy_registry(file=sys.stderr)
+        sys.exit(2)
+    policy = args.policy or ("titan-cis" if args.titan else "")
 
     cfg = get_config(args.arch)
     model = build_model(cfg)
@@ -58,7 +83,7 @@ def main(argv=None):
                                n_domains=cfg.n_domains, seed=args.seed)
     guard = StragglerGuard(
         lambda: stream.next_window(
-            args.batch * (args.stream_ratio if args.titan else 1)),
+            args.batch * (args.stream_ratio if policy else 1)),
         deadline_s=5.0)
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed))
@@ -77,30 +102,30 @@ def main(argv=None):
         out = {k: jnp.asarray(v if n is None else v[:n]) for k, v in w.items()}
         return out
 
-    if args.titan:
+    if policy:
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
-                          score_seq_len=min(args.seq, 1024), sketch_dim=8)
-        f_fn, s_fn = lm_hooks(model, ttn)  # impl from ttn.score_impl
-        tstep = jax.jit(make_titan_step(
-            features_fn=f_fn, stats_fn=s_fn, train_step_fn=train_step,
-            params_of=lambda s: s.params, batch_size=args.batch,
-            n_classes=cfg.n_domains, cfg=ttn))
+                          score_seq_len=min(args.seq, 1024), sketch_dim=8,
+                          policy=policy)
+        engine = TitanEngine.from_config(
+            ttn, model, train_step_fn=train_step,
+            params_of=lambda s: s.params, batch_size=args.batch)
         w0 = to_batch(guard.next_window())
-        tstate = titan_init(jax.random.PRNGKey(args.seed + 1), w0,
-                            f_fn(state.params, w0), args.batch,
-                            args.batch * args.buffer_ratio, cfg.n_domains)
+        estate = engine.init(jax.random.PRNGKey(args.seed + 1), state, w0)
+        print(f"[engine] policy={engine.policy.name} "
+              f"window={engine.window_size} buffer={engine.buffer_size}")
     else:
         tstep = jax.jit(train_step)
-        tstate = None
+        estate = None
 
     eval_fn = jax.jit(lambda p, b: model.loss_fn(p, b)[0])
 
     t0 = time.time()
     for step in range(start_step, args.steps):
         window = to_batch(guard.next_window())
-        if args.titan:
-            state, tstate, metrics = tstep(state, tstate, window)
+        if policy:
+            estate, metrics = engine.step(estate, window)
+            state = estate.train
         else:
             batch = {k: v[:args.batch] for k, v in window.items()}
             batch["weights"] = jnp.ones((args.batch,), jnp.float32)

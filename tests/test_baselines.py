@@ -54,6 +54,22 @@ def test_camel_spreads_selection():
     assert (picked < 25).any() and (picked >= 25).any()
 
 
+@pytest.mark.parametrize("name", sorted(STRATEGIES))
+def test_batch_exceeds_valid_no_masked_picks(name):
+    """Regression: with batch > #valid, top-k over NEG-masked scores (ocs et
+    al.) and camel's greedy argmin used to return masked indices silently.
+    Valid picks must be recycled instead."""
+    stats, C = _stats(seed=4, N=20)
+    valid = jnp.zeros((20,), bool).at[:3].set(True)
+    idx, w = STRATEGIES[name](jax.random.PRNGKey(0), stats, valid, 8)
+    live = np.asarray(idx)[np.asarray(w) > 0]
+    assert live.size, f"{name} selected nothing"
+    assert (live < 3).all(), f"{name} returned masked indices: {live}"
+    # all three valid candidates are reachable duplicates-wise: every slot
+    # carries a valid index
+    assert (np.asarray(idx) < 3).all() or not np.all(np.asarray(w) > 0)
+
+
 def test_titan_cis_wrapper():
     stats, C = _stats(seed=2)
     valid = jnp.ones_like(stats["loss"], bool)

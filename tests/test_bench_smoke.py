@@ -1,8 +1,8 @@
-"""Benchmark-harness smoke test (opt-in: ``pytest --bench-smoke``).
+"""Benchmark-harness smoke tests (opt-in: ``pytest --bench-smoke``).
 
-Runs the kernel micro-benchmarks at tiny shapes and checks the
-machine-readable ``BENCH_kernels.json`` contract that tracks the perf
-trajectory across PRs."""
+Runs the kernel and policy micro-benchmarks at tiny shapes and checks the
+machine-readable ``BENCH_kernels.json`` / ``BENCH_policies.json`` contracts
+that track the perf trajectory across PRs."""
 import json
 import os
 
@@ -33,3 +33,22 @@ def test_bench_kernels_smoke_writes_json(tmp_path):
     errs = [r["gbps"] for r in payload["kernels"]
             if r["kernel"].endswith("interpret-maxerr")]
     assert errs and all(e < 1e-4 for e in errs), errs
+
+
+def test_bench_policies_smoke_writes_json(tmp_path):
+    from benchmarks import bench_policies
+    from repro.core.registry import available_policies
+
+    path = os.path.join(str(tmp_path), "BENCH_policies.json")
+    rows = bench_policies.main(smoke=True, json_path=path)
+    assert rows, "benchmark produced no rows"
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "bench_policies/v1"
+    seen = {r["policy"] for r in payload["policies"]}
+    assert set(available_policies()) <= seen, seen
+    for r in payload["policies"]:
+        assert {"policy", "window", "us_per_call", "overhead_vs_rs"} <= set(r)
+        assert r["us_per_call"] > 0
+    rs_rows = [r for r in payload["policies"] if r["policy"] == "rs"]
+    assert all(abs(r["overhead_vs_rs"] - 1.0) < 1e-9 for r in rs_rows)

@@ -74,27 +74,25 @@ def test_titan_beats_random_on_hard_stream():
 
 
 def test_lm_titan_end_to_end_reduces_loss():
+    from repro.core.engine import TitanEngine
+    from repro.hooks import lm_hooks as lm_hooks_new
     cfg = get_config("deepseek-moe-16b-reduced")
     model = build_model(cfg)
     tcfg = TrainConfig(lr=2e-3, warmup_steps=5, total_steps=60)
-    train_step = make_train_step(model, tcfg)
     ttn = TitanConfig(stream_ratio=4, buffer_ratio=2, sketch_dim=4,
                       score_seq_len=32)
-    f_fn, s_fn = lm_hooks(model, ttn, impl="ref")
     B, W, T, C = 4, 16, 64, 8
-    step = jax.jit(make_titan_step(features_fn=f_fn, stats_fn=s_fn,
-                                   train_step_fn=train_step,
-                                   params_of=lambda s: s.params,
-                                   batch_size=B, n_classes=C, cfg=ttn))
+    engine = TitanEngine.from_config(
+        ttn, model, hooks=lm_hooks_new(model, ttn, impl="ref"),
+        train_step_fn=make_train_step(model, tcfg), batch_size=B)
     stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=T, n_domains=C, seed=0)
     state = init_train_state(model, jax.random.PRNGKey(0))
     w0 = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-    ts = titan_init(jax.random.PRNGKey(1), w0, f_fn(state.params, w0), B,
-                    B * 2, C)
+    es = engine.init(jax.random.PRNGKey(1), state, w0)
     losses = []
     for i in range(40):
         w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-        state, ts, m = step(state, ts, w)
+        es, m = engine.step(es, w)
         losses.append(float(m["loss"]))
     assert np.isfinite(losses).all()
     assert np.mean(losses[-8:]) < np.mean(losses[:8]), losses
