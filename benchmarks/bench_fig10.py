@@ -55,11 +55,11 @@ def run(method="titan", n_clients=50, rounds=40, seed=0, B=10, W=50, M=20,
             if method == "titan":
                 w0 = {k: jnp.asarray(v) for k, v in
                       client_streams[c].next_window(W).items()}
+                # init copies p: engine.run donates state, and the global
+                # params must survive for the other clients + FedAvg
                 es = engine.init(jax.random.PRNGKey(seed + c), p, w0)
-                for _ in range(local_iters):
-                    w = {k: jnp.asarray(v) for k, v in
-                         client_streams[c].next_window(W).items()}
-                    es, _ = engine.step(es, w)
+                es, _ = engine.run(es, client_streams[c], local_iters,
+                                   prefetch=0, metrics_every=0, window_size=W)
                 p = es.train
             else:
                 for _ in range(local_iters):

@@ -54,10 +54,12 @@ def run(seed=0):
 
     t_seq = _timeit(jax.jit(sequential), params, w)
 
+    # donate=False: _timeit replays the same estate, which a donating step
+    # would invalidate after the first call on backends that alias buffers
     engine = TitanEngine.from_config(
         TitanConfig(), hooks=har_hooks(ecfg), train_step_fn=train,
         params_of=lambda s: s, batch_size=task.B, n_classes=C,
-        buffer_size=task.M)
+        buffer_size=task.M, donate=False)
     estate = engine.init(jax.random.PRNGKey(1), params, w)
     t_fused = _timeit(lambda e, ww: engine.step(e, ww)[0], estate, w)
 

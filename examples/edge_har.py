@@ -6,7 +6,8 @@ Mirrors the paper's HAR setup (MLP over windowed IMU features, 6 activity
 classes, stream velocity v=100, batch 10, buffer 30) and compares Titan
 against random selection and classic importance sampling under the identical
 data budget — the Table-1 experiment at example scale. Every method runs
-through the same ``TitanEngine``; only the ``policy`` registry key changes
+through the same ``engine.run()`` streaming loop (background window
+prefetch, donated device-resident state); only the ``policy`` key changes
 (rs/is use a window-sized buffer, i.e. they select straight from the
 stream window).
 """
@@ -63,11 +64,14 @@ def main():
         st = engine.init(jax.random.PRNGKey(1), params, w0)
         t0 = time.perf_counter()
         curve = []
-        for r in range(ROUNDS):
-            w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-            st, _ = engine.step(st, w)
+
+        def on_round(r, s, m):
             if (r + 1) % 25 == 0:
-                curve.append(float(mlp_accuracy(ecfg, st.train, xt, yt)))
+                curve.append(float(mlp_accuracy(ecfg, s.train, xt, yt)))
+
+        st, _ = engine.run(st, stream, ROUNDS, prefetch=2, metrics_every=0,
+                           window_size=W, on_round=on_round)
+        jax.block_until_ready(st.t)
         results[policy] = (curve, time.perf_counter() - t0)
 
     print(f"\n{'method':10s} {'final_acc':>9s} {'wall_s':>8s}  accuracy curve")

@@ -3,9 +3,9 @@
     python examples/federated.py [--rounds 40]     # runs from any directory
 
 50 clients with non-IID local streams (each missing one class); every round a
-random 20% train 3 local iterations — selecting their local batches through
-the ``TitanEngine`` (policy "titan-cis") — and FedAvg aggregates. Compare
-against random local selection.
+random 20% train 3 local iterations — each client's local loop is one
+``engine.run()`` call over its own stream (policy "titan-cis") — and FedAvg
+aggregates. Compare against random local selection.
 """
 import os
 import sys

@@ -6,9 +6,11 @@ Builds a reduced Qwen2-style LM, streams domain-tagged synthetic text, and
 trains through the ``TitanEngine`` facade: one jitted one-round-delay step
 fusing the model update with coarse Rep/Div filtering -> candidate buffer ->
 C-IS (optimal inter-class allocation + gradient-norm sampling) -> weighted
-SGD. Swap ``policy="titan-cis"`` for any registry entry ("rs", "is", "ll",
-"hl", "ce", "ocs", "camel") to run a paper-§4.1 baseline under the identical
-engine — one-flag experiments.
+SGD. The whole loop is one ``engine.run()`` call: windows prefetched on a
+background thread, EngineState donated and device-resident, metrics drained
+asynchronously every 10 rounds. Swap ``policy="titan-cis"`` for any registry
+entry ("rs", "is", "ll", "hl", "ce", "ocs", "camel") to run a paper-§4.1
+baseline under the identical engine — one-flag experiments.
 """
 import os
 import sys
@@ -44,9 +46,7 @@ def main():
     state = engine.init(jax.random.PRNGKey(1),
                         init_train_state(model, jax.random.PRNGKey(0)), w0)
 
-    for i in range(steps):
-        window = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
-        state, m = engine.step(state, window)
+    def log(i, m):
         if (i + 1) % 10 == 0:
             # titan_alloc is a titan-cis diagnostic; other policies emit none
             alloc = m.get("titan_alloc")
@@ -54,6 +54,9 @@ def main():
                    + "]  " if alloc is not None else "")
             print(f"step {i+1:3d}  loss {float(m['loss']):.3f}  "
                   f"{tag}mean_w {float(m['titan_mean_weight']):.2f}")
+
+    state, _ = engine.run(state, stream, steps, prefetch=2, metrics_every=10,
+                          window_size=W, on_metrics=log)
     print("done — Titan allocated the batch across domains by class "
           "importance I(y) every round.")
 

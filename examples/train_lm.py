@@ -10,8 +10,9 @@ full production stack (Titan selection, AdamW, checkpoints, straggler guard).
     # any registry policy rides the same engine (rs/is/ll/hl/ce/ocs/camel)
     python examples/train_lm.py --policy rs
 
-Delegates to repro.launch.train — the same TitanEngine-backed driver a real
-job would use.
+Delegates to repro.launch.train — the same ``engine.run()``-backed driver a
+real job would use (async window prefetch, donated device-resident state,
+deferred metric readback).
 """
 import os
 import sys
@@ -41,6 +42,8 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/titan_lm_run")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="background-prefetched stream windows (0 = sync)")
     ap.add_argument("--no-titan", action="store_true")
     ap.add_argument("--policy", default="",
                     help="selection policy (registry key, default titan-cis; "
@@ -62,7 +65,8 @@ def main():
     argv = ["--arch", cfg.name, "--steps", str(args.steps),
             "--batch", str(args.batch), "--seq", str(args.seq),
             "--ckpt-dir", args.ckpt_dir, "--log-every", "20",
-            "--eval-every", "50", "--ckpt-every", "100"]
+            "--eval-every", "50", "--ckpt-every", "100",
+            "--prefetch", str(args.prefetch)]
     if not args.no_titan:
         argv += ["--policy", args.policy or "titan-cis"]
     train_mod.main(argv)

@@ -10,6 +10,9 @@ decides which samples matter:
                                      batch_size=B, policy="titan-cis")
     state  = engine.init(rng, train_state, first_window)
     state, metrics = engine.step(state, window)       # one jitted program
+    state, metrics = engine.run(state, stream, rounds=100)   # whole driver:
+        # async host prefetch + donated device-resident state + deferred
+        # metric readback — see run() and DESIGN.md §6
 
 Each ``step`` fuses (A) the model update with the batch selected in the
 previous round and (B/C) stage-1 observation/admission of the incoming
@@ -20,6 +23,7 @@ Fig./Table baseline comparisons into one-flag experiments.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
@@ -30,6 +34,7 @@ from repro.configs.base import TitanConfig
 from repro.core.filter import (NEG, buffer_examples, buffer_merge,
                                buffer_valid, init_buffer)
 from repro.core.registry import PolicySpecs, SelectionPolicy, get_policy
+from repro.data.loader import Prefetcher
 
 
 @jax.tree_util.register_dataclass
@@ -62,7 +67,8 @@ class TitanEngine:
                  cfg: Optional[TitanConfig] = None,
                  params_of: Optional[Callable] = None,
                  batch_size: int, n_classes: int,
-                 buffer_size: Optional[int] = None, jit: bool = True):
+                 buffer_size: Optional[int] = None, jit: bool = True,
+                 donate: bool = True):
         self.cfg = cfg if cfg is not None else TitanConfig()
         self.policy: SelectionPolicy = get_policy(
             policy if policy is not None else self.cfg.policy, self.cfg)
@@ -74,15 +80,24 @@ class TitanEngine:
         self.buffer_size = (buffer_size if buffer_size is not None
                             else batch_size * self.cfg.buffer_ratio)
         self.step_fn = self._step
-        self.step = jax.jit(self._step) if jit else self._step
+        # Donating EngineState lets XLA update the candidate buffer (and the
+        # train/optimizer pytrees) in place instead of allocating a fresh
+        # copy in HBM every round — the state is device-resident for the
+        # whole run. Aliasing rules: DESIGN.md §6.
+        self.donate = bool(donate and jit)
+        if jit:
+            self.step = jax.jit(self._step,
+                                donate_argnums=(0,) if self.donate else ())
+        else:
+            self.step = self._step
 
     @classmethod
     def from_config(cls, cfg: TitanConfig, model=None, *,
                     train_step_fn: Callable, policy: Any = None,
                     hooks=None, params_of: Optional[Callable] = None,
                     batch_size: int, n_classes: Optional[int] = None,
-                    buffer_size: Optional[int] = None, jit: bool = True
-                    ) -> "TitanEngine":
+                    buffer_size: Optional[int] = None, jit: bool = True,
+                    donate: bool = True) -> "TitanEngine":
         """Build an engine from a TitanConfig.
 
         For LM models (``build_model`` output) hooks default to the fused
@@ -102,7 +117,8 @@ class TitanEngine:
             n_classes = model.cfg.n_domains
         return cls(hooks=hooks, train_step_fn=train_step_fn, policy=policy,
                    cfg=cfg, params_of=params_of, batch_size=batch_size,
-                   n_classes=n_classes, buffer_size=buffer_size, jit=jit)
+                   n_classes=n_classes, buffer_size=buffer_size, jit=jit,
+                   donate=donate)
 
     @property
     def window_size(self) -> int:
@@ -113,7 +129,18 @@ class TitanEngine:
 
     def init(self, rng, train_state, window: Dict) -> EngineState:
         """Bootstrap from the first stream window: warm the policy's
-        estimators, fill the buffer, take the first batch verbatim."""
+        estimators, fill the buffer, take the first batch verbatim.
+
+        When the engine donates, the returned state owns copies of the
+        caller's train-state arrays: ``step`` donates the whole EngineState,
+        and on donating backends a state that aliased the caller's params
+        would invalidate them on the first step (DESIGN.md §6 aliasing
+        rules).
+        """
+        if self.donate:
+            train_state = jax.tree.map(
+                lambda a: jnp.array(a) if isinstance(a, jax.Array) else a,
+                train_state)
         params = self._params_of(train_state)
         t0 = jnp.zeros((), jnp.int32)
         obs = {"domain": window["domain"], "round": t0, "features": None}
@@ -185,3 +212,72 @@ class TitanEngine:
         metrics["titan_mean_weight"] = jnp.mean(w)
         return EngineState(train=new_train, policy=pstate, buffer=buffer,
                            next_batch=nb, rng=rng, t=state.t + 1), metrics
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, state: EngineState, stream, rounds: int, *,
+            prefetch: int = 2, metrics_every: int = 1,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            on_round: Optional[Callable[[int, EngineState, Dict], None]] = None,
+            window_size: Optional[int] = None, start_round: int = 0,
+            device=None) -> tuple:
+        """Drive ``rounds`` engine steps over ``stream`` — the one loop every
+        caller shares.
+
+        The stream is consumed through a :class:`~repro.data.loader.Prefetcher`
+        (``prefetch`` = parked-window depth; 0 = synchronous, bit-identical to
+        a hand-rolled per-round loop), so host window generation and
+        host→device transfer overlap device compute. Steps are dispatched
+        ahead of metric readback: each round's metrics land in a bounded
+        host-side queue and are fetched (``jax.device_get``) only every
+        ``metrics_every`` rounds — the device never waits on a scalar for
+        logging. ``metrics_every=0`` skips per-round readback entirely and
+        fetches only the final round's metrics.
+
+        Callback seams, both optional:
+
+        - ``on_metrics(round, host_metrics)`` — at every drain, once per
+          drained round, in round order. Metrics are numpy on host; staleness
+          is bounded by ``metrics_every`` rounds (DESIGN.md §6).
+        - ``on_round(round, state, device_metrics)`` — every round, right
+          after dispatch, with the *new* state. Anything the callback keeps
+          from ``state`` must be copied before the next round: the following
+          step donates it (checkpoint saves that snapshot to host are safe).
+          Blocking here (eval, ``block_until_ready``) serializes the pipeline
+          — keep it off the steady-state path.
+
+        Returns ``(state, last_metrics)``; ``last_metrics`` is the final
+        round's host metrics (None when ``rounds == 0``).
+        """
+        n = int(window_size) if window_size else self.window_size
+        pending: deque = deque()
+        last: Dict[str, Any] = {"m": None}
+
+        def drain():
+            if not pending:
+                return
+            items = list(pending)
+            pending.clear()
+            hosts = jax.device_get([m for _, m in items])  # one batched fetch
+            for (r, _), host in zip(items, hosts):
+                last["m"] = host
+                if on_metrics is not None:
+                    on_metrics(r, host)
+
+        with Prefetcher(stream, n, depth=prefetch, rounds=rounds,
+                        device=device) as pf:
+            for i in range(rounds):
+                r = start_round + i
+                state, metrics = self.step(state, pf.get())
+                if metrics_every:
+                    pending.append((r, metrics))
+                    if len(pending) >= metrics_every:
+                        drain()
+                else:
+                    last["m"] = metrics  # device-side; fetched after the loop
+                if on_round is not None:
+                    on_round(r, state, metrics)
+        drain()
+        if not metrics_every and last["m"] is not None:
+            last["m"] = jax.device_get(last["m"])
+        return state, last["m"]

@@ -1,4 +1,5 @@
+from repro.data.loader import Prefetcher, StreamExhausted  # noqa: F401
 from repro.data.stream import (  # noqa: F401
-    GaussianMixtureStream, SyntheticLMStream, save_stream_shard,
-    FileBackedStream,
+    FileBackedStream, GaussianMixtureStream, StreamProtocol,
+    SyntheticLMStream, mix_seed, mixed_rng, save_stream_shard,
 )

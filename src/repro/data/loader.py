@@ -1,0 +1,163 @@
+"""Async host prefetch: the streaming data plane's latency-hiding layer.
+
+The paper's pipelined co-execution (§3.4) demands that data handling never
+stalls training. On the host side that means the expensive parts of a round
+— drawing the next stream window (tokenization / sensor featurization /
+shard IO) and staging it onto the device — must overlap the previous
+round's compute. :class:`Prefetcher` does exactly that: a single daemon
+thread draws windows from a :class:`~repro.data.stream.StreamProtocol` in
+deterministic round order, ``jax.device_put``s them, and parks up to
+``depth`` device-resident windows in a bounded queue. The consumer
+(``TitanEngine.run`` or any hand-rolled loop) pops ready windows without
+touching the stream.
+
+Guarantees:
+
+- **Deterministic round order.** One worker thread consumes the stream
+  sequentially, so round r's window is bit-identical to what a synchronous
+  loop would have drawn — prefetching never reorders or skips rounds
+  (stateful streams like drift replay stay correct).
+- **Bounded lookahead.** The queue holds at most ``depth`` windows, so the
+  stream never runs unboundedly ahead of training (host memory stays flat;
+  ``depth+1`` windows exist at most: ``depth`` parked + 1 in flight).
+- **Clean shutdown.** ``close()`` (or the context manager) wakes a blocked
+  worker, joins the thread, and is idempotent. Worker exceptions surface on
+  the consumer's next ``get()`` instead of dying silently.
+- **Sync fallback.** ``depth=0`` is a synchronous passthrough (no thread),
+  byte-identical behavior for parity tests and debugging.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+
+class StreamExhausted(Exception):
+    """Raised by ``get()`` once a rounds-capped Prefetcher is drained."""
+
+
+_DONE = object()
+
+
+class Prefetcher:
+    """Double/triple-buffered background window loader over a stream.
+
+    Args:
+      stream: a ``StreamProtocol`` (``next_window(n)`` in round order).
+      n: window size passed to every ``next_window`` call.
+      depth: parked-window capacity; 0 = synchronous passthrough.
+      rounds: optional production cap — the worker stops after producing
+        this many windows and ``get()`` raises ``StreamExhausted``.
+      device: optional target for ``jax.device_put`` (default device when
+        None).
+    """
+
+    def __init__(self, stream, n: int, *, depth: int = 2,
+                 rounds: Optional[int] = None, device=None):
+        if depth < 0:
+            raise ValueError(f"depth must be >= 0, got {depth}")
+        self.stream = stream
+        self.n = int(n)
+        self.depth = depth
+        self.rounds = rounds
+        self.device = device
+        self._produced = 0
+        self._exhausted = False
+        self._closed = False
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+        if depth > 0:
+            self._q: queue.Queue = queue.Queue(maxsize=depth)
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._worker, name="titan-prefetch", daemon=True)
+            self._thread.start()
+
+    # -- worker side --------------------------------------------------------
+
+    def _stage(self, window: Dict[str, Any]) -> Dict[str, jax.Array]:
+        return {k: jax.device_put(v, self.device) for k, v in window.items()}
+
+    def _offer(self, item) -> bool:
+        """Blocking put that stays responsive to close(). False = shut down."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self):
+        try:
+            while not self._stop.is_set():
+                if self.rounds is not None and self._produced >= self.rounds:
+                    self._offer(_DONE)
+                    return
+                window = self._stage(self.stream.next_window(self.n))
+                self._produced += 1
+                if not self._offer(("ok", window)):
+                    return
+        except BaseException as e:  # surface on the consumer side
+            self._offer(("err", e))
+
+    # -- consumer side ------------------------------------------------------
+
+    def get(self) -> Dict[str, jax.Array]:
+        """Next round's device-resident window, in stream order."""
+        if self._error is not None:
+            raise self._error
+        if self._exhausted:
+            raise StreamExhausted(f"prefetcher capped at {self.rounds} rounds")
+        if self._closed:
+            # a silent fall-through would re-draw from the stream directly,
+            # skipping the windows the worker had already parked
+            raise RuntimeError("Prefetcher is closed")
+        if self._thread is None:  # depth=0: synchronous passthrough
+            if self.rounds is not None and self._produced >= self.rounds:
+                self._exhausted = True
+                raise StreamExhausted(f"prefetcher capped at {self.rounds} rounds")
+            self._produced += 1
+            return self._stage(self.stream.next_window(self.n))
+        item = self._q.get()
+        if item is _DONE:
+            self._exhausted = True
+            self.close()
+            raise StreamExhausted(f"prefetcher capped at {self.rounds} rounds")
+        tag, val = item
+        if tag == "err":
+            self._error = val
+            self.close()
+            raise val
+        return val
+
+    def close(self):
+        """Stop the worker and join it. Idempotent; safe mid-stream. The
+        prefetcher is unusable afterwards (get() raises)."""
+        self._closed = True
+        if self._thread is None:
+            return
+        self._stop.set()
+        try:  # unblock a worker stuck in put()
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+        self._thread = None
+
+    def __enter__(self) -> "Prefetcher":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __iter__(self):
+        while True:
+            try:
+                yield self.get()
+            except StreamExhausted:
+                return

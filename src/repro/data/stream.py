@@ -6,14 +6,70 @@ pretraining stream where each sequence carries a domain tag. Streams are
 host-sharded and deterministic: shard i of S draws from an independent
 per-(seed, shard, round) generator, so multi-host runs are reproducible and a
 restarted host replays its shard exactly (fault-tolerance requirement).
+
+Every stream implements :class:`StreamProtocol` — the typed contract the
+async data plane (``repro.data.loader.Prefetcher``, ``TitanEngine.run``)
+drives: ``next_window(n)`` produces the next round's host window in
+deterministic round order, ``window_specs(n)`` describes its pytree without
+materializing data (used to pre-build device buffers and for conformance
+checks).
 """
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
 
+import jax
 import numpy as np
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return (x ^ (x >> 31)) & _M64
+
+
+def mix_seed(*fields: int) -> int:
+    """Collision-resistant 64-bit hash of (seed, shard, round, ...). A
+    linear mix like ``seed*A + shard*B + round`` is NOT injective over the
+    fields (shard 0 / round B collides with shard 1 / round 0); folding
+    each field through splitmix64 keeps distinct tuples on distinct
+    generator streams. Feed the result to RandomState via :func:`mixed_rng`
+    — a plain int seed would be truncated to 32 bits, where birthday
+    collisions reappear within ~80k rounds."""
+    x = 0x243F6A8885A308D3  # pi fractional bits: arbitrary non-zero start
+    for f in fields:
+        x = _splitmix64(x ^ (int(f) & _M64))
+    return int(x)
+
+
+def mixed_rng(*fields: int) -> np.random.RandomState:
+    """RandomState keyed on the full 64-bit ``mix_seed`` hash (as two
+    32-bit words, the widest seed RandomState accepts losslessly)."""
+    h = mix_seed(*fields)
+    return np.random.RandomState(
+        np.array([h & 0xFFFFFFFF, h >> 32], dtype=np.uint32))
+
+
+@runtime_checkable
+class StreamProtocol(Protocol):
+    """Contract between streams and the async data plane.
+
+    ``next_window(n)`` returns the next round's window: a flat dict of
+    numpy arrays with leading dimension ``n`` (must include ``domain``),
+    advancing the stream by exactly one round. ``window_specs(n)`` returns
+    the matching ``jax.ShapeDtypeStruct`` pytree without generating data.
+    """
+
+    def next_window(self, n: int) -> Dict[str, np.ndarray]:
+        ...
+
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        ...
 
 
 @dataclass
@@ -38,8 +94,7 @@ class SyntheticLMStream:
             self.domain_weights = np.ones(self.n_domains) / self.n_domains
 
     def _rs(self):
-        return np.random.RandomState(
-            (self.seed * 1_000_003 + self.shard * 7919 + self.round) % 2**31)
+        return mixed_rng(self.seed, self.shard, self.round)
 
     def next_window(self, n: int) -> Dict[str, np.ndarray]:
         rs = self._rs()
@@ -52,6 +107,12 @@ class SyntheticLMStream:
         return {"tokens": toks[:, :T], "labels": toks[:, 1:T + 1],
                 "domain": dom.astype(np.int32)}
 
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        T = self.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((n, T), np.int32),
+                "labels": jax.ShapeDtypeStruct((n, T), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32)}
+
 
 @dataclass
 class GaussianMixtureStream:
@@ -61,6 +122,8 @@ class GaussianMixtureStream:
     in_dim: int
     n_classes: int
     seed: int = 0
+    shard: int = 0
+    num_shards: int = 1
     class_noise: Optional[np.ndarray] = None
     feature_noise_frac: float = 0.0
     feature_noise_std: float = 2.0
@@ -78,7 +141,7 @@ class GaussianMixtureStream:
             self.class_weights = np.ones(self.n_classes) / self.n_classes
 
     def _rs(self):
-        return np.random.RandomState((self.seed * 999_983 + self.round) % 2**31)
+        return mixed_rng(self.seed, self.shard, self.round)
 
     def next_window(self, n: int) -> Dict[str, np.ndarray]:
         rs = self._rs()
@@ -96,6 +159,11 @@ class GaussianMixtureStream:
             y_obs[m] = rs.randint(0, self.n_classes, int(m.sum()))
         return {"x": x.astype(np.float32), "y": y_obs.astype(np.int32),
                 "domain": y_obs.astype(np.int32)}
+
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {"x": jax.ShapeDtypeStruct((n, self.in_dim), np.float32),
+                "y": jax.ShapeDtypeStruct((n,), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32)}
 
     def test_set(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
         rs = np.random.RandomState(self.seed + 77)
@@ -115,13 +183,44 @@ def save_stream_shard(path: str, window: Dict[str, np.ndarray]):
 
 @dataclass
 class FileBackedStream:
-    """Reads pre-materialized window shards round-robin (production path)."""
+    """Reads pre-materialized window shards round-robin (production path).
+
+    ``paths`` is the full fleet of shard files; host ``shard`` of
+    ``num_shards`` owns ``paths[shard::num_shards]`` so multi-host runs
+    partition the same manifest without coordination. A shard file that
+    holds fewer than the requested ``n`` rows raises — silently truncating
+    the round would skew the stream-velocity accounting every consumer
+    assumes."""
     paths: Tuple[str, ...]
+    shard: int = 0
+    num_shards: int = 1
     round: int = field(default=0, init=False)
 
+    def __post_init__(self):
+        if not 0 <= self.shard < self.num_shards:
+            raise ValueError(f"shard {self.shard} out of range for "
+                             f"num_shards={self.num_shards}")
+        self._paths = tuple(self.paths)[self.shard::self.num_shards]
+        if not self._paths:
+            raise ValueError(f"shard {self.shard}/{self.num_shards} owns no "
+                             f"paths out of {len(tuple(self.paths))}")
+
     def next_window(self, n: int) -> Dict[str, np.ndarray]:
-        p = self.paths[self.round % len(self.paths)]
+        p = self._paths[self.round % len(self._paths)]
         self.round += 1
+        out = {}
         with np.load(p) as z:
-            out = {k: z[k][:n] for k in z.files}
+            for k in z.files:
+                a = z[k]
+                if a.shape[0] < n:
+                    raise ValueError(
+                        f"shard file {p} holds {a.shape[0]} rows of {k!r} "
+                        f"but the round needs {n}")
+                out[k] = a[:n]
         return out
+
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        with np.load(self._paths[0]) as z:
+            return {k: jax.ShapeDtypeStruct((n,) + z[k].shape[1:],
+                                            z[k].dtype)
+                    for k in z.files}

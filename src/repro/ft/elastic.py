@@ -25,20 +25,33 @@ class StragglerGuard:
     """Per-round data deadline. If the stream cannot produce the next window
     within `deadline_s`, the previous window is substituted (training never
     stalls on a slow host); substitutions are counted for goodput accounting.
+
+    Wraps either a ``repro.data.StreamProtocol`` (preferred — the guard then
+    conforms to the protocol itself, so it slots under a
+    ``repro.data.Prefetcher`` and ``TitanEngine.run`` like any stream) or a
+    legacy zero-arg fetch callable.
     """
 
-    def __init__(self, fetch: Callable[[], Dict], deadline_s: float = 1.0):
-        self.fetch = fetch
+    def __init__(self, stream, deadline_s: float = 1.0):
+        if hasattr(stream, "next_window"):
+            self.stream: Optional[object] = stream
+            self.fetch: Optional[Callable[[], Dict]] = None
+        else:
+            self.stream = None
+            self.fetch = stream
         self.deadline_s = deadline_s
         self.last: Optional[Dict] = None
         self.substituted = 0
         self.rounds = 0
 
-    def next_window(self) -> Dict:
+    def next_window(self, n: Optional[int] = None) -> Dict:
         self.rounds += 1
         t0 = time.monotonic()
         try:
-            window = self.fetch()
+            if self.fetch is not None:
+                window = self.fetch()
+            else:
+                window = self.stream.next_window(n)
         except Exception:
             window = None
         late = (time.monotonic() - t0) > self.deadline_s
@@ -49,6 +62,12 @@ class StragglerGuard:
             raise RuntimeError("no window available and no fallback yet")
         self.last = window
         return window
+
+    def window_specs(self, n: int):
+        if self.stream is None or not hasattr(self.stream, "window_specs"):
+            raise TypeError("StragglerGuard wraps a bare fetch callable; "
+                            "construct it with a StreamProtocol for specs")
+        return self.stream.window_specs(n)
 
     @property
     def goodput(self) -> float:

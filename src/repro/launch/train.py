@@ -9,6 +9,12 @@ selection via TitanEngine with any registered policy (``--policy list``
 prints the registry; ``--titan`` is a legacy alias for titan-cis), AdamW +
 warmup-cosine, checkpoint/auto-resume, straggler guard, eval loss, gradient
 compression.
+
+The round loop is ``engine.run()``: stream windows are prefetched on a
+background thread (``--prefetch`` buffered windows, 0 = synchronous),
+EngineState stays device-resident via buffer donation, and metrics are
+drained asynchronously every ``--log-every`` rounds instead of serializing
+dispatch with a per-round fetch.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ from repro.ckpt.checkpoint import CheckpointManager, find_latest, restore_checkp
 from repro.configs import TitanConfig, TrainConfig, get_config
 from repro.core.engine import TitanEngine
 from repro.core.registry import available_policies, get_policy
+from repro.data.loader import Prefetcher
 from repro.data.stream import SyntheticLMStream
 from repro.ft.elastic import StragglerGuard
 from repro.models.model import build_model
@@ -60,6 +67,8 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="background-prefetched stream windows (0 = sync)")
     args = ap.parse_args(argv)
 
     if args.policy == "list":
@@ -81,10 +90,7 @@ def main(argv=None):
 
     stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=args.seq,
                                n_domains=cfg.n_domains, seed=args.seed)
-    guard = StragglerGuard(
-        lambda: stream.next_window(
-            args.batch * (args.stream_ratio if policy else 1)),
-        deadline_s=5.0)
+    guard = StragglerGuard(stream, deadline_s=5.0)
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed))
     start_step = 0
@@ -102,6 +108,28 @@ def main(argv=None):
         out = {k: jnp.asarray(v if n is None else v[:n]) for k, v in w.items()}
         return out
 
+    eval_fn = jax.jit(lambda p, b: model.loss_fn(p, b)[0])
+    rounds = args.steps - start_step
+    clock = {"t": time.time()}
+
+    def log_metrics(step, metrics):
+        if (step + 1) % args.log_every == 0:
+            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-clock['t'])/args.log_every:.2f}s/step)")
+            clock["t"] = time.time()
+
+    def eval_and_ckpt(step, train_state):
+        if (step + 1) % args.eval_every == 0:
+            eb = dict(to_batch(eval_window),
+                      weights=jnp.ones((args.batch,), jnp.float32))
+            print(f"  eval loss {float(eval_fn(train_state.params, eb)):.4f} "
+                  f"goodput {guard.goodput:.3f}")
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            # snapshots to host before the next step donates the state
+            mgr.save(step + 1, train_state, extra={"arch": args.arch})
+
     if policy:
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
@@ -110,39 +138,28 @@ def main(argv=None):
         engine = TitanEngine.from_config(
             ttn, model, train_step_fn=train_step,
             params_of=lambda s: s.params, batch_size=args.batch)
-        w0 = to_batch(guard.next_window())
+        w0 = to_batch(guard.next_window(engine.window_size))
         estate = engine.init(jax.random.PRNGKey(args.seed + 1), state, w0)
         print(f"[engine] policy={engine.policy.name} "
-              f"window={engine.window_size} buffer={engine.buffer_size}")
+              f"window={engine.window_size} buffer={engine.buffer_size} "
+              f"prefetch={args.prefetch} donate={engine.donate}")
+        estate, _ = engine.run(
+            estate, guard, rounds, prefetch=args.prefetch,
+            metrics_every=args.log_every, on_metrics=log_metrics,
+            on_round=lambda step, st, m: eval_and_ckpt(step, st.train),
+            start_round=start_step)
+        state = estate.train
     else:
         tstep = jax.jit(train_step)
-        estate = None
-
-    eval_fn = jax.jit(lambda p, b: model.loss_fn(p, b)[0])
-
-    t0 = time.time()
-    for step in range(start_step, args.steps):
-        window = to_batch(guard.next_window())
-        if policy:
-            estate, metrics = engine.step(estate, window)
-            state = estate.train
-        else:
-            batch = {k: v[:args.batch] for k, v in window.items()}
-            batch["weights"] = jnp.ones((args.batch,), jnp.float32)
-            state, metrics = tstep(state, batch)
-        if (step + 1) % args.log_every == 0:
-            print(f"step {step+1:5d} loss {float(metrics['loss']):.4f} "
-                  f"lr {float(metrics['lr']):.2e} "
-                  f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({(time.time()-t0)/args.log_every:.2f}s/step)")
-            t0 = time.time()
-        if (step + 1) % args.eval_every == 0:
-            eb = dict(to_batch(eval_window),
-                      weights=jnp.ones((args.batch,), jnp.float32))
-            print(f"  eval loss {float(eval_fn(state.params, eb)):.4f} "
-                  f"goodput {guard.goodput:.3f}")
-        if mgr is not None and (step + 1) % args.ckpt_every == 0:
-            mgr.save(step + 1, state, extra={"arch": args.arch})
+        with Prefetcher(guard, args.batch, depth=args.prefetch,
+                        rounds=rounds) as pf:
+            for step in range(start_step, args.steps):
+                window = pf.get()
+                batch = {k: v[:args.batch] for k, v in window.items()}
+                batch["weights"] = jnp.ones((args.batch,), jnp.float32)
+                state, metrics = tstep(state, batch)
+                log_metrics(step, metrics)
+                eval_and_ckpt(step, state)
     if mgr is not None:
         mgr.save(args.steps, state, extra={"arch": args.arch})
         mgr.wait()

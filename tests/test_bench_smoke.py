@@ -1,8 +1,9 @@
 """Benchmark-harness smoke tests (opt-in: ``pytest --bench-smoke``).
 
-Runs the kernel and policy micro-benchmarks at tiny shapes and checks the
-machine-readable ``BENCH_kernels.json`` / ``BENCH_policies.json`` contracts
-that track the perf trajectory across PRs."""
+Runs the kernel, policy, and data-plane micro-benchmarks at tiny shapes and
+checks the machine-readable ``BENCH_kernels.json`` / ``BENCH_policies.json``
+/ ``BENCH_pipeline.json`` contracts that track the perf trajectory across
+PRs."""
 import json
 import os
 
@@ -52,3 +53,22 @@ def test_bench_policies_smoke_writes_json(tmp_path):
         assert r["us_per_call"] > 0
     rs_rows = [r for r in payload["policies"] if r["policy"] == "rs"]
     assert all(abs(r["overhead_vs_rs"] - 1.0) < 1e-9 for r in rs_rows)
+
+
+def test_bench_pipeline_smoke_writes_json(tmp_path):
+    from benchmarks import bench_pipeline
+
+    path = os.path.join(str(tmp_path), "BENCH_pipeline.json")
+    rows = bench_pipeline.main(smoke=True, json_path=path)
+    assert rows, "benchmark produced no rows"
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["schema"] == "bench_pipeline/v1"
+    for r in payload["sizes"]:
+        assert {"model", "rounds_per_sec", "speedup_prefetch",
+                "speedup_prefetch_donate"} <= set(r)
+        assert all(v > 0 for v in r["rounds_per_sec"].values())
+        # smoke-sized run on a possibly loaded CI box: only guard against a
+        # catastrophic regression here. The >= 1.3x acceptance number for
+        # the full run is recorded in the committed BENCH_pipeline.json.
+        assert r["speedup_prefetch_donate"] > 0.9, r

@@ -23,6 +23,29 @@ def test_lm_stream_shards_differ():
                               b.next_window(16)["tokens"])
 
 
+def test_lm_stream_distinct_shard_round_pairs_distinct_windows():
+    """Regression: the old linear seed mix `seed*1_000_003 + shard*7919 +
+    round` made (shard=0, round=7919) collide with (shard=1, round=0) —
+    two hosts would train on identical data. Distinct (shard, round) pairs
+    must yield distinct windows, including exactly that pair."""
+    def window_at(shard, round_):
+        s = SyntheticLMStream(vocab=1000, seq_len=16, seed=7, shard=shard,
+                              num_shards=4)
+        s.round = round_
+        return s.next_window(8)["tokens"]
+
+    # the historical collision pair
+    assert not np.array_equal(window_at(0, 7919), window_at(1, 0))
+    # broad sweep: every (shard, round) pair in a grid is unique
+    seen = {}
+    for shard in range(4):
+        for round_ in (0, 1, 2, 7919, 7920, 2 * 7919):
+            key = window_at(shard, round_).tobytes()
+            assert key not in seen, (f"window collision: {(shard, round_)} "
+                                     f"vs {seen[key]}")
+            seen[key] = (shard, round_)
+
+
 def test_lm_stream_labels_are_shifted_tokens():
     s = SyntheticLMStream(vocab=500, seq_len=16, seed=1)
     w = s.next_window(8)
@@ -55,6 +78,45 @@ def test_file_backed_stream_roundtrip(tmp_path):
     assert w["tokens"].shape == (4, 8)
     w2 = fs.next_window(2)
     assert w2["tokens"].shape == (2, 8)
+
+
+def test_file_backed_stream_sharding_roundtrip(tmp_path):
+    """Host shard i of S must read exactly paths[i::S], round-robin, with
+    the saved windows surviving save_stream_shard bit-exactly."""
+    src = SyntheticLMStream(vocab=100, seq_len=8, seed=3)
+    windows, paths = [], []
+    for i in range(4):
+        w = src.next_window(4)
+        p = os.path.join(str(tmp_path), f"shard{i}.npz")
+        save_stream_shard(p, w)
+        windows.append(w)
+        paths.append(p)
+
+    for shard in range(2):
+        fs = FileBackedStream(tuple(paths), shard=shard, num_shards=2)
+        for round_ in range(4):  # wraps: shard 0 sees files 0,2,0,2, ...
+            got = fs.next_window(4)
+            want = windows[shard + 2 * (round_ % 2)]
+            for k in want:
+                np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_file_backed_stream_rejects_short_shard(tmp_path):
+    """A shard file with fewer rows than the requested window must raise,
+    not silently truncate the round."""
+    import pytest
+
+    p = os.path.join(str(tmp_path), "small.npz")
+    save_stream_shard(p, SyntheticLMStream(vocab=50, seq_len=4,
+                                           seed=0).next_window(3))
+    fs = FileBackedStream((p,))
+    assert fs.next_window(3)["tokens"].shape == (3, 4)
+    with pytest.raises(ValueError, match="holds 3 rows"):
+        fs.next_window(5)
+    with pytest.raises(ValueError):
+        FileBackedStream((p,), shard=2, num_shards=2)  # shard out of range
+    with pytest.raises(ValueError):
+        FileBackedStream((p,), shard=1, num_shards=4)  # shard owns no paths
 
 
 def test_save_stream_shard_atomic_roundtrip(tmp_path):

@@ -145,6 +145,107 @@ def test_engine_from_config_defaults_policy_from_cfg():
     assert direct.policy.name == "rs"
 
 
+def test_engine_run_parity_with_legacy_loop():
+    """engine.run() must be bit-identical (same final EngineState pytree) to
+    the hand-rolled per-round loop — at prefetch=0 (sync passthrough) and at
+    prefetch=2 (the async path may never reorder or perturb rounds)."""
+    from repro.data.stream import GaussianMixtureStream
+
+    ecfg, params, hooks, train = _setup()
+    engine = TitanEngine.from_config(
+        TitanConfig(), hooks=hooks, train_step_fn=train, params_of=lambda s: s,
+        batch_size=B, n_classes=C, buffer_size=M)
+
+    def mk():
+        return GaussianMixtureStream(in_dim=IN, n_classes=C, seed=4)
+
+    s1 = mk()
+    w0 = {k: jnp.asarray(v) for k, v in s1.next_window(W).items()}
+    st1 = engine.init(jax.random.PRNGKey(3), params, w0)
+    m1 = None
+    for _ in range(5):
+        w = {k: jnp.asarray(v) for k, v in s1.next_window(W).items()}
+        st1, m1 = engine.step(st1, w)
+
+    for depth in (0, 2):
+        s2 = mk()
+        w0 = {k: jnp.asarray(v) for k, v in s2.next_window(W).items()}
+        st2 = engine.init(jax.random.PRNGKey(3), params, w0)
+        seen = []
+        st2, m2 = engine.run(st2, s2, 5, prefetch=depth, metrics_every=2,
+                             window_size=W,
+                             on_metrics=lambda r, m: seen.append(r))
+        assert seen == [0, 1, 2, 3, 4]  # every round drained, in order
+        for a, b in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(m1["loss"]),
+                                      np.asarray(m2["loss"]))
+
+
+def test_buffer_decay_never_resurrects_evicted_slots():
+    """buffer_decay < 1 walks valid scores toward 0, but NEG-evicted slots
+    must stay pinned at exactly NEG: an unguarded `score *= decay` would
+    shrink |NEG| past the buffer_valid threshold within a few rounds and
+    resurrect consumed samples."""
+    from repro.core.filter import NEG, buffer_valid
+
+    ecfg, params, hooks, train = _setup()
+    tcfg = TitanConfig(policy="rs", buffer_decay=0.5, evict_selected=True)
+    engine = TitanEngine.from_config(
+        tcfg, hooks=hooks, train_step_fn=train, params_of=lambda s: s,
+        batch_size=4, n_classes=C, buffer_size=8)
+    wf = _stream(7)
+    st = engine.init(jax.random.PRNGKey(0), params, wf(8))
+    prev_valid = int(buffer_valid(st.buffer).sum())
+    for _ in range(10):
+        # 2 fresh admits vs 4 evictions per round: NEG slots accumulate
+        st, _ = engine.step(st, wf(2))
+        scores = np.asarray(st.buffer["_score"])
+        invalid = scores <= NEG / 2
+        np.testing.assert_array_equal(
+            scores[invalid], np.full(int(invalid.sum()), NEG, np.float32))
+        valid = int((~invalid).sum())
+        assert valid <= prev_valid + 2, "more slots than the window admitted"
+        prev_valid = valid
+
+
+def test_evicted_indices_never_reselected():
+    """evict_selected=True consumes buffer slots: once a sample's slot is
+    NEG-evicted it must never appear in a later selected batch (windows
+    carry globally unique ids, so reappearance == re-selection)."""
+    ecfg, params, hooks, train = _setup()
+    tcfg = TitanConfig(policy="rs", buffer_decay=1.0, evict_selected=True)
+    engine = TitanEngine.from_config(
+        tcfg, hooks=hooks, train_step_fn=train, params_of=lambda s: s,
+        batch_size=4, n_classes=C, buffer_size=M)
+    from repro.core.filter import NEG
+
+    rs = np.random.RandomState(0)
+    counter = [0]
+
+    def window(n):
+        ids = np.arange(counter[0], counter[0] + n)
+        counter[0] += n
+        y = rs.randint(0, C, n)
+        x = rs.randn(n, IN).astype(np.float32)
+        x[:, 0] = ids / 1000.0  # unique, exactly representable id channel
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.int32)),
+                "domain": jnp.asarray(y.astype(np.int32))}
+
+    def buf_ids(buffer):
+        return np.round(np.asarray(buffer["x"])[:, 0] * 1000).astype(int)
+
+    st = engine.init(jax.random.PRNGKey(1), params, window(M))
+    evicted: set = set()
+    for _ in range(8):
+        st, _ = engine.step(st, window(6))
+        nb_ids = set(np.round(
+            np.asarray(st.next_batch["x"])[:, 0] * 1000).astype(int))
+        assert not nb_ids & evicted, f"re-selected evicted ids {nb_ids & evicted}"
+        scores = np.asarray(st.buffer["_score"])
+        evicted |= set(buf_ids(st.buffer)[scores <= NEG / 2])
+
+
 def test_train_cli_policy_flag():
     """`--policy list` prints the registry; unknown names exit(2) with the
     available list, not a traceback; rs runs end-to-end on CPU."""
