@@ -1,0 +1,205 @@
+"""Candidate-buffer maintenance benchmark: legacy full-rewrite merge vs the
+incremental scatter-admission + cached-stats path (DESIGN.md §7).
+
+Two measurements, written to ``BENCH_buffer.json``:
+
+1. **Speed** — end-to-end rounds/sec of the Titan LM selection pipeline at
+   ``buffer_ratio ∈ {8, 32}`` under the two buffer engines:
+
+   - ``legacy``       — ``stats_max_age=0``: ``buffer_merge`` concatenates,
+                        global-top_k's and re-gathers the whole buffer
+                        pytree every round, and the stage-2 ``stats_fn``
+                        forward re-scores all ``batch×buffer_ratio``
+                        candidates — O(buffer) HBM writes + O(buffer)
+                        forward even when nothing is admitted.
+   - ``incremental``  — ``stats_max_age=8``: score-only top-k + prefix
+                        compaction scatter only the admitted rows into
+                        evicted slots; stats are cached per slot and only
+                        the admitted + stalest ``ceil(size/8)`` slots are
+                        re-scored per round.
+
+   The task is buffer-heavy on purpose (small window, large buffer: the
+   regime where the buffer integrates many rounds of stream history, which
+   is exactly where ``buffer_ratio=32`` puts it) and the two lanes share
+   the same ``engine.run`` data plane, so the measured gap is buffer work,
+   not data handling. Lanes are interleaved per rep and compared by per-rep
+   median ratio (shared-host drift, same protocol as bench_pipeline).
+   Acceptance (ISSUE 4): >= 1.5x rounds/sec at buffer_ratio=32.
+
+2. **Staleness sweep** — final accuracy of the paper's HAR smoke task
+   (benchmarks/common.py protocol) vs ``stats_max_age``, so the
+   speed/quality trade of serving selection from cached importance scores
+   is visible next to the speed row. ``stats_max_age=0`` is the exact seed
+   engine.
+
+   PYTHONPATH=src python -m benchmarks.bench_buffer            # full
+   PYTHONPATH=src python -m benchmarks.bench_buffer --smoke    # quick
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TitanConfig, TrainConfig, get_config, replace
+from repro.core.engine import TitanEngine
+from repro.data.stream import SyntheticLMStream
+from repro.models.model import build_model
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+MODES = ("legacy", "incremental")
+# small window (B*SR) feeding a deep buffer; score_seq_len=0 keeps the
+# stage-2 scoring forward at full sequence length (the paper's fine-grained
+# pass), which is exactly the O(buffer) term the cached stats amortize
+B, T, SR, SSL = 2, 256, 2, 0
+MAX_AGE = 8                      # incremental lane: chunk = ceil(size/8)
+RATIOS = (8, 32)
+
+
+def _smoke_cfg():
+    base = get_config("qwen2-72b-reduced")
+    return replace(base, name="lm-smoke", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_head=16, d_ff=96, vocab=512,
+                   param_dtype="float32", opt_state_dtype="float32")
+
+
+def _row_bytes(window: Dict) -> int:
+    return sum(v.dtype.itemsize * int(jnp.prod(jnp.asarray(v.shape[1:])))
+               for v in window.values())
+
+
+class _Lane:
+    """One persistent (engine, stream, state) per mode×ratio; states carry
+    across segments so re-measuring never re-jits."""
+
+    def __init__(self, cfg, mode: str, ratio: int):
+        self.mode = mode
+        ttn = TitanConfig(stream_ratio=SR, buffer_ratio=ratio, sketch_dim=8,
+                          score_seq_len=SSL,
+                          stats_max_age=0 if mode == "legacy" else MAX_AGE)
+        model = build_model(cfg)
+        tcfg = TrainConfig(seq_len=T, global_batch=B, lr=1e-3,
+                           warmup_steps=5, total_steps=1_000_000)
+        self.engine = TitanEngine.from_config(
+            ttn, model, train_step_fn=make_train_step(model, tcfg),
+            batch_size=B)
+        self.stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=T,
+                                        n_domains=cfg.n_domains, seed=0)
+        w0 = {k: jnp.asarray(v)
+              for k, v in self.stream.next_window(self.engine.window_size).items()}
+        self.row_bytes = _row_bytes(w0)
+        self.state = self.engine.init(
+            jax.random.PRNGKey(1),
+            init_train_state(model, jax.random.PRNGKey(0)), w0)
+        self.mean_admitted = float("nan")
+
+    def measure_admitted(self, rounds: int):
+        """Steady-state admissions/round (the incremental path's write
+        traffic); runs stepwise so per-round metrics are visible."""
+        seen = []
+        for _ in range(rounds):
+            w = {k: jnp.asarray(v) for k, v in
+                 self.stream.next_window(self.engine.window_size).items()}
+            self.state, m = self.engine.step(self.state, w)
+            if "titan_buffer_admitted" in m:
+                seen.append(float(m["titan_buffer_admitted"]))
+        if seen:
+            self.mean_admitted = statistics.mean(seen)
+
+    def segment(self, rounds: int) -> float:
+        t0 = time.perf_counter()
+        self.state, _ = self.engine.run(self.state, self.stream, rounds,
+                                        prefetch=2, metrics_every=10)
+        jax.block_until_ready(self.state.t)
+        return rounds / (time.perf_counter() - t0)
+
+
+def bench_ratio(cfg, ratio: int, *, rounds: int, warmup: int, reps: int
+                ) -> Dict:
+    lanes = {m: _Lane(cfg, m, ratio) for m in MODES}
+    for lane in lanes.values():
+        lane.segment(warmup)
+        lane.measure_admitted(warmup + 4)
+    samples: Dict[str, List[float]] = {m: [] for m in MODES}
+    for _ in range(reps):
+        for m in MODES:
+            samples[m].append(lanes[m].segment(rounds))
+    rps = {m: statistics.median(v) for m, v in samples.items()}
+    speedup = statistics.median(
+        i / l for i, l in zip(samples["incremental"], samples["legacy"]))
+
+    size = lanes["legacy"].engine.buffer_size
+    window = lanes["legacy"].engine.window_size
+    rb = lanes["legacy"].row_bytes
+    adm = lanes["incremental"].mean_admitted
+    chunk = lanes["incremental"].engine.refresh_chunk
+    row = {
+        "buffer_ratio": ratio, "buffer_size": size, "window": window,
+        "batch": B, "seq_len": T, "stats_max_age": MAX_AGE,
+        "refresh_chunk": chunk,
+        "rounds_per_sec": {m: round(v, 3) for m, v in rps.items()},
+        "speedup_incremental": round(speedup, 3),
+        "mean_admitted_per_round": round(adm, 2),
+        # modeled steady-state HBM buffer-write traffic per round: the
+        # legacy merge re-gathers (writes) every example row; the scatter
+        # path writes only the admitted rows
+        "hbm_write_bytes_legacy": size * rb,
+        "hbm_write_bytes_incremental": int(adm * rb),
+        # stage-2 forward rows per round (the dominant compute term)
+        "stats_rows_legacy": size,
+        "stats_rows_incremental": chunk,
+    }
+    print(f"ratio={ratio:3d} size={size:4d}  "
+          + "  ".join(f"{m}={rps[m]:.2f}r/s" for m in MODES)
+          + f"  speedup={speedup:.2f}x  admitted/round={adm:.1f}"
+          f"  stats rows {size}->{chunk}")
+    return row
+
+
+def staleness_sweep(*, rounds: int, ages=(0, 2, 8, 16), seed: int = 0
+                    ) -> List[Dict]:
+    """Final HAR smoke-task accuracy vs stats_max_age (titan-cis)."""
+    from benchmarks.common import default_task, run_method
+    out = []
+    for age in ages:
+        r = run_method("titan", default_task(seed=seed), rounds, seed=seed,
+                       eval_every=max(10, rounds // 10),
+                       titan_cfg=TitanConfig(stats_max_age=age))
+        out.append({"stats_max_age": age, "final_acc": round(r["final_acc"], 4),
+                    "round_time": round(r["round_time"], 6)})
+        print(f"stats_max_age={age:3d}  final_acc={r['final_acc']:.3f}  "
+              f"round={r['round_time']*1e3:.2f}ms")
+    return out
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_buffer.json"
+         ) -> List[Dict]:
+    jax.config.update("jax_cpu_enable_async_dispatch", True)
+    from benchmarks.bench_pipeline import _partition_cores
+    _partition_cores()
+    rounds, warmup, reps = (8, 3, 3) if smoke else (20, 5, 9)
+    cfg = _smoke_cfg()
+    rows = [bench_ratio(cfg, r, rounds=rounds, warmup=warmup, reps=reps)
+            for r in RATIOS]
+    stale = staleness_sweep(rounds=60 if smoke else 300,
+                            ages=(0, 2, 8) if smoke else (0, 2, 8, 16))
+    payload = {"schema": "bench_buffer/v1",
+               "backend": jax.default_backend(),
+               "task": {"batch": B, "seq_len": T, "stream_ratio": SR,
+                        "score_seq_len": SSL, "stats_max_age": MAX_AGE,
+                        "rounds": rounds, "reps": reps},
+               "sizes": rows, "staleness": stale}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

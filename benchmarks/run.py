@@ -9,10 +9,10 @@ import time
 
 def main() -> None:
     fast = "--full" not in sys.argv
-    from benchmarks import (bench_fig2, bench_fig5a, bench_fig5b, bench_fig5c,
-                            bench_fig6, bench_fig8, bench_fig9, bench_fig10,
-                            bench_fig11, bench_kernels, bench_policies,
-                            bench_table1)
+    from benchmarks import (bench_buffer, bench_fig2, bench_fig5a,
+                            bench_fig5b, bench_fig5c, bench_fig6, bench_fig8,
+                            bench_fig9, bench_fig10, bench_fig11,
+                            bench_kernels, bench_policies, bench_table1)
     csv = []
 
     def run(name, fn):
@@ -83,6 +83,14 @@ def main() -> None:
     if fused128k:
         csv.append(("kernel_fused_v128k_bytes_ratio", dt,
                     f"{fused128k[0]['bytes_ratio_vs_unfused']:.2f}"))
+
+    print("=" * 70)
+    name, dt, out = run("buffer", bench_buffer.main)  # writes BENCH_buffer.json
+    r32 = next(r for r in out if r["buffer_ratio"] == 32)
+    csv.append(("buffer_incremental_speedup_x", dt,
+                f"{r32['speedup_incremental']:.2f}"))
+    csv.append(("buffer_stats_rows_saved", dt,
+                f"{r32['stats_rows_legacy'] - r32['stats_rows_incremental']}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

@@ -259,6 +259,21 @@ class TitanConfig:
                                   # coarse scores: prevents high-scoring
                                   # outliers (e.g. mislabeled samples) from
                                   # squatting in the buffer indefinitely
+    # --- incremental candidate buffer (DESIGN.md §7) ---
+    stats_max_age: int = 0        # 0 = legacy: full-rewrite merge + stage-2
+                                  # stats recomputed over the whole buffer
+                                  # every round (bit-identical to seed).
+                                  # K > 0 = incremental: scatter admission +
+                                  # cached stats refreshed stalest-first, no
+                                  # survivor older than ~K rounds in steady
+                                  # state (safe under the one-round-delay
+                                  # stale-parameter argument, §3.4)
+    stats_refresh_chunk: int = 0  # slots re-scored per round on the
+                                  # incremental path; 0 = auto:
+                                  # ceil(buffer_size / stats_max_age)
+    admit_impl: str = "auto"      # prefix-compaction kernel impl for the
+                                  # scatter-admission plan:
+                                  # auto|pallas|interpret|ref
 
 
 @dataclass(frozen=True)

@@ -10,8 +10,10 @@
   theory.py      Theorem-2 variance decomposition diagnostics
 """
 from repro.core.filter import (  # noqa: F401
-    FilterState, buffer_examples, buffer_merge, buffer_valid, coarse_scores,
-    init_buffer, init_filter_state, update_filter_state,
+    AGE_MAX, AGE_UNSCORED, FilterState, buffer_admit, buffer_examples,
+    buffer_merge, buffer_valid, coarse_scores, init_buffer,
+    init_filter_state, init_stats_cache, sanitize_scores,
+    update_filter_state,
 )
 from repro.core.importance import (  # noqa: F401
     exact_head_stats, lm_sequence_stats, sketch_matrices,

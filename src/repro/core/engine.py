@@ -31,8 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TitanConfig
-from repro.core.filter import (NEG, buffer_examples, buffer_merge,
-                               buffer_valid, init_buffer)
+from repro.core.filter import (AGE_MAX, AGE_UNSCORED, NEG, buffer_admit,
+                               buffer_examples,
+                               buffer_merge, buffer_valid, init_buffer,
+                               init_stats_cache)
 from repro.core.registry import PolicySpecs, SelectionPolicy, get_policy
 from repro.data.loader import Prefetcher
 
@@ -79,6 +81,22 @@ class TitanEngine:
         self.n_classes = n_classes
         self.buffer_size = (buffer_size if buffer_size is not None
                             else batch_size * self.cfg.buffer_ratio)
+        # Incremental candidate buffer (DESIGN.md §7): stats_max_age > 0
+        # switches admission to the slot-stable scatter path and caches the
+        # stage-2 statistics per slot, refreshing only a fixed-size chunk of
+        # the stalest survivors each round. stats_max_age == 0 is the seed
+        # path: full-rewrite merge + recompute-everything (bit-identical).
+        self.incremental = self.cfg.stats_max_age > 0
+        self._stat_keys = (tuple(self.policy.stat_keys)
+                           if self.policy.needs_stats else ())
+        if self.incremental:
+            chunk = (self.cfg.stats_refresh_chunk or
+                     -(-self.buffer_size // self.cfg.stats_max_age))
+            # refreshing the ceil(size/max_age) stalest slots per round
+            # bounds every survivor's staleness by ~stats_max_age rounds
+            self.refresh_chunk = max(1, min(self.buffer_size, chunk))
+        else:
+            self.refresh_chunk = 0
         self.step_fn = self._step
         # Donating EngineState lets XLA update the candidate buffer (and the
         # train/optimizer pytrees) in place instead of allocating a fresh
@@ -156,11 +174,82 @@ class TitanEngine:
         wspecs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                   for k, v in window.items()}
         buf = init_buffer(wspecs, self.buffer_size)
-        buf = buffer_merge(buf, window, scores)
+        if self.incremental:
+            buf.update(init_stats_cache(self.buffer_size,
+                                        self._cache_specs(params, window)))
+            buf, _ = buffer_admit(buf, window, scores,
+                                  impl=self.cfg.admit_impl)
+            # warm the whole cache once (one-time O(buffer) cost): steps
+            # only pay for the refresh chunk
+            ex = buffer_examples(buf)
+            if self._stat_keys:
+                full = self.hooks.stats_fn(params, ex)
+                for k in self._stat_keys:
+                    buf["_" + k] = full[k].astype(buf["_" + k].dtype)
+            if self.policy.needs_features:
+                buf["_features"] = self.hooks.features_fn(params, ex)
+            buf["_param_age"] = jnp.zeros((self.buffer_size,), jnp.int32)
+        else:
+            buf = buffer_merge(buf, window, scores)
         nb = {k: v[:self.batch_size] for k, v in window.items()}
         nb["weights"] = jnp.ones((self.batch_size,), jnp.float32)
         return EngineState(train=train_state, policy=pstate, buffer=buf,
                            next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1)
+
+    def _cache_specs(self, params, window) -> Dict:
+        """Per-slot cache field specs for the incremental buffer, discovered
+        from the hook output shapes (no compute: ``jax.eval_shape``)."""
+        specs: Dict[str, jax.ShapeDtypeStruct] = {}
+        if self._stat_keys:
+            out = jax.eval_shape(self.hooks.stats_fn, params, window)
+            for k in self._stat_keys:
+                specs[k] = jax.ShapeDtypeStruct(
+                    (1,) + tuple(out[k].shape[1:]), jnp.float32)
+        if self.policy.needs_features:
+            f = jax.eval_shape(self.hooks.features_fn, params, window)
+            specs["features"] = jax.ShapeDtypeStruct(
+                (1,) + tuple(f.shape[1:]), jnp.float32)
+        return specs
+
+    def _refresh_stats(self, params, buffer: Dict):
+        """Re-score the ``refresh_chunk`` stalest valid slots (just-admitted
+        slots carry AGE_UNSCORED+wait — FIFO above every scored slot — so
+        they jump the queue) and age the rest. The
+        fine-grained forward shrinks from O(buffer) to O(chunk) rows;
+        staleness of every cached entry stays bounded by ~stats_max_age
+        rounds as long as steady-state admissions fit in the chunk
+        (DESIGN.md §7). Returns ``(buffer, stats)`` with the cached stats
+        dict the policy selects from."""
+        age = buffer["_param_age"]
+        # scored slots cap just below the unscored sentinel so a long-lived
+        # survivor can never be reclassified as never-scored; unscored slots
+        # keep ticking past it (the FIFO backlog ticket), capped at AGE_MAX
+        cap = jnp.where(age < AGE_UNSCORED, AGE_UNSCORED - 1, AGE_MAX)
+        if not self._stat_keys and not self.policy.needs_features:
+            # nothing is cached (e.g. rs): keep the age bookkeeping but skip
+            # the top_k + example-row gather entirely
+            buffer["_param_age"] = jnp.minimum(age + 1, cap)
+            return buffer, {"domain": buffer["domain"]}
+        prio = jnp.where(buffer_valid(buffer), age, -1)
+        _, ridx = jax.lax.top_k(prio, self.refresh_chunk)
+        examples = buffer_examples(buffer)
+        rex = {k: jnp.take(v, ridx, axis=0) for k, v in examples.items()}
+        if self._stat_keys:
+            fresh = self.hooks.stats_fn(params, rex)
+            for k in self._stat_keys:
+                c = "_" + k
+                buffer[c] = buffer[c].at[ridx].set(
+                    fresh[k].astype(buffer[c].dtype))
+        if self.policy.needs_features:
+            buffer["_features"] = buffer["_features"].at[ridx].set(
+                self.hooks.features_fn(params, rex))
+        buffer["_param_age"] = jnp.minimum(age + 1, cap).at[ridx].set(0)
+        stats: Dict = {"domain": examples["domain"]}
+        for k in self._stat_keys:
+            stats[k] = buffer["_" + k]
+        if self.policy.needs_features:
+            stats["features"] = buffer["_features"]
+        return buffer, stats
 
     def _step(self, state: EngineState, window: Dict):
         cfg = self.cfg
@@ -183,17 +272,37 @@ class TitanEngine:
             s = old_buffer["_score"]
             old_buffer["_score"] = jnp.where(s > -1e29,
                                              s * cfg.buffer_decay, s)
-        buffer = buffer_merge(old_buffer, window, scores)
+        n_admitted = n_backlog = None
+        if self.incremental:
+            # slot-stable scatter admission: surviving rows never rewritten
+            buffer, plan = buffer_admit(old_buffer, window, scores,
+                                        impl=cfg.admit_impl)
+            n_admitted = plan["n_admitted"]
+            # (C) stage 2 over cached stats: re-score only the admitted
+            # slots + the stalest survivors, not the whole buffer
+            buffer, stats = self._refresh_stats(params, buffer)
+            examples = buffer_examples(buffer)
+            valid = buffer_valid(buffer)
+            if self._stat_keys or self.policy.needs_features:
+                # a slot is selectable only once scored: backlogged admits
+                # (admissions beyond the refresh chunk) hold zero-filled
+                # caches, which 'll' would rank above every real loss and
+                # C-IS would mis-count into the class moments
+                scored = buffer["_param_age"] < AGE_UNSCORED
+                n_backlog = jnp.sum((valid & ~scored).astype(jnp.int32))
+                valid = valid & scored
+        else:
+            buffer = buffer_merge(old_buffer, window, scores)
 
-        # (C) stage 2: fine-grained selection over the candidate buffer
-        examples = buffer_examples(buffer)
-        stats: Dict = {"domain": examples["domain"]}
-        if self.policy.needs_stats:
-            stats.update(self.hooks.stats_fn(params, examples))
-            stats["domain"] = examples["domain"]
-        if self.policy.needs_features:
-            stats["features"] = self.hooks.features_fn(params, examples)
-        valid = buffer_valid(buffer)
+            # (C) stage 2: fine-grained selection over the candidate buffer
+            examples = buffer_examples(buffer)
+            stats = {"domain": examples["domain"]}
+            if self.policy.needs_stats:
+                stats.update(self.hooks.stats_fn(params, examples))
+                stats["domain"] = examples["domain"]
+            if self.policy.needs_features:
+                stats["features"] = self.hooks.features_fn(params, examples)
+            valid = buffer_valid(buffer)
         rng, key = jax.random.split(state.rng)
         idx, w, pstate = self.policy.select(key, pstate, stats, valid,
                                             self.batch_size)
@@ -210,6 +319,16 @@ class TitanEngine:
         metrics = dict(metrics)
         metrics.update(self.policy.metrics(pstate))
         metrics["titan_mean_weight"] = jnp.mean(w)
+        if n_admitted is not None:
+            metrics["titan_buffer_admitted"] = n_admitted
+            if n_backlog is not None:
+                # true staleness of served entries; backlog (valid but not
+                # yet scored, masked out of selection above) is reported
+                # separately so the unscored sentinel never leaks into the
+                # age metric
+                metrics["titan_stats_max_age"] = jnp.max(
+                    jnp.where(valid, buffer["_param_age"], 0))
+                metrics["titan_stats_backlog"] = n_backlog
         return EngineState(train=new_train, policy=pstate, buffer=buffer,
                            next_batch=nb, rng=rng, t=state.t + 1), metrics
 

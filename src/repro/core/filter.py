@@ -14,9 +14,27 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.buffer.ops import admit_plan
 from repro.kernels.repdiv.ops import repdiv_scores
 
 NEG = -1e30
+# Never-scored / just-admitted buffer slots start at AGE_UNSCORED — far
+# above any real staleness, so they always outrank scored slots in the
+# engine's stalest-first refresh. The age keeps incrementing while a slot
+# waits, so a backlog drains FIFO (longest-waiting admit first) instead of
+# by slot index, which could starve a high-index slot forever. AGE_MAX
+# caps the increment so the counter can never wrap.
+AGE_UNSCORED = 1 << 20
+AGE_MAX = jnp.iinfo(jnp.int32).max // 2
+
+
+def sanitize_scores(scores):
+    """Non-finite admission scores become NEG. A single NaN coarse score
+    would otherwise win every top_k (NaN compares unordered, and lax.top_k
+    sorts it ahead of all finite values) and squat in the buffer forever:
+    NaN fails the decay guard `s > -1e29` so it never decays, and fails
+    `buffer_valid` so the slot it occupies is dead weight."""
+    return jnp.where(jnp.isfinite(scores), scores, NEG)
 
 
 @jax.tree_util.register_dataclass
@@ -94,9 +112,17 @@ def init_buffer(example_specs: Dict[str, jax.ShapeDtypeStruct], size: int):
 
 
 def buffer_merge(buffer: Dict, window: Dict, scores):
-    """Keep the top-|buffer| entries of buffer ∪ window by coarse score."""
+    """Keep the top-|buffer| entries of buffer ∪ window by coarse score.
+
+    The legacy full-rewrite merge: concatenates and re-gathers every field
+    of the whole buffer pytree, so each round writes O(size) rows to HBM
+    even when nothing is admitted. ``buffer_admit`` is the O(admitted)
+    slot-stable replacement; this path is kept as the seed-parity reference
+    (TitanConfig.stats_max_age == 0).
+    """
     size = buffer["_score"].shape[0]
-    merged_scores = jnp.concatenate([buffer["_score"], scores])
+    merged_scores = jnp.concatenate([buffer["_score"],
+                                     sanitize_scores(scores)])
     top, idx = jax.lax.top_k(merged_scores, size)
     out = {}
     for k in buffer:
@@ -106,6 +132,52 @@ def buffer_merge(buffer: Dict, window: Dict, scores):
         out[k] = jnp.take(cat, idx, axis=0)
     out["_score"] = top
     return out
+
+
+def init_stats_cache(size: int, stat_specs: Dict[str, jax.ShapeDtypeStruct]
+                     ) -> Dict:
+    """Cached stage-2 statistics fields for an incremental buffer: one
+    ``_<stat>`` array per stat (leading dim `size`) plus the ``_param_age``
+    staleness counter (rounds since the slot's stats were computed;
+    >= AGE_UNSCORED = never). Private ``_``-keys stay invisible to
+    ``buffer_examples``."""
+    cache = {"_" + k: jnp.zeros((size,) + tuple(v.shape[1:]), v.dtype)
+             for k, v in stat_specs.items()}
+    cache["_param_age"] = jnp.full((size,), AGE_UNSCORED, jnp.int32)
+    return cache
+
+
+def buffer_admit(buffer: Dict, window: Dict, scores, *, impl: str = "auto"):
+    """Slot-stable incremental merge: scatter admitted window rows into
+    evicted slots; surviving rows are never touched.
+
+    Keeps exactly the same top-|buffer| set as ``buffer_merge`` (same
+    score-only top_k, same tie-breaking) but in slot order instead of score
+    order: with a donated buffer the steady-state HBM write traffic is
+    O(admitted · row_bytes) instead of O(size · row_bytes). Cached stat
+    fields (``init_stats_cache``) of admitted slots are reset — zeros for
+    the stats (a just-admitted sample carries no importance until the
+    engine refreshes it) and AGE_UNSCORED for ``_param_age`` (top refresh
+    priority, FIFO among a backlog). Returns ``(buffer, plan)`` with the
+    ``admit_plan`` dict.
+    """
+    scores = sanitize_scores(scores)
+    size = buffer["_score"].shape[0]
+    plan = admit_plan(buffer["_score"], scores, impl=impl)
+    slot = plan["slot"]                       # (N,) int32, sentinel == size
+    out = {}
+    for k, v in buffer.items():
+        if k in window:
+            out[k] = v.at[slot].set(window[k], mode="drop")
+        elif k == "_score":
+            out[k] = v.at[slot].set(scores, mode="drop")
+        elif k == "_param_age":
+            out[k] = v.at[slot].set(
+                jnp.full(slot.shape, AGE_UNSCORED, v.dtype), mode="drop")
+        else:  # cached stats: neutralize the previous occupant's values
+            out[k] = v.at[slot].set(
+                jnp.zeros(slot.shape + v.shape[1:], v.dtype), mode="drop")
+    return out, plan
 
 
 def buffer_valid(buffer) -> jnp.ndarray:

@@ -94,24 +94,48 @@ def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
     }
 
 
-def exact_head_stats(logits, labels, h) -> Dict[str, jnp.ndarray]:
+def exact_head_stats(logits, labels, h, *, max_exact_dim: int = 0,
+                     sketch_dim: int = 16, sketch_key=None
+                     ) -> Dict[str, jnp.ndarray]:
     """Exact per-sample last-layer stats for single-output classifiers
     (the paper's edge setting). logits (N,V) fp32; labels (N,); h (N,D).
 
-    Returns loss/gnorm/entropy (N,) and the *exact* flattened gradient
-    (N, V*D) as "sketch" (so C-IS class terms are exact).
+    Returns loss/gnorm/entropy (N,) and a "sketch" of the per-sample head
+    gradient G = (p - e_y) h^T for the C-IS class-mean term:
+
+    - ``V·D <= max_exact_dim`` (or ``max_exact_dim == 0``, the default):
+      the *exact* flattened gradient (N, V·D), so C-IS class terms are
+      exact — the seed behavior.
+    - above the threshold: the Kronecker JL sketch (R^T δ) ⊗ (S^T h) of
+      shape (N, r²), same estimator as the LM path. An edge/vision config
+      with a wide head (say V=1000, D=1280) would otherwise materialize a
+      dense (N, 1.28M) fp32 gradient per scoring pass — at buffer scale
+      that alone is gigabytes of HBM.
+
+    loss/gnorm/entropy are exact on both paths; only the class-mean
+    gradient term becomes a JL estimate (unbiased, error ~ 1/sqrt(r²)).
     """
     lf = logits.astype(jnp.float32)
+    V = lf.shape[-1]
     p = jax.nn.softmax(lf, axis=-1)
     lse = jax.nn.logsumexp(lf, axis=-1)
     ly = jnp.take_along_axis(lf, labels[:, None], axis=-1)[:, 0]
-    delta = p - jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    delta = p - jax.nn.one_hot(labels, V, dtype=jnp.float32)
     hf = h.astype(jnp.float32)
-    grads = jnp.einsum("nv,nd->nvd", delta, hf)
-    N = lf.shape[0]
+    N, D = hf.shape
+    if max_exact_dim and V * D > max_exact_dim:
+        r = sketch_dim
+        if sketch_key is None:
+            sketch_key = jax.random.PRNGKey(0)
+        R, S = sketch_matrices(sketch_key, V, D, r)
+        # vec(G) = δ ⊗ h exactly (one token), so sketch(G) factorizes
+        sketch = (delta @ R)[:, :, None] * (hf @ S)[:, None, :]   # (N,r,r)
+        sketch = sketch.reshape(N, r * r)
+    else:
+        sketch = jnp.einsum("nv,nd->nvd", delta, hf).reshape(N, -1)
     return {
         "loss": lse - ly,
         "gnorm": jnp.linalg.norm(delta, axis=-1) * jnp.linalg.norm(hf, axis=-1),
         "entropy": lse - jnp.sum(p * lf, axis=-1),
-        "sketch": grads.reshape(N, -1),
+        "sketch": sketch,
     }

@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import TitanConfig
-from repro.core.filter import (FilterState, buffer_examples, buffer_merge,
-                               buffer_valid, coarse_scores, init_buffer,
-                               init_filter_state, update_filter_state)
+from repro.core.filter import (NEG, FilterState, buffer_examples,
+                               buffer_merge, buffer_valid, coarse_scores,
+                               init_buffer, init_filter_state,
+                               update_filter_state)
 from repro.core.selection import cis_select
 
 
@@ -106,7 +107,7 @@ def make_titan_step(*, features_fn: Callable, stats_fn: Callable,
             # selected data is consumed: training on it again next round would
             # bias the stream estimate (and overfit a static buffer)
             buffer = dict(buffer)
-            buffer["_score"] = buffer["_score"].at[idx].set(-1e30)
+            buffer["_score"] = buffer["_score"].at[idx].set(NEG)
 
         metrics = dict(metrics)
         metrics["titan_alloc"] = diag["alloc"]

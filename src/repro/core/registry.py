@@ -63,12 +63,18 @@ class SelectionPolicy:
       needs_stats    requires the fine-grained stats_fn pass (loss/gnorm/...)
       needs_features requires feature vectors in ``stats`` (ocs/camel)
       needs_window_features requires window features in ``obs`` (stage-1)
+      stat_keys      which stats_fn outputs ``select`` actually reads. On
+                     the incremental buffer (TitanConfig.stats_max_age > 0)
+                     the engine materializes one cached per-slot array per
+                     key, so a policy that only reads ``loss`` does not pay
+                     for a (size, r²) sketch cache in HBM.
     """
     name: str = "?"
     unit_weights: bool = True
     needs_stats: bool = True
     needs_features: bool = False
     needs_window_features: bool = False
+    stat_keys: Tuple[str, ...] = ("loss", "gnorm", "entropy", "sketch")
 
     def __init__(self, cfg: Optional[TitanConfig] = None):
         self.cfg = cfg if cfg is not None else TitanConfig()
@@ -102,13 +108,18 @@ class FunctionPolicy(SelectionPolicy):
 
     def __init__(self, cfg: Optional[TitanConfig], fn: Callable, name: str, *,
                  unit_weights: bool = True, needs_stats: bool = True,
-                 needs_features: bool = False):
+                 needs_features: bool = False,
+                 stat_keys: Optional[Tuple[str, ...]] = None):
         super().__init__(cfg)
         self._fn = fn
         self.name = name
         self.unit_weights = unit_weights
         self.needs_stats = needs_stats
         self.needs_features = needs_features
+        if stat_keys is not None:
+            self.stat_keys = stat_keys
+        elif not needs_stats:
+            self.stat_keys = ()
         # policy_kwargs ride the config for whichever policy is active;
         # forward only the ones this fn accepts (a cfg tuned for ocs must not
         # crash the other baselines in a registry sweep)
@@ -136,6 +147,9 @@ class TitanCISPolicy(SelectionPolicy):
     name = "titan-cis"
     unit_weights = False
     needs_window_features = True
+    # C-IS reads gradient norms (Eq. 3 intra-class probs) and the JL sketch
+    # (Eq. 2 class-mean-gradient term); loss/entropy never enter the math
+    stat_keys = ("gnorm", "sketch")
 
     def init_state(self, specs: PolicySpecs):
         self.specs = specs
@@ -207,10 +221,10 @@ register_policy("titan-cis", TitanCISPolicy)
 
 _BASELINE_FLAGS: Dict[str, Dict] = {
     "rs": dict(needs_stats=False),
-    "is": dict(unit_weights=False),
-    "ll": {},
-    "hl": {},
-    "ce": {},
+    "is": dict(unit_weights=False, stat_keys=("gnorm",)),
+    "ll": dict(stat_keys=("loss",)),
+    "hl": dict(stat_keys=("loss",)),
+    "ce": dict(stat_keys=("entropy",)),
     # ocs/camel read only feature vectors — no fine-grained scoring pass
     "ocs": dict(needs_stats=False, needs_features=True),
     "camel": dict(needs_stats=False, needs_features=True),

@@ -14,8 +14,17 @@ from repro.hooks.base import ModalityHooks
 
 
 def edge_hooks(ecfg, *, features, penultimate, head_logits,
-               filter_blocks: int = 1, name: str = "edge") -> ModalityHooks:
-    """Hooks for edge classifiers (exact last-layer gradients)."""
+               filter_blocks: int = 1, name: str = "edge",
+               max_exact_dim: int = 1 << 20,
+               sketch_dim: int = 16) -> ModalityHooks:
+    """Hooks for edge classifiers (exact last-layer gradients).
+
+    The "sketch" stat is the exact flattened head gradient while the head
+    is small; past ``max_exact_dim`` head entries (V·D) it switches to the
+    Kronecker JL sketch so wide-head vision configs don't materialize a
+    dense (N, V·D) gradient per scoring pass (``max_exact_dim=0`` forces
+    the exact path regardless of size).
+    """
 
     def features_fn(params, ex):
         return features(ecfg, params, ex["x"], filter_blocks).astype(jnp.float32)
@@ -23,6 +32,8 @@ def edge_hooks(ecfg, *, features, penultimate, head_logits,
     def stats_fn(params, ex):
         h = penultimate(ecfg, params, ex["x"])
         logits = head_logits(ecfg, params, h)
-        return exact_head_stats(logits, ex["y"], h)
+        return exact_head_stats(logits, ex["y"], h,
+                                max_exact_dim=max_exact_dim,
+                                sketch_dim=sketch_dim)
 
     return ModalityHooks(features_fn, stats_fn, name=name)

@@ -7,8 +7,11 @@ from repro.models.edge import (EdgeMLPConfig, mlp_features, mlp_head_logits,
                                mlp_penultimate)
 
 
-def har_hooks(ecfg: EdgeMLPConfig, *, filter_blocks: int = 1) -> ModalityHooks:
+def har_hooks(ecfg: EdgeMLPConfig, *, filter_blocks: int = 1,
+              max_exact_dim: int = 1 << 20,
+              sketch_dim: int = 16) -> ModalityHooks:
     return edge_hooks(ecfg, features=mlp_features,
                       penultimate=mlp_penultimate,
                       head_logits=mlp_head_logits,
-                      filter_blocks=filter_blocks, name="har")
+                      filter_blocks=filter_blocks, name="har",
+                      max_exact_dim=max_exact_dim, sketch_dim=sketch_dim)

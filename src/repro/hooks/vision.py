@@ -7,9 +7,11 @@ from repro.models.edge import (EdgeCNNConfig, cnn_features, cnn_head_logits,
                                cnn_penultimate)
 
 
-def vision_hooks(ecfg: EdgeCNNConfig, *, filter_blocks: int = 1
-                 ) -> ModalityHooks:
+def vision_hooks(ecfg: EdgeCNNConfig, *, filter_blocks: int = 1,
+                 max_exact_dim: int = 1 << 20,
+                 sketch_dim: int = 16) -> ModalityHooks:
     return edge_hooks(ecfg, features=cnn_features,
                       penultimate=cnn_penultimate,
                       head_logits=cnn_head_logits,
-                      filter_blocks=filter_blocks, name="vision")
+                      filter_blocks=filter_blocks, name="vision",
+                      max_exact_dim=max_exact_dim, sketch_dim=sketch_dim)

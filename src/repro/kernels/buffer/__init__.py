@@ -1,0 +1,1 @@
+from repro.kernels.buffer.ops import admit_plan, compact_pair  # noqa: F401

@@ -1,0 +1,94 @@
+"""Prefix-compaction Pallas TPU kernels for incremental buffer admission.
+
+The scatter plan behind ``buffer_admit`` (core/filter.py): given the boolean
+outcome of the score-only top-k — which buffer slots survive, which window
+rows are admitted — match the j-th admitted row with the j-th evicted slot.
+The legacy merge re-gathers the whole buffer pytree through a (size+N,)
+top-k permutation; this plan lets the engine scatter only the admitted rows
+and leave every surviving row untouched in HBM.
+
+Both kernels are scatter-free (TPU vector memory has no efficient dynamic
+per-element store): compaction is phrased as rank-matching against an
+exclusive prefix sum, evaluated as a one-hot mask product reduced on the
+VPU. All arithmetic is int32, so slot indices are exact at any size.
+
+  _compact_kernel  — grid over rank tiles; tile (S, kb): for every rank k in
+                     the tile, the evicted slot with that rank (sentinel
+                     where the rank exceeds the evicted count).
+  _match_kernel    — grid over window-row tiles; tile (nb, S): admitted row
+                     j picks the slot of rank arank_j, everything else the
+                     sentinel (dropped by the caller's scatter).
+
+VMEM per grid step is one (tile) int32 mask plus the vectors; ops.py caps
+the tile edges so a step stays well under the ~16 MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compact_kernel(ev_ref, erank_ref, slots_ref, *, sentinel: int):
+    kb = slots_ref.shape[0]
+    k0 = pl.program_id(0) * kb
+    ev = ev_ref[...]                                        # (S, 1) int32
+    er = erank_ref[...]                                     # (S, 1) int32
+    ranks = k0 + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+    hit = ev * (er == ranks).astype(jnp.int32)              # (S, kb)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ev.shape[0], kb), 0)
+    slots = jnp.sum(hit * rows, axis=0)                     # (kb,)
+    has = jnp.sum(hit, axis=0)
+    slots_ref[...] = jnp.where(has > 0, slots, sentinel)[:, None]
+
+
+def _match_kernel(adm_ref, arank_ref, slots_ref, out_ref, *, sentinel: int):
+    adm = adm_ref[...]                                      # (nb, 1) int32
+    ar = arank_ref[...]                                     # (nb, 1) int32
+    sl = slots_ref[...]                                     # (1, S) int32
+    cols = jax.lax.broadcasted_iota(jnp.int32,
+                                    (adm.shape[0], sl.shape[1]), 1)
+    hit = adm * (ar == cols).astype(jnp.int32)              # (nb, S)
+    val = jnp.sum(hit * sl, axis=1)                         # (nb,)
+    matched = jnp.sum(hit, axis=1) > 0
+    out_ref[...] = jnp.where((adm[:, 0] > 0) & matched, val,
+                             sentinel)[:, None]
+
+
+def compact_evicted_pallas(ev, erank, *, sentinel: int, s_block: int,
+                           interpret: bool = False):
+    """ev, erank (S, 1) int32, S divisible by s_block. Returns (S, 1) int32:
+    position k holds the slot index of the k-th evicted slot (rank order),
+    ``sentinel`` past the evicted count."""
+    S = ev.shape[0]
+    assert S % s_block == 0
+    full = pl.BlockSpec((S, 1), lambda k: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_compact_kernel, sentinel=sentinel),
+        grid=(S // s_block,),
+        in_specs=[full, full],
+        out_specs=pl.BlockSpec((s_block, 1), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, 1), jnp.int32),
+        interpret=interpret,
+    )(ev, erank)
+
+
+def match_admitted_pallas(adm, arank, ev_slots, *, sentinel: int,
+                          n_block: int, interpret: bool = False):
+    """adm, arank (N, 1) int32; ev_slots (1, S) int32 (compacted slots from
+    ``compact_evicted_pallas``). Returns (N, 1) int32: per window row, its
+    target buffer slot, or ``sentinel`` when not admitted."""
+    N = adm.shape[0]
+    assert N % n_block == 0
+    row = pl.BlockSpec((n_block, 1), lambda j: (j, 0))
+    return pl.pallas_call(
+        functools.partial(_match_kernel, sentinel=sentinel),
+        grid=(N // n_block,),
+        in_specs=[row, row,
+                  pl.BlockSpec((1, ev_slots.shape[1]), lambda j: (0, 0))],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        interpret=interpret,
+    )(adm, arank, ev_slots)

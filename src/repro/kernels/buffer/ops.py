@@ -1,0 +1,106 @@
+"""jit'd wrappers for the admission prefix-compaction with impl dispatch.
+
+Same dispatch contract as kernels/score/ops.py:
+
+  "auto"      pallas on TPU, jnp reference elsewhere
+  "pallas"    force compiled pallas kernels
+  "interpret" pallas kernels in interpret mode (CPU validation)
+  "ref"       pure-jnp oracle (ref.py)
+
+``compact_pair`` is the low-level plan; ``admit_plan`` derives the
+survive/admit masks from the score-only top-k (exactly the kept set of the
+legacy concat+top_k merge, including its tie-breaking) and returns the
+scatter plan the engine applies to the buffer pytree.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.buffer.admit import (compact_evicted_pallas,
+                                        match_admitted_pallas)
+from repro.kernels.buffer.ref import compact_pair_ref
+
+# one (tile) int32 mask per grid step; keep it well under the VMEM budget
+_TILE_ELEMS = 1 << 21
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _pad_rows(x, mult):
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "s_block", "n_block"))
+def compact_pair(survive, admit, *, impl: str = "auto", s_block: int = 256,
+                 n_block: int = 256):
+    """survive (S,) bool — buffer slots keeping their row; admit (N,) bool —
+    window rows that won a slot. Returns ``slot`` (N,) int32: the evicted
+    buffer slot for each admitted window row (rank-matched), ``S`` as the
+    drop sentinel for the rest. The i-th admitted row always lands in the
+    i-th evicted slot, so the plan is deterministic and collision-free.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return compact_pair_ref(survive, admit)
+
+    S, N = survive.shape[0], admit.shape[0]
+    evi = 1 - survive.astype(jnp.int32)
+    admi = admit.astype(jnp.int32)
+    erank = jnp.cumsum(evi) - evi
+    arank = jnp.cumsum(admi) - admi
+
+    sb = min(s_block, _round_up(max(S, 8), 8))
+    Sp = _round_up(S, sb)
+    while Sp * sb > _TILE_ELEMS and sb > 8:          # (Sp, sb) compact tile
+        sb //= 2
+        Sp = _round_up(S, sb)
+    nb = min(n_block, _round_up(max(N, 8), 8))
+    while nb * Sp > _TILE_ELEMS and nb > 8:          # (nb, Sp) match tile
+        nb //= 2
+    Np = _round_up(N, nb)
+
+    interpret = impl == "interpret"
+    # padded buffer slots survive (never receive a row); padded window rows
+    # are not admitted (always sentinel)
+    evp = _pad_rows(evi[:, None], sb)
+    erankp = _pad_rows(erank[:, None], sb)
+    ev_slots = compact_evicted_pallas(evp, erankp, sentinel=S, s_block=sb,
+                                      interpret=interpret)
+    slot = match_admitted_pallas(
+        _pad_rows(admi[:, None], nb), _pad_rows(arank[:, None], nb),
+        ev_slots.reshape(1, Sp), sentinel=S, n_block=nb,
+        interpret=interpret)
+    return slot[:N, 0]
+
+
+def admit_plan(buf_scores, window_scores, *, impl: str = "auto"):
+    """Score-only admission decision + scatter plan.
+
+    Runs the exact top-k of the legacy merge on the concatenated
+    ``(size+N,)`` scores — same kept set, same tie-breaking (buffer slots
+    win ties against window rows by index order) — but never touches the
+    example rows. Returns a dict:
+
+      slot        (N,) int32  target buffer slot per window row; ``size``
+                              (drop sentinel) for rows not admitted
+      survive     (size,) bool buffer slots that keep their row
+      admit       (N,) bool    window rows that won a slot
+      n_admitted  () int32     == number of evicted slots
+    """
+    size = buf_scores.shape[0]
+    merged = jnp.concatenate([buf_scores, window_scores])
+    _, idx = jax.lax.top_k(merged, size)
+    keep = jnp.zeros((merged.shape[0],), bool).at[idx].set(True)
+    survive, admit = keep[:size], keep[size:]
+    slot = compact_pair(survive, admit, impl=impl)
+    return {"slot": slot, "survive": survive, "admit": admit,
+            "n_admitted": jnp.sum(admit.astype(jnp.int32))}

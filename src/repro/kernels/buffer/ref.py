@@ -1,0 +1,36 @@
+"""jnp oracle for the admission prefix-compaction (see admit.py).
+
+``compact_pair_ref(survive, admit)`` matches the j-th admitted window row
+with the j-th evicted buffer slot: the scatter plan that lets the engine
+rewrite only the O(admitted) changed rows of the candidate buffer instead of
+re-gathering all of it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_pair_ref(survive, admit):
+    """survive (S,) bool/int — buffer slots that keep their row; admit (N,)
+    bool/int — window rows that won a slot. Returns ``slot`` (N,) int32:
+    for the j-th admitted window row, the buffer slot it lands in (the
+    rank-matched evicted slot); ``S`` (one past the last slot) for rows that
+    were not admitted or have no evicted slot left — a sentinel the caller
+    scatters with ``mode="drop"``.
+    """
+    S = survive.shape[0]
+    ev = (survive == 0) if survive.dtype != jnp.bool_ else ~survive
+    evi = ev.astype(jnp.int32)
+    erank = jnp.cumsum(evi) - evi                       # exclusive rank (S,)
+    # compact: ev_slots[k] = index of the k-th evicted slot, else sentinel S
+    ev_slots = jnp.full((S,), S, jnp.int32).at[
+        jnp.where(ev, erank, S)].set(jnp.arange(S, dtype=jnp.int32),
+                                     mode="drop")
+    adm = (admit != 0) if admit.dtype != jnp.bool_ else admit
+    admi = adm.astype(jnp.int32)
+    arank = jnp.cumsum(admi) - admi                     # exclusive rank (N,)
+    slot = jnp.where(adm, jnp.take(ev_slots, jnp.minimum(arank, S - 1),
+                                   mode="clip"), S)
+    # more admits than evicted slots (cannot happen for a top-k kept set,
+    # where the counts are equal by construction): drop the overflow
+    return jnp.where(arank < jnp.sum(evi), slot, S).astype(jnp.int32)

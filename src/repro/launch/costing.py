@@ -180,16 +180,30 @@ def engine_state_structs(engine, cfg, shape, rules, *, train_sds, train_sh,
     pol_sds = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), pstate)
     pol_sh = jax.tree.map(lambda x: rep, pstate)
+    # incremental buffer (stats_max_age > 0): per-slot stat caches +
+    # staleness counter ride the buffer pytree, batch-sharded like _score.
+    # Shapes come from the engine's own spec discovery (eval_shape over the
+    # hooks), so they can never drift from what init/step actually build.
+    cache_sds, cache_sh = {}, {}
+    if getattr(engine, "incremental", False):
+        for k, v in engine._cache_specs(engine._params_of(train_sds),
+                                        resized(W)).items():
+            cache_sds["_" + k] = jax.ShapeDtypeStruct(
+                (M,) + tuple(v.shape[1:]), v.dtype)
+        cache_sds["_param_age"] = jax.ShapeDtypeStruct((M,), jnp.int32)
+        cache_sh = {k: rules.sharding("batch") for k in cache_sds}
     e_sds = EngineState(
         train=train_sds, policy=pol_sds,
-        buffer=dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32)),
+        buffer=dict(resized(M), _score=jax.ShapeDtypeStruct((M,), jnp.float32),
+                    **cache_sds),
         next_batch=dict(resized(B),
                         weights=jax.ShapeDtypeStruct((B,), jnp.float32)),
         rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
         t=jax.ShapeDtypeStruct((), jnp.int32))
     e_sh = EngineState(
         train=train_sh, policy=pol_sh,
-        buffer=dict(resized_sh(M), _score=rules.sharding("batch")),
+        buffer=dict(resized_sh(M), _score=rules.sharding("batch"),
+                    **cache_sh),
         next_batch=dict(resized_sh(B), weights=rules.sharding("batch")),
         rng=rep, t=rep)
     return e_sds, e_sh, resized(W), resized_sh(W)

@@ -1,0 +1,151 @@
+"""Incremental buffer admission: prefix-compaction kernel parity, scatter
+admission vs the legacy concat+top_k merge, NaN sanitization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.filter import (AGE_UNSCORED, NEG, buffer_admit, buffer_merge,
+                               buffer_valid, init_buffer, init_stats_cache)
+from repro.kernels.buffer.ops import admit_plan, compact_pair
+from repro.kernels.buffer.ref import compact_pair_ref
+
+
+@pytest.mark.parametrize("S,N", [(8, 8), (12, 40), (16, 4), (1, 1),
+                                 (300, 77), (513, 129)])
+def test_compact_pair_interpret_matches_ref(S, N):
+    rs = np.random.RandomState(S * 1000 + N)
+    for trial in range(4):
+        sv = jnp.asarray(rs.rand(S) < rs.rand())
+        ad = jnp.asarray(rs.rand(N) < rs.rand())
+        ref = np.asarray(compact_pair(sv, ad, impl="ref"))
+        out = np.asarray(compact_pair(sv, ad, impl="interpret"))
+        np.testing.assert_array_equal(ref, out)
+
+
+def test_compact_pair_plan_properties():
+    """Admitted rows land in distinct evicted slots in rank order; everyone
+    else gets the drop sentinel."""
+    rs = np.random.RandomState(0)
+    for S, N in [(20, 60), (64, 16)]:
+        sv = rs.rand(S) < 0.5
+        n_ev = int((~sv).sum())
+        ad = np.zeros(N, bool)
+        ad[rs.choice(N, size=min(n_ev, N), replace=False)] = True
+        slot = np.asarray(compact_pair(jnp.asarray(sv), jnp.asarray(ad),
+                                       impl="ref"))
+        k = min(n_ev, int(ad.sum()))
+        live = slot[slot < S]
+        assert len(live) == k
+        assert len(set(live.tolist())) == k            # collision-free
+        assert not sv[live].any()                      # only evicted slots
+        assert (slot[~ad] == S).all()                  # sentinel elsewhere
+        # rank order: the j-th admitted row gets the j-th evicted slot
+        ev_slots = np.flatnonzero(~sv)
+        np.testing.assert_array_equal(live, ev_slots[:k])
+
+
+def test_admit_plan_matches_legacy_topk_kept_set():
+    """admit_plan must reproduce the exact kept set (and tie-breaking) of
+    the legacy concatenate+top_k merge."""
+    rs = np.random.RandomState(1)
+    for S, N in [(12, 40), (32, 8), (16, 16)]:
+        bs = rs.randn(S).astype(np.float32)
+        ws = rs.randn(N).astype(np.float32)
+        ws[:3] = bs[:3]  # exact ties: buffer must win by index order
+        plan = admit_plan(jnp.asarray(bs), jnp.asarray(ws))
+        _, idx = jax.lax.top_k(jnp.asarray(np.concatenate([bs, ws])), S)
+        keep = np.zeros(S + N, bool)
+        keep[np.asarray(idx)] = True
+        np.testing.assert_array_equal(np.asarray(plan["survive"]), keep[:S])
+        np.testing.assert_array_equal(np.asarray(plan["admit"]), keep[S:])
+        assert int(plan["n_admitted"]) == int(keep[S:].sum())
+        assert int(plan["n_admitted"]) == int((~keep[:S]).sum())
+
+
+def _buf_and_window(rs, S, N, feat=3):
+    specs = {"x": jax.ShapeDtypeStruct((N, feat), jnp.float32),
+             "domain": jax.ShapeDtypeStruct((N,), jnp.int32)}
+    buf = init_buffer(specs, S)
+    window = {"x": jnp.asarray(rs.randn(N, feat).astype(np.float32)),
+              "domain": jnp.asarray(rs.randint(0, 4, N).astype(np.int32))}
+    return buf, window
+
+
+def test_buffer_admit_same_kept_set_as_merge_slot_stable():
+    """Across rounds, buffer_admit keeps exactly buffer_merge's kept set
+    (scores as a multiset, rows by content) while never moving a surviving
+    row between slots."""
+    rs = np.random.RandomState(2)
+    S, N = 10, 14
+    buf_a, w = _buf_and_window(rs, S, N)
+    buf_m = dict(buf_a)
+    for _ in range(6):
+        _, w = _buf_and_window(rs, S, N)
+        scores = jnp.asarray(rs.randn(N).astype(np.float32))
+        prev = {k: np.asarray(v) for k, v in buf_a.items()}
+        buf_m = buffer_merge(buf_m, w, scores)
+        buf_a, plan = buffer_admit(buf_a, w, scores)
+        # same kept set: compare (score, row-content) multisets
+        def key(buf):
+            s = np.asarray(buf["_score"])
+            x = np.asarray(buf["x"])
+            return sorted((round(float(si), 5),) + tuple(np.round(xi, 5))
+                          for si, xi in zip(s, x))
+        assert key(buf_a) == key(buf_m)
+        # slot-stable: surviving slots were not rewritten
+        survive = np.asarray(plan["survive"])
+        np.testing.assert_array_equal(np.asarray(buf_a["x"])[survive],
+                                      prev["x"][survive])
+        np.testing.assert_array_equal(np.asarray(buf_a["_score"])[survive],
+                                      prev["_score"][survive])
+
+
+def test_buffer_admit_resets_stat_caches_of_admitted_slots():
+    rs = np.random.RandomState(3)
+    S, N = 6, 12
+    buf, w = _buf_and_window(rs, S, N)
+    buf.update(init_stats_cache(
+        S, {"gnorm": jax.ShapeDtypeStruct((1,), jnp.float32),
+            "sketch": jax.ShapeDtypeStruct((1, 4), jnp.float32)}))
+    buf["_gnorm"] = jnp.ones((S,))          # pretend previous occupants
+    buf["_sketch"] = jnp.ones((S, 4))
+    buf["_param_age"] = jnp.zeros((S,), jnp.int32)
+    scores = jnp.asarray(rs.randn(N).astype(np.float32))
+    buf2, plan = buffer_admit(buf, w, scores)
+    admitted_slots = np.asarray(plan["slot"])
+    admitted_slots = admitted_slots[admitted_slots < S]
+    assert admitted_slots.size == S  # empty buffer: fully admitted
+    np.testing.assert_array_equal(np.asarray(buf2["_gnorm"])[admitted_slots],
+                                  0.0)
+    np.testing.assert_array_equal(np.asarray(buf2["_sketch"])[admitted_slots],
+                                  0.0)
+    np.testing.assert_array_equal(
+        np.asarray(buf2["_param_age"])[admitted_slots], AGE_UNSCORED)
+
+
+@pytest.mark.parametrize("path", ["merge", "admit"])
+def test_nonfinite_scores_never_enter_the_buffer(path):
+    """Regression (NaN squatter): a non-finite coarse score must be
+    sanitized to NEG on admission — otherwise it wins every top_k, never
+    decays (NaN fails the `s > -1e29` guard) and pins its slot forever."""
+    rs = np.random.RandomState(4)
+    S, N = 4, 8
+    buf, w = _buf_and_window(rs, S, N)
+    scores = np.linspace(1.0, 2.0, N).astype(np.float32)
+    scores[2] = np.nan
+    scores[5] = np.inf   # +inf is as sticky as NaN under decay-to-zero
+    for r in range(3):
+        sj = jnp.asarray(scores)
+        if path == "merge":
+            buf = buffer_merge(buf, w, sj)
+        else:
+            buf, _ = buffer_admit(buf, w, sj)
+        s = np.asarray(buf["_score"])
+        assert np.isfinite(s[buffer_valid(buf)]).all()
+        assert not np.isnan(s).any()
+    # the NaN/inf rows lost to every finite-scored row
+    kept_x = np.asarray(buf["x"])[np.asarray(buffer_valid(buf))]
+    bad_rows = np.asarray(w["x"])[[2, 5]]
+    for bad in bad_rows:
+        assert not (np.abs(kept_x - bad[None]) < 1e-12).all(axis=1).any()

@@ -42,9 +42,12 @@ def _stream(seed):
 def test_engine_step_matches_legacy_pipeline():
     """From identical state, one engine step with policy titan-cis must be
     bit-identical to the legacy make_titan_step program (buffer scores,
-    filter estimators, selected batch, weights)."""
+    filter estimators, selected batch, weights). stats_max_age=0 (the
+    default) is the contract that the incremental-buffer machinery is
+    fully disengaged: full-rewrite merge + recompute-everything, exactly
+    the seed step."""
     ecfg, params, hooks, train = _setup()
-    tcfg = TitanConfig()
+    tcfg = TitanConfig(stats_max_age=0)
     wf = _stream(1)
     w0 = wf()
 
@@ -244,6 +247,198 @@ def test_evicted_indices_never_reselected():
         assert not nb_ids & evicted, f"re-selected evicted ids {nb_ids & evicted}"
         scores = np.asarray(st.buffer["_score"])
         evicted |= set(buf_ids(st.buffer)[scores <= NEG / 2])
+
+
+def test_incremental_admission_decay_eviction_parity_20_rounds():
+    """Satellite: buffer_decay + evict_selected + incremental admission
+    across 20 randomized rounds must stay in lockstep with the legacy
+    concat+top_k merge — same kept set, same selected batches — while
+    keeping surviving rows pinned to their slots.
+
+    The train step is frozen so stats are time-invariant (any refresh
+    schedule returns the same values) and the policy is the deterministic
+    top-k-by-loss 'hl', so a selected *batch* is a set of sample ids,
+    independent of buffer ordering. Windows carry globally unique ids in an
+    exactly-representable channel."""
+    from repro.core.filter import buffer_valid
+
+    ecfg, params, hooks, _ = _setup()
+
+    def frozen(p, b):
+        return p, {"loss": jnp.zeros(())}
+
+    W2, M2, B2 = 8, 16, 5
+    rs = np.random.RandomState(11)
+    counter = [0]
+
+    def window():
+        ids = np.arange(counter[0], counter[0] + W2)
+        counter[0] += W2
+        y = rs.randint(0, C, W2)
+        x = rs.randn(W2, IN).astype(np.float32)
+        x[:, 0] = ids / 1024.0  # unique, exactly-representable id channel
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.int32)),
+                "domain": jnp.asarray(y.astype(np.int32))}
+
+    def ids_of(x):
+        return np.round(np.asarray(x)[:, 0] * 1024).astype(int)
+
+    base = dict(policy="hl", buffer_decay=0.8, evict_selected=True)
+    legacy = TitanEngine.from_config(
+        TitanConfig(stats_max_age=0, **base), hooks=hooks,
+        train_step_fn=frozen, params_of=lambda s: s, batch_size=B2,
+        n_classes=C, buffer_size=M2)
+    # chunk == window size: every admitted slot is re-scored the round it
+    # arrives (AGE_UNSCORED priority), so cached == fresh under frozen params
+    incr = TitanEngine.from_config(
+        TitanConfig(stats_max_age=4, stats_refresh_chunk=W2, **base),
+        hooks=hooks, train_step_fn=frozen, params_of=lambda s: s,
+        batch_size=B2, n_classes=C, buffer_size=M2)
+
+    w0 = window()
+    stl = legacy.init(jax.random.PRNGKey(5), params, w0)
+    sti = incr.init(jax.random.PRNGKey(5), params, w0)
+    for r in range(20):
+        w = window()
+        prev_ids = ids_of(sti.buffer["x"])
+        prev_valid = np.asarray(buffer_valid(sti.buffer))
+        stl, _ = legacy.step(stl, w)
+        sti, _ = incr.step(sti, w)
+        # same selected batch (as an id multiset)
+        assert sorted(ids_of(stl.next_batch["x"])) == \
+            sorted(ids_of(sti.next_batch["x"])), f"round {r}"
+        # same kept set (valid ids + score multisets agree)
+        lv = np.asarray(buffer_valid(stl.buffer))
+        iv = np.asarray(buffer_valid(sti.buffer))
+        assert sorted(ids_of(stl.buffer["x"])[lv]) == \
+            sorted(ids_of(sti.buffer["x"])[iv]), f"round {r}"
+        np.testing.assert_allclose(
+            np.sort(np.asarray(stl.buffer["_score"])),
+            np.sort(np.asarray(sti.buffer["_score"])), rtol=1e-6)
+        # slot-stable: an id that stayed in the incremental buffer did not
+        # move between slots
+        new_ids = ids_of(sti.buffer["x"])
+        for s_idx in range(M2):
+            if prev_valid[s_idx] and prev_ids[s_idx] in set(new_ids[iv]):
+                kept_at = np.flatnonzero(new_ids == prev_ids[s_idx])
+                assert s_idx in kept_at, f"round {r}: slot moved"
+
+
+def test_incremental_engine_runs_every_policy():
+    """The cached-stats path must serve every registered policy: stat
+    caches follow the policy's stat_keys, features are cached for the
+    feature-space heuristics."""
+    ecfg, params, hooks, train = _setup(seed=9)
+    wf = _stream(9)
+    for policy in sorted(available_policies()):
+        engine = TitanEngine.from_config(
+            TitanConfig(policy=policy, stats_max_age=3), hooks=hooks,
+            train_step_fn=train, batch_size=B, n_classes=C, buffer_size=M)
+        st = engine.init(jax.random.PRNGKey(2), params, wf())
+        for _ in range(3):
+            st, m = engine.step(st, wf())
+        assert np.isfinite(float(m["loss"])), policy
+        assert st.next_batch["weights"].shape == (B,)
+        assert int(m["titan_buffer_admitted"]) <= M
+        cached = {k for k in st.buffer if k.startswith("_")}
+        expected = {"_score", "_param_age"}
+        if engine.policy.needs_stats:
+            expected |= {"_" + k for k in engine.policy.stat_keys}
+        if engine.policy.needs_features:
+            expected.add("_features")
+        assert cached == expected, policy
+
+
+def test_backlogged_unscored_slots_never_selected():
+    """Regression: admissions beyond the refresh chunk hold zero-filled
+    stat caches. They must be masked out of selection until scored — 'll'
+    would otherwise rank cached loss 0 above every real loss and train on
+    never-scored samples."""
+    from repro.core.filter import AGE_UNSCORED, buffer_valid
+
+    ecfg, params, hooks, train = _setup(seed=6)
+    # chunk=1 against a 10-row window: heavy backlog every round
+    engine = TitanEngine.from_config(
+        TitanConfig(policy="ll", stats_max_age=M, stats_refresh_chunk=1,
+                    buffer_decay=1.0, evict_selected=False),
+        hooks=hooks, train_step_fn=train, params_of=lambda s: s,
+        batch_size=4, n_classes=C, buffer_size=M)
+    rs = np.random.RandomState(21)
+    counter = [0]
+
+    def window(n=10):
+        ids = np.arange(counter[0], counter[0] + n)
+        counter[0] += n
+        y = rs.randint(0, C, n)
+        x = rs.randn(n, IN).astype(np.float32)
+        x[:, 0] = ids / 1024.0
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y.astype(np.int32)),
+                "domain": jnp.asarray(y.astype(np.int32))}
+
+    def ids_of(x):
+        return np.round(np.asarray(x)[:, 0] * 1024).astype(int)
+
+    st = engine.init(jax.random.PRNGKey(1), params, window(M))
+    for r in range(8):
+        st, m = engine.step(st, window())
+        assert int(m["titan_stats_backlog"]) > 0  # the regime under test
+        age = np.asarray(st.buffer["_param_age"])
+        buf_ids = ids_of(st.buffer["x"])
+        valid = np.asarray(buffer_valid(st.buffer))
+        scored_ids = set(buf_ids[valid & (age < AGE_UNSCORED)])
+        for i in ids_of(st.next_batch["x"]):
+            # a selected sample still in the buffer must sit in a scored
+            # slot (selection happened after this round's refresh, and only
+            # admission can reset a slot to AGE_UNSCORED)
+            if i in set(buf_ids[valid]):
+                assert i in scored_ids, f"round {r}: unscored id {i} selected"
+
+
+def test_backlog_refresh_is_fifo_not_index_order():
+    """Regression: with more unscored slots than the chunk, the refresh
+    must serve the longest-waiting admit first. A constant unscored
+    sentinel would tie every backlogged slot and lax.top_k's index-order
+    tie-breaking could starve a high-index slot forever."""
+    from repro.core.filter import AGE_UNSCORED
+
+    ecfg, params, hooks, train = _setup(seed=8)
+    wf = _stream(15)
+    engine = TitanEngine.from_config(
+        TitanConfig(policy="titan-cis", stats_max_age=4,
+                    stats_refresh_chunk=1), hooks=hooks, train_step_fn=train,
+        batch_size=B, n_classes=C, buffer_size=M)
+    st = engine.init(jax.random.PRNGKey(7), params, wf())
+    buf = dict(st.buffer)
+    # slot 0: admitted this round; slot 1: waiting 5 rounds; rest scored
+    ages = np.zeros(M, np.int32)
+    ages[0] = AGE_UNSCORED
+    ages[1] = AGE_UNSCORED + 5
+    buf["_param_age"] = jnp.asarray(ages)
+    buf, _ = engine._refresh_stats(engine._params_of(st.train), buf)
+    out = np.asarray(buf["_param_age"])
+    assert out[1] == 0, "longest-waiting backlog slot must be served first"
+    assert out[0] == AGE_UNSCORED + 1  # still waiting, FIFO ticket advanced
+
+
+def test_refresh_chunk_bounds_staleness():
+    """Stalest-first refresh of ceil(size/max_age) slots per round: with no
+    admissions, no valid slot's cached stats ever grow older than
+    stats_max_age rounds (the round-robin bound DESIGN.md §7 cites)."""
+    ecfg, params, hooks, train = _setup(seed=4)
+    wf = _stream(13)
+    engine = TitanEngine.from_config(
+        TitanConfig(policy="titan-cis", stats_max_age=3), hooks=hooks,
+        train_step_fn=train, batch_size=B, n_classes=C, buffer_size=M)
+    assert engine.refresh_chunk == 4  # ceil(12 / 3)
+    st = engine.init(jax.random.PRNGKey(3), params, wf())
+    buf = dict(st.buffer)
+    for r in range(12):
+        buf, stats = engine._refresh_stats(
+            engine._params_of(st.train), dict(buf))
+        age = np.asarray(buf["_param_age"])
+        assert age.max() <= engine.cfg.stats_max_age, (r, age)
+    # every slot was re-scored at least once per cycle
+    assert set(stats) == {"domain", "gnorm", "sketch"}
 
 
 def test_train_cli_policy_flag():

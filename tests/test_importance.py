@@ -68,6 +68,45 @@ def test_sketch_unbiased_inner_products(seed):
     assert errs[1] < errs[0] + 0.05  # error shrinks (or stays tiny) with r
 
 
+def test_exact_head_stats_sketched_fallback_cis_moments_agree():
+    """Above max_exact_dim the dense (N, V·D) gradient is replaced by the
+    Kronecker JL sketch. loss/gnorm/entropy must be bit-identical; the C-IS
+    class moments (the only consumer of the sketch) must agree with the
+    exact path within JL tolerance."""
+    from repro.core.selection import class_moments
+
+    rs = np.random.RandomState(7)
+    N, D, V, Cc = 96, 24, 40, 4
+    h = jnp.asarray(rs.randn(N, D).astype(np.float32))
+    W = jnp.asarray(rs.randn(D, V).astype(np.float32) * 0.4)
+    y = jnp.asarray(rs.randint(0, V, N))
+    dom = jnp.asarray(rs.randint(0, Cc, N))
+    valid = jnp.ones((N,), bool)
+    logits = h @ W
+
+    exact = exact_head_stats(logits, y, h)                    # V*D = 960
+    assert exact["sketch"].shape == (N, V * D)
+    r = 32
+    # average the JL estimate over independent sketch draws (the estimator
+    # is unbiased; averaging shrinks the single-draw variance)
+    i_est = []
+    for t in range(8):
+        sk = exact_head_stats(logits, y, h, max_exact_dim=512, sketch_dim=r,
+                              sketch_key=jax.random.PRNGKey(t))
+        assert sk["sketch"].shape == (N, r * r)
+        for k in ("loss", "gnorm", "entropy"):
+            np.testing.assert_array_equal(np.asarray(sk[k]),
+                                          np.asarray(exact[k]), err_msg=k)
+        mom = class_moments({**sk, "domain": dom}, valid, Cc)
+        i_est.append(np.square(np.linalg.norm(
+            np.asarray(mom["mean_sketch"]), axis=-1)))
+    mom_exact = class_moments({**exact, "domain": dom}, valid, Cc)
+    norm_mean_g2 = np.square(np.linalg.norm(
+        np.asarray(mom_exact["mean_sketch"]), axis=-1))
+    np.testing.assert_allclose(np.mean(i_est, axis=0), norm_mean_g2,
+                               rtol=0.35, atol=1e-4)
+
+
 def test_lm_sequence_stats_finite_and_shaped():
     cfg = replace(get_config("qwen2-72b-reduced"), param_dtype="float32")
     model = build_model(cfg)
