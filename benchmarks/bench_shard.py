@@ -1,0 +1,208 @@
+"""Sharded-engine scaling benchmark: rounds/sec of the full Titan round
+(stage-1 filter, admission, stage-2 C-IS, train step) on a ``(data, 1)``
+mesh at data ∈ {1, 2, 4} forced host devices, plus the int8-vs-fp32
+data-parallel all-reduce payload per round (DESIGN.md §8).
+
+Every device count runs in its own subprocess because
+``--xla_force_host_platform_device_count`` must be set before the first jax
+import. ``data_shards=1`` is the ``mesh=None`` single-device engine — the
+baseline the speedups are normalized to. Two rates per lane:
+
+- ``rounds_per_sec`` — ``engine.step`` over pre-staged sharded windows: the
+  device-side round, i.e. what the sharded data plane itself costs/buys.
+  This is the gated number: the 2-shard run must keep >= 0.9x the
+  single-device rate (the forced host "devices" split the same cores, so
+  the sharded plane can at best break even on compute here — what the gate
+  bounds is its collective + partitioning overhead).
+- ``rounds_per_sec_e2e`` — ``engine.run`` with the prefetching data plane.
+  CAVEAT: this emulates the whole fleet's window generation on ONE host
+  (``ShardedStream`` draws every shard's slice serially, ``host_window_ms``
+  records that cost), so on a 2-core box it under-reports the sharded lane
+  — production gives every data shard its own host process that draws only
+  its own slice. Recorded for visibility, not gated.
+
+Lanes interleave per rep and speedups are medians of paired per-rep ratios
+(the bench_pipeline protocol — cancels shared-box drift). Real scaling
+needs real chips; the payload table records what the int8 compressed
+all-reduce (dist/collectives) saves on the wire either way.
+
+    PYTHONPATH=src python -m benchmarks.bench_shard            # full
+    PYTHONPATH=src python -m benchmarks.bench_shard --smoke    # quick
+
+Writes ``BENCH_shard.json`` (schema ``bench_shard/v1``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+from typing import Dict, List
+
+# workload: HAR-style MLP + titan-cis, buffer and window sized to divide
+# over every data-axis width benchmarked. Sized so the row-parallel work
+# (window features, buffer stage-2 stats, fwd/bwd) dominates the fixed
+# per-round collective cost — the regime the sharded plane is for; at toy
+# sizes the emulated host-device collectives dominate and every ratio just
+# measures rendezvous overhead
+IN_DIM, HIDDEN, C = 128, (1024, 512), 8
+B, SR, BR = 32, 8, 24           # window 256, buffer 768
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _child(data_shards: int, rounds: int, reps: int) -> None:
+    """Runs in a subprocess with the forced device count already in
+    XLA_FLAGS. BOTH lanes — the mesh=None single-device baseline and the
+    (data_shards, 1) mesh engine — run in THIS process, strictly
+    interleaved per rep, so the paired ratios see the same cgroup/throttle
+    weather; a lane-per-process comparison on a CPU-quota'd CI box is
+    dominated by when the quota window happens to reset. Prints one JSON
+    line with median rates and paired-median speedups."""
+    import time
+
+    import jax
+
+    from repro.configs.base import TitanConfig
+    from repro.core.engine import TitanEngine
+    from repro.data.stream import GaussianMixtureStream, ShardedStream
+    from repro.dist.sharding import data_sharding
+    from repro.hooks import har_hooks
+    from repro.launch.mesh import make_engine_mesh
+    from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+    S = data_shards
+    ecfg = EdgeMLPConfig(in_dim=IN_DIM, hidden=HIDDEN, n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(0))
+
+    def make_lane(mesh):
+        def train(p, b):
+            loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+            if mesh is not None:
+                g, loss = jax.lax.pmean((g, loss), "data")
+            return (jax.tree.map(lambda a, gg: a - 0.1 * gg, p, g),
+                    {"loss": loss})
+
+        tcfg = TitanConfig(stream_ratio=SR, buffer_ratio=BR)
+        engine = TitanEngine.from_config(
+            tcfg, hooks=har_hooks(ecfg), train_step_fn=train,
+            params_of=lambda s: s, batch_size=B, n_classes=C, mesh=mesh)
+        stream = ShardedStream.make(
+            lambda shard, num_shards: GaussianMixtureStream(
+                in_dim=IN_DIM, n_classes=C, seed=1, shard=shard,
+                num_shards=num_shards), max(S, 1))
+        w0 = stream.next_window(engine.window_size)
+        state = engine.init(jax.random.PRNGKey(1), params, w0)
+        state, m = engine.run(state, stream, 3, prefetch=2,
+                              metrics_every=0)      # warmup + compile
+        dev = data_sharding(mesh) if mesh is not None else None
+        ws = [jax.device_put(stream.next_window(engine.window_size), dev)
+              for _ in range(4)]
+        return {"engine": engine, "stream": stream, "state": state,
+                "ws": ws, "step": [], "e2e": []}
+
+    lanes = [make_lane(None)]
+    if S > 1:
+        lanes.append(make_lane(make_engine_mesh(S, 1)))
+    for _ in range(reps):
+        for lane in lanes:                     # interleaved: paired weather
+            eng, ws = lane["engine"], lane["ws"]
+            t0 = time.perf_counter()
+            for i in range(rounds):
+                lane["state"], m = eng.step(lane["state"], ws[i % len(ws)])
+            jax.block_until_ready(m["loss"])
+            lane["step"].append(rounds / (time.perf_counter() - t0))
+            t0 = time.perf_counter()
+            lane["state"], m = eng.run(lane["state"], lane["stream"],
+                                       rounds, prefetch=2, metrics_every=0)
+            jax.block_until_ready(m["loss"])
+            lane["e2e"].append(rounds / (time.perf_counter() - t0))
+
+    def paired(key):
+        r = sorted(a / b for a, b in zip(lanes[-1][key], lanes[0][key]))
+        return r[len(r) // 2]
+
+    t0 = time.perf_counter()
+    for _ in range(10):
+        lanes[-1]["stream"].next_window(lanes[-1]["engine"].window_size)
+    print(json.dumps({
+        "data_shards": S,
+        "rounds_per_sec": statistics.median(lanes[-1]["step"]),
+        "rounds_per_sec_e2e": statistics.median(lanes[-1]["e2e"]),
+        "baseline_rounds_per_sec": statistics.median(lanes[0]["step"]),
+        "speedup_vs_single": paired("step"),
+        "speedup_vs_single_e2e": paired("e2e"),
+        "host_window_ms": (time.perf_counter() - t0) * 100.0}))
+
+
+def _run_child(data_shards: int, rounds: int, reps: int) -> Dict:
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(f"--xla_force_host_platform_device_count="
+                   f"{max(data_shards, 1)}"),
+        PYTHONPATH=os.path.join(_ROOT, "src") + (
+            os.pathsep + os.environ["PYTHONPATH"]
+            if os.environ.get("PYTHONPATH") else ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_shard", "--child",
+         str(data_shards), str(rounds), str(reps)],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_shard child (S={data_shards}) failed:\n"
+                           f"{r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _payload() -> Dict:
+    """Per-round, per-participant gradient all-reduce payload of the bench
+    model, fp32 vs int8 (analytic — dist.collectives.allreduce_payload_bytes
+    over the param/grad tree)."""
+    import jax
+
+    from repro.dist.collectives import allreduce_payload_bytes
+    from repro.models.edge import EdgeMLPConfig, mlp_init
+
+    ecfg = EdgeMLPConfig(in_dim=IN_DIM, hidden=HIDDEN, n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(0))
+    fp32 = allreduce_payload_bytes(params, "none")
+    int8 = allreduce_payload_bytes(params, "int8")
+    return {"params": int(sum(x.size for x in jax.tree.leaves(params))),
+            "fp32_bytes": fp32, "int8_bytes": int8,
+            "ratio": fp32 / int8}
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_shard.json") -> Dict:
+    shards = (1, 2) if smoke else (1, 2, 4)
+    rounds = 14 if smoke else 24
+    reps = 3 if smoke else 5
+    rows: List[Dict] = [_run_child(s, rounds, reps) for s in shards]
+    payload = {"schema": "bench_shard/v1", "smoke": smoke,
+               "workload": {"batch": B, "window": B * SR, "buffer": B * BR,
+                            "in_dim": IN_DIM, "hidden": list(HIDDEN),
+                            "classes": C, "policy": "titan-cis",
+                            "rounds": rounds, "reps": reps},
+               "scaling": rows, "allreduce": _payload()}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"{'data':>6} {'step r/s':>10} {'vs 1-dev':>9} "
+          f"{'e2e r/s':>9} {'vs 1-dev':>9}")
+    for r in rows:
+        print(f"{r['data_shards']:>6} {r['rounds_per_sec']:>10.2f} "
+              f"{r['speedup_vs_single']:>8.2f}x "
+              f"{r['rounds_per_sec_e2e']:>9.2f} "
+              f"{r['speedup_vs_single_e2e']:>8.2f}x")
+    ar = payload["allreduce"]
+    print(f"all-reduce payload/round: fp32 {ar['fp32_bytes']:,} B -> "
+          f"int8 {ar['int8_bytes']:,} B ({ar['ratio']:.2f}x smaller)")
+    print(f"wrote {json_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        i = sys.argv.index("--child")
+        _child(int(sys.argv[i + 1]), int(sys.argv[i + 2]),
+               int(sys.argv[i + 3]))
+    else:
+        main(smoke="--smoke" in sys.argv)

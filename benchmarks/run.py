@@ -12,7 +12,8 @@ def main() -> None:
     from benchmarks import (bench_buffer, bench_fig2, bench_fig5a,
                             bench_fig5b, bench_fig5c, bench_fig6, bench_fig8,
                             bench_fig9, bench_fig10, bench_fig11,
-                            bench_kernels, bench_policies, bench_table1)
+                            bench_kernels, bench_policies, bench_shard,
+                            bench_table1)
     csv = []
 
     def run(name, fn):
@@ -91,6 +92,14 @@ def main() -> None:
                 f"{r32['speedup_incremental']:.2f}"))
     csv.append(("buffer_stats_rows_saved", dt,
                 f"{r32['stats_rows_legacy'] - r32['stats_rows_incremental']}"))
+
+    print("=" * 70)
+    name, dt, out = run("shard", bench_shard.main)  # writes BENCH_shard.json
+    two = next(r for r in out["scaling"] if r["data_shards"] == 2)
+    csv.append(("shard_2dev_step_speedup_x", dt,
+                f"{two['speedup_vs_single']:.2f}"))
+    csv.append(("shard_int8_allreduce_ratio", dt,
+                f"{out['allreduce']['ratio']:.2f}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

@@ -11,6 +11,12 @@ background thread, EngineState donated and device-resident, metrics drained
 asynchronously every 10 rounds. Swap ``policy="titan-cis"`` for any registry
 entry ("rs", "is", "ll", "hl", "ce", "ocs", "camel") to run a paper-§4.1
 baseline under the identical engine — one-flag experiments.
+
+The same round also runs data-parallel over a device mesh
+(``TitanEngine.from_config(..., mesh=make_engine_mesh(4, 1))`` or
+``python -m repro.launch.train --mesh 4,1`` — DESIGN.md §8): per-shard
+buffer partitions and stream shards, distributed top-k selection, gradient
+all-reduce over the data axis.
 """
 import os
 import sys

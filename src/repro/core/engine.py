@@ -20,23 +20,35 @@ window + stage-2 selection of the *next* round's batch, both reading the
 pre-update parameters — so XLA can overlap selection compute with the train
 step's collectives. Swapping ``policy="rs" | "is" | ... `` turns the paper's
 Fig./Table baseline comparisons into one-flag experiments.
+
+Passing ``mesh=`` (a ``(data, model)`` mesh from ``launch/mesh.py``) runs
+the same round data-parallel under ``shard_map``: each data shard owns a
+buffer partition and a stream slice, selection goes through a cross-shard
+distributed top-k, and gradients all-reduce over the data axis (DESIGN.md
+§8). ``mesh=None`` (the default) is the single-device engine, bit-identical
+to the pre-mesh code path.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import TitanConfig
 from repro.core.filter import (AGE_MAX, AGE_UNSCORED, NEG, buffer_admit,
                                buffer_examples,
-                               buffer_merge, buffer_valid, init_buffer,
+                               buffer_merge, buffer_valid, decay_scores,
+                               init_buffer,
                                init_stats_cache)
 from repro.core.registry import PolicySpecs, SelectionPolicy, get_policy
 from repro.data.loader import Prefetcher
+from repro.dist.collectives import replicate_metrics
+from repro.dist.sharding import data_sharding
 
 
 @jax.tree_util.register_dataclass
@@ -70,7 +82,7 @@ class TitanEngine:
                  params_of: Optional[Callable] = None,
                  batch_size: int, n_classes: int,
                  buffer_size: Optional[int] = None, jit: bool = True,
-                 donate: bool = True):
+                 donate: bool = True, mesh=None, data_axis: str = "data"):
         self.cfg = cfg if cfg is not None else TitanConfig()
         self.policy: SelectionPolicy = get_policy(
             policy if policy is not None else self.cfg.policy, self.cfg)
@@ -97,17 +109,50 @@ class TitanEngine:
             self.refresh_chunk = max(1, min(self.buffer_size, chunk))
         else:
             self.refresh_chunk = 0
-        self.step_fn = self._step
+        # --- sharded data plane (DESIGN.md §8) ---------------------------
+        self.mesh = mesh
+        self.data_axis = data_axis
+        if mesh is not None:
+            if data_axis not in mesh.axis_names:
+                raise ValueError(f"mesh axes {mesh.axis_names} carry no "
+                                 f"data axis {data_axis!r}")
+            S = int(mesh.shape[data_axis])
+            for what, n in (("batch_size", self.batch_size),
+                            ("buffer_size", self.buffer_size),
+                            ("window size", self.window_size)):
+                if n % S:
+                    raise ValueError(
+                        f"{what} {n} must divide over the {S}-way "
+                        f"{data_axis!r} mesh axis (each shard owns an equal "
+                        f"partition of rows)")
+            self.data_shards = S
+            # per-shard refresh: the chunk partitions with the buffer so the
+            # global rows-refreshed-per-round budget is unchanged
+            self._local_chunk = (max(1, min(self.buffer_size // S,
+                                            -(-self.refresh_chunk // S)))
+                                 if self.incremental else 0)
+        else:
+            self.data_shards = 1
+            self._local_chunk = self.refresh_chunk
         # Donating EngineState lets XLA update the candidate buffer (and the
         # train/optimizer pytrees) in place instead of allocating a fresh
         # copy in HBM every round — the state is device-resident for the
         # whole run. Aliasing rules: DESIGN.md §6.
         self.donate = bool(donate and jit)
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            specs = self.state_pspecs()
+            self.step_fn = shard_map(
+                self._shard_step, mesh=mesh,
+                in_specs=(specs, P(data_axis)), out_specs=(specs, P()),
+                check_rep=False)
+        else:
+            self.step_fn = self._step
         if jit:
-            self.step = jax.jit(self._step,
+            self.step = jax.jit(self.step_fn,
                                 donate_argnums=(0,) if self.donate else ())
         else:
-            self.step = self._step
+            self.step = self.step_fn
 
     @classmethod
     def from_config(cls, cfg: TitanConfig, model=None, *,
@@ -115,12 +160,17 @@ class TitanEngine:
                     hooks=None, params_of: Optional[Callable] = None,
                     batch_size: int, n_classes: Optional[int] = None,
                     buffer_size: Optional[int] = None, jit: bool = True,
-                    donate: bool = True) -> "TitanEngine":
+                    donate: bool = True, mesh=None,
+                    data_axis: str = "data") -> "TitanEngine":
         """Build an engine from a TitanConfig.
 
         For LM models (``build_model`` output) hooks default to the fused
         linear-score ``lm_hooks``; other modalities pass ``hooks=`` from
-        ``repro.hooks``. ``policy`` defaults to ``cfg.policy``.
+        ``repro.hooks``. ``policy`` defaults to ``cfg.policy``. ``mesh``
+        (e.g. ``launch.mesh.make_engine_mesh(data, model)``) turns on the
+        sharded data plane; the caller's ``train_step_fn`` must then reduce
+        its gradients over ``data_axis`` (``make_train_step(...,
+        data_axis=...)`` does).
         """
         if hooks is None:
             if model is None:
@@ -136,12 +186,58 @@ class TitanEngine:
         return cls(hooks=hooks, train_step_fn=train_step_fn, policy=policy,
                    cfg=cfg, params_of=params_of, batch_size=batch_size,
                    n_classes=n_classes, buffer_size=buffer_size, jit=jit,
-                   donate=donate)
+                   donate=donate, mesh=mesh, data_axis=data_axis)
 
     @property
     def window_size(self) -> int:
         """Stream samples the engine expects per round (paper's velocity v)."""
         return self.batch_size * self.cfg.stream_ratio
+
+    # -- mesh layout --------------------------------------------------------
+
+    def state_pspecs(self) -> EngineState:
+        """PartitionSpec pytree-prefix for EngineState on the data mesh:
+        buffer slots and selected-batch rows partition over the data axis,
+        train/policy/rng/round replicate. A ``shard_state`` policy
+        (DESIGN.md §8) instead keeps one independent state per shard,
+        stacked on a leading shard dim."""
+        data = P(self.data_axis)
+        pol = data if self.policy.shard_state else P()
+        return EngineState(train=P(), policy=pol, buffer=data,
+                           next_batch=data, rng=P(), t=P())
+
+    def state_shardings(self, state: EngineState, mesh=None) -> EngineState:
+        """NamedSharding tree for ``state`` under ``mesh`` (default: the
+        engine's own) — the placement ``init`` commits to and the target
+        ``ft.elastic.reshard_engine_state`` re-meshes onto."""
+        mesh = self.mesh if mesh is None else mesh
+        if mesh is None:
+            raise ValueError("state_shardings needs a mesh "
+                             "(engine was built with mesh=None)")
+        if self.policy.shard_state:
+            # a shard_state policy stacks one state per shard on the
+            # leading dim; re-meshing a stack built for a different axis
+            # width would silently drop/duplicate per-shard estimators
+            # (P("data") re-partitions 4 states into 2 blocks of 2, and the
+            # shard step only ever reads block[0])
+            S = int(mesh.shape[self.data_axis])
+            for leaf in jax.tree.leaves(state.policy):
+                if leaf.shape[:1] != (S,):
+                    raise ValueError(
+                        f"shard_state policy state is stacked for "
+                        f"{leaf.shape[0] if leaf.ndim else '?'} shards but "
+                        f"the target mesh has a {S}-way {self.data_axis!r} "
+                        f"axis; per-shard states cannot be re-meshed "
+                        f"automatically — merge or re-init the policy "
+                        f"state for the new shard count")
+        specs = self.state_pspecs()
+        kw = {}
+        for f in dataclasses.fields(EngineState):
+            spec = getattr(specs, f.name)
+            kw[f.name] = jax.tree.map(
+                lambda _, s=spec: NamedSharding(mesh, s),
+                getattr(state, f.name))
+        return EngineState(**kw)
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -193,8 +289,19 @@ class TitanEngine:
             buf = buffer_merge(buf, window, scores)
         nb = {k: v[:self.batch_size] for k, v in window.items()}
         nb["weights"] = jnp.ones((self.batch_size,), jnp.float32)
-        return EngineState(train=train_state, policy=pstate, buffer=buf,
-                           next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1)
+        state = EngineState(train=train_state, policy=pstate, buffer=buf,
+                            next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1)
+        if self.mesh is not None:
+            # bootstrap is computed globally (one-time cost), then committed
+            # to the mesh layout: buffer slots [i*M/S, (i+1)*M/S) become
+            # shard i's partition. Sharded-state policies start every shard
+            # from the same bootstrap estimators (stacked below).
+            if self.policy.shard_state:
+                state = dataclasses.replace(state, policy=jax.tree.map(
+                    lambda x: jnp.stack([x] * self.data_shards),
+                    state.policy))
+            state = jax.device_put(state, self.state_shardings(state))
+        return state
 
     def _cache_specs(self, params, window) -> Dict:
         """Per-slot cache field specs for the incremental buffer, discovered
@@ -211,7 +318,7 @@ class TitanEngine:
                 (1,) + tuple(f.shape[1:]), jnp.float32)
         return specs
 
-    def _refresh_stats(self, params, buffer: Dict):
+    def _refresh_stats(self, params, buffer: Dict, chunk: Optional[int] = None):
         """Re-score the ``refresh_chunk`` stalest valid slots (just-admitted
         slots carry AGE_UNSCORED+wait — FIFO above every scored slot — so
         they jump the queue) and age the rest. The
@@ -219,7 +326,9 @@ class TitanEngine:
         staleness of every cached entry stays bounded by ~stats_max_age
         rounds as long as steady-state admissions fit in the chunk
         (DESIGN.md §7). Returns ``(buffer, stats)`` with the cached stats
-        dict the policy selects from."""
+        dict the policy selects from. ``chunk`` defaults to the engine's
+        global refresh chunk; the mesh path passes its per-shard share."""
+        chunk = self.refresh_chunk if chunk is None else chunk
         age = buffer["_param_age"]
         # scored slots cap just below the unscored sentinel so a long-lived
         # survivor can never be reclassified as never-scored; unscored slots
@@ -231,7 +340,7 @@ class TitanEngine:
             buffer["_param_age"] = jnp.minimum(age + 1, cap)
             return buffer, {"domain": buffer["domain"]}
         prio = jnp.where(buffer_valid(buffer), age, -1)
-        _, ridx = jax.lax.top_k(prio, self.refresh_chunk)
+        _, ridx = jax.lax.top_k(prio, chunk)
         examples = buffer_examples(buffer)
         rex = {k: jnp.take(v, ridx, axis=0) for k, v in examples.items()}
         if self._stat_keys:
@@ -251,6 +360,49 @@ class TitanEngine:
             stats["features"] = buffer["_features"]
         return buffer, stats
 
+    def _maintain(self, params, buffer: Dict, window: Dict, scores, chunk):
+        """Shared per-partition buffer maintenance — decay, admission
+        (incremental scatter or legacy full merge), stat refresh/recompute —
+        for one buffer partition: the whole buffer on the single-device
+        path, this shard's slots on the mesh path. Returns ``(buffer,
+        examples, stats, valid, n_admitted, n_backlog)``."""
+        cfg = self.cfg
+        # freshness decay: stale entries must re-earn their slot against
+        # incoming samples (stops outliers squatting in the buffer)
+        buffer = decay_scores(buffer, cfg.buffer_decay)
+        n_admitted = n_backlog = None
+        if self.incremental:
+            # slot-stable scatter admission: surviving rows never rewritten
+            buffer, plan = buffer_admit(buffer, window, scores,
+                                        impl=cfg.admit_impl)
+            n_admitted = plan["n_admitted"]
+            # (C) stage 2 over cached stats: re-score only the admitted
+            # slots + the stalest survivors, not the whole buffer
+            buffer, stats = self._refresh_stats(params, buffer, chunk)
+            examples = buffer_examples(buffer)
+            valid = buffer_valid(buffer)
+            if self._stat_keys or self.policy.needs_features:
+                # a slot is selectable only once scored: backlogged admits
+                # (admissions beyond the refresh chunk) hold zero-filled
+                # caches, which 'll' would rank above every real loss and
+                # C-IS would mis-count into the class moments
+                scored = buffer["_param_age"] < AGE_UNSCORED
+                n_backlog = jnp.sum((valid & ~scored).astype(jnp.int32))
+                valid = valid & scored
+        else:
+            buffer = buffer_merge(buffer, window, scores)
+
+            # (C) stage 2: fine-grained selection over the candidate buffer
+            examples = buffer_examples(buffer)
+            stats = {"domain": examples["domain"]}
+            if self.policy.needs_stats:
+                stats.update(self.hooks.stats_fn(params, examples))
+                stats["domain"] = examples["domain"]
+            if self.policy.needs_features:
+                stats["features"] = self.hooks.features_fn(params, examples)
+            valid = buffer_valid(buffer)
+        return buffer, examples, stats, valid, n_admitted, n_backlog
+
     def _step(self, state: EngineState, window: Dict):
         cfg = self.cfg
         params = self._params_of(state.train)   # w_t: stale for selection
@@ -264,45 +416,9 @@ class TitanEngine:
             obs["features"] = self.hooks.features_fn(params, window)
         pstate = self.policy.observe(state.policy, window, obs)
         scores = self.policy.admission_scores(pstate, window, obs)
-        old_buffer = state.buffer
-        if cfg.buffer_decay < 1.0:
-            # freshness decay: stale entries must re-earn their slot against
-            # incoming samples (stops outliers squatting in the buffer)
-            old_buffer = dict(old_buffer)
-            s = old_buffer["_score"]
-            old_buffer["_score"] = jnp.where(s > -1e29,
-                                             s * cfg.buffer_decay, s)
-        n_admitted = n_backlog = None
-        if self.incremental:
-            # slot-stable scatter admission: surviving rows never rewritten
-            buffer, plan = buffer_admit(old_buffer, window, scores,
-                                        impl=cfg.admit_impl)
-            n_admitted = plan["n_admitted"]
-            # (C) stage 2 over cached stats: re-score only the admitted
-            # slots + the stalest survivors, not the whole buffer
-            buffer, stats = self._refresh_stats(params, buffer)
-            examples = buffer_examples(buffer)
-            valid = buffer_valid(buffer)
-            if self._stat_keys or self.policy.needs_features:
-                # a slot is selectable only once scored: backlogged admits
-                # (admissions beyond the refresh chunk) hold zero-filled
-                # caches, which 'll' would rank above every real loss and
-                # C-IS would mis-count into the class moments
-                scored = buffer["_param_age"] < AGE_UNSCORED
-                n_backlog = jnp.sum((valid & ~scored).astype(jnp.int32))
-                valid = valid & scored
-        else:
-            buffer = buffer_merge(old_buffer, window, scores)
-
-            # (C) stage 2: fine-grained selection over the candidate buffer
-            examples = buffer_examples(buffer)
-            stats = {"domain": examples["domain"]}
-            if self.policy.needs_stats:
-                stats.update(self.hooks.stats_fn(params, examples))
-                stats["domain"] = examples["domain"]
-            if self.policy.needs_features:
-                stats["features"] = self.hooks.features_fn(params, examples)
-            valid = buffer_valid(buffer)
+        buffer, examples, stats, valid, n_admitted, n_backlog = \
+            self._maintain(params, state.buffer, window, scores,
+                           self.refresh_chunk)
         rng, key = jax.random.split(state.rng)
         idx, w, pstate = self.policy.select(key, pstate, stats, valid,
                                             self.batch_size)
@@ -331,6 +447,142 @@ class TitanEngine:
                 metrics["titan_stats_backlog"] = n_backlog
         return EngineState(train=new_train, policy=pstate, buffer=buffer,
                            next_batch=nb, rng=rng, t=state.t + 1), metrics
+
+    def _shard_step(self, state: EngineState, window: Dict):
+        """Per-shard body of the mesh step (DESIGN.md §8), running under
+        ``shard_map`` over the data axis: ``state.buffer`` and
+        ``state.next_batch`` arrive as this shard's partition, ``window`` as
+        this shard's stream slice, everything else replicated. The caller's
+        ``train_step_fn`` owns the gradient all-reduce over the data axis
+        (``make_train_step(..., data_axis=...)`` — pmean, optionally
+        int8-compressed per dist/collectives)."""
+        cfg = self.cfg
+        ax = self.data_axis
+        S = self.data_shards
+        B = self.batch_size
+        my = jax.lax.axis_index(ax)
+        shard_state = self.policy.shard_state
+        pstate0 = state.policy
+        if shard_state:
+            # sharded-state policies stack one state per shard on a leading
+            # dim; strip this shard's slice for the policy calls
+            pstate0 = jax.tree.map(lambda x: x[0], pstate0)
+        params = self._params_of(state.train)   # w_t: stale for selection
+
+        # (A) model update on this shard's rows of last round's batch
+        new_train, metrics = self._train_step_fn(state.train, state.next_batch)
+
+        # (B) stage 1. Replicated policy state observes the GLOBAL window
+        # view (obs features/domains all-gathered, shard-major order) so
+        # the estimators evolve exactly as on a single device; the `window`
+        # arg itself stays this shard's slice (observe must read rows via
+        # obs — registry docstring). Sharded-state policies observe only
+        # their local slice.
+        feats = None
+        if self.policy.needs_window_features:
+            feats = self.hooks.features_fn(params, window)
+        obs_l = {"domain": window["domain"], "round": state.t,
+                 "features": feats}
+        if shard_state:
+            pstate = self.policy.observe(pstate0, window, obs_l)
+        else:
+            # one bundled all-gather (pytree bind -> a single collective)
+            gathered = jax.lax.all_gather(
+                {k: v for k, v in obs_l.items() if k != "round"
+                 and v is not None}, ax, tiled=True)
+            obs_g = {"round": state.t, "features": None, **gathered}
+            pstate = self.policy.observe(pstate0, window, obs_g)
+        # admission stays shard-local: each shard scores its own window
+        # slice and fills its own slots (divergence from global admission
+        # is bounded and documented in DESIGN.md §8)
+        scores = self.policy.admission_scores(pstate, window, obs_l)
+        buffer, examples, stats, valid, n_admitted, n_backlog = \
+            self._maintain(params, state.buffer, window, scores,
+                           self._local_chunk)
+
+        rng, k1, k2 = jax.random.split(state.rng, 3)
+        k1 = jax.random.fold_in(k1, my)     # shard-local proposal draw
+        if shard_state:
+            # local selection: each shard independently picks its B/S rows
+            # from its own buffer (the federated mode — no cross-client
+            # candidate exchange)
+            bl = B // S
+            idx, w, pstate = self.policy.select(k1, pstate, stats, valid, bl)
+            if cfg.weight_clip:
+                w = jnp.minimum(w, cfg.weight_clip)
+            nb_local = {k: jnp.take(v, idx, axis=0)
+                        for k, v in examples.items()}
+            nb_local["weights"] = w.astype(jnp.float32)
+            if cfg.evict_selected:
+                buffer = dict(buffer)
+                buffer["_score"] = buffer["_score"].at[idx].set(NEG)
+            mean_w = jax.lax.pmean(jnp.mean(w), ax)
+        else:
+            # distributed top-k: every shard proposes its local top-k
+            # candidates, the k·S pool is all-gathered (scores + rows) and
+            # ranked globally by a replicated second select — exact for
+            # deterministic top-k policies (DESIGN.md §8)
+            k_prop = min(B, self.buffer_size // S)
+            idx1, _, _ = self.policy.select(k1, pstate, stats, valid, k_prop)
+            # _topk recycles picks when a shard holds < k valid rows;
+            # dedupe so each candidate enters the pool once (a surviving
+            # duplicate would displace the true B-th global candidate)
+            first = (jnp.argmax(idx1[:, None] == idx1[None, :], axis=1)
+                     == jnp.arange(k_prop))
+            ok_l = jnp.take(valid, idx1) & first
+            taken = jax.tree.map(lambda v: jnp.take(v, idx1, axis=0),
+                                 (stats, examples))
+            # one bundled all-gather for the whole candidate pool
+            pool_stats, pool_ex, pool_ok = jax.lax.all_gather(
+                (*taken, ok_l), ax, tiled=True)
+            idx2, w, pstate = self.policy.select(k2, pstate, pool_stats,
+                                                 pool_ok, B)
+            if cfg.weight_clip:
+                w = jnp.minimum(w, cfg.weight_clip)
+            # each shard only materializes ITS B/S rows of the winning
+            # batch: slice the replicated idx2/w to this shard's span
+            # before gathering example rows from the pool
+            bl = B // S
+            idx2_l = jax.lax.dynamic_slice_in_dim(idx2, my * bl, bl)
+            nb_local = {k: jnp.take(v, idx2_l, axis=0)
+                        for k, v in pool_ex.items()}
+            nb_local["weights"] = jax.lax.dynamic_slice_in_dim(
+                w, my * bl, bl).astype(jnp.float32)
+            if cfg.evict_selected:
+                # pool position p == shard p//k_prop, local pick idx1[p%k_prop]:
+                # slice this shard's span of the global winner mask and
+                # scatter-max it onto the proposing slots (idempotent for
+                # recycled duplicates)
+                won = jnp.zeros((S * k_prop,), jnp.int32).at[idx2].set(1)
+                mine = jax.lax.dynamic_slice_in_dim(won, my * k_prop, k_prop)
+                ev = (jnp.zeros(buffer["_score"].shape, jnp.int32)
+                      .at[idx1].max(mine))
+                buffer = dict(buffer)
+                buffer["_score"] = jnp.where(ev > 0, NEG, buffer["_score"])
+            mean_w = jnp.mean(w)
+
+        metrics = dict(metrics)
+        pm = self.policy.metrics(pstate)
+        if shard_state:
+            # per-shard diagnostics must leave the shard_map replicated
+            pm = replicate_metrics(pm, ax)
+        metrics.update(pm)
+        metrics["titan_mean_weight"] = mean_w
+        if n_admitted is not None:
+            if n_backlog is not None:
+                admitted, backlog = jax.lax.psum((n_admitted, n_backlog), ax)
+                metrics["titan_buffer_admitted"] = admitted
+                metrics["titan_stats_backlog"] = backlog
+                metrics["titan_stats_max_age"] = jax.lax.pmax(
+                    jnp.max(jnp.where(valid, buffer["_param_age"], 0)), ax)
+            else:
+                metrics["titan_buffer_admitted"] = jax.lax.psum(n_admitted,
+                                                                ax)
+        pstate_out = (jax.tree.map(lambda x: x[None], pstate) if shard_state
+                      else pstate)
+        return EngineState(train=new_train, policy=pstate_out, buffer=buffer,
+                           next_batch=nb_local, rng=rng,
+                           t=state.t + 1), metrics
 
     # -- driver -------------------------------------------------------------
 
@@ -369,6 +621,26 @@ class TitanEngine:
         round's host metrics (None when ``rounds == 0``).
         """
         n = int(window_size) if window_size else self.window_size
+        if self.mesh is not None:
+            if n % self.data_shards:
+                raise ValueError(f"window_size {n} must divide over the "
+                                 f"{self.data_shards}-way data axis")
+            # a ShardedStream must partition exactly like the mesh, or
+            # mesh shard i silently consumes another stream shard's rows
+            # and per-shard replay after an elastic restart diverges
+            # (StragglerGuard wraps the stream it guards — unwrap it)
+            inner = getattr(stream, "stream", None) or stream
+            n_stream = len(getattr(inner, "streams", ()) or ())
+            if n_stream and n_stream != self.data_shards:
+                raise ValueError(
+                    f"stream is sharded {n_stream}-way but the mesh data "
+                    f"axis is {self.data_shards}-way; build the "
+                    f"ShardedStream with num_shards={self.data_shards}")
+            if device is None:
+                # per-shard prefetch: the Prefetcher stages each window
+                # straight into its row partition over the data axis, so no
+                # post-hoc reshard sits on the dispatch path
+                device = data_sharding(self.mesh, self.data_axis)
         pending: deque = deque()
         last: Dict[str, Any] = {"m": None}
 

@@ -111,6 +111,20 @@ def init_buffer(example_specs: Dict[str, jax.ShapeDtypeStruct], size: int):
     return buf
 
 
+def decay_scores(buffer: Dict, decay: float) -> Dict:
+    """Per-round freshness decay of buffered coarse scores: stale entries
+    must re-earn their slot against incoming samples. NEG-evicted slots stay
+    pinned at exactly NEG (the ``> -1e29`` guard) so decay can never walk
+    |NEG| back across the ``buffer_valid`` threshold and resurrect consumed
+    samples. ``decay >= 1`` is the identity (no copy)."""
+    if decay >= 1.0:
+        return buffer
+    buffer = dict(buffer)
+    s = buffer["_score"]
+    buffer["_score"] = jnp.where(s > -1e29, s * decay, s)
+    return buffer
+
+
 def buffer_merge(buffer: Dict, window: Dict, scores):
     """Keep the top-|buffer| entries of buffer ∪ window by coarse score.
 

@@ -68,12 +68,29 @@ class SelectionPolicy:
                      the engine materializes one cached per-slot array per
                      key, so a policy that only reads ``loss`` does not pay
                      for a (size, r²) sketch cache in HBM.
+      shard_state    how the policy state lives on a data mesh (DESIGN.md
+                     §8). False (default): one replicated state — stage-1
+                     observes the globally gathered window view and stage-2
+                     ranks a cross-shard candidate pool, matching the
+                     single-device policy semantics. True: one independent
+                     state per data shard (stacked on a leading shard dim by
+                     the engine) — observation, admission and selection all
+                     stay shard-local, each shard picking batch/S rows from
+                     its own partition (the federated/per-client mode).
+                     Mesh caveat for replicated policies: only ``obs``
+                     (domain/features) is all-gathered; the ``window`` arg
+                     to ``observe`` stays this shard's local slice. An
+                     ``observe`` that reads example rows straight from
+                     ``window`` (none of the built-ins do) would update the
+                     "replicated" state from per-shard data — read rows via
+                     ``obs`` or set ``shard_state=True``.
     """
     name: str = "?"
     unit_weights: bool = True
     needs_stats: bool = True
     needs_features: bool = False
     needs_window_features: bool = False
+    shard_state: bool = False
     stat_keys: Tuple[str, ...] = ("loss", "gnorm", "entropy", "sketch")
 
     def __init__(self, cfg: Optional[TitanConfig] = None):

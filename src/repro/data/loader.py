@@ -51,8 +51,12 @@ class Prefetcher:
       depth: parked-window capacity; 0 = synchronous passthrough.
       rounds: optional production cap — the worker stops after producing
         this many windows and ``get()`` raises ``StreamExhausted``.
-      device: optional target for ``jax.device_put`` (default device when
-        None).
+      device: optional target for ``jax.device_put``: a Device, or any
+        ``jax.sharding.Sharding`` — e.g. ``dist.sharding.data_sharding
+        (mesh)`` to stage each window's rows straight into their per-shard
+        partition on a device mesh (the engine's ``run(mesh=...)`` default),
+        so the sharded step never reshards input on the dispatch path.
+        Default device when None.
     """
 
     def __init__(self, stream, n: int, *, depth: int = 2,

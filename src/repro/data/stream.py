@@ -172,6 +172,53 @@ class GaussianMixtureStream:
         return x.astype(np.float32), y.astype(np.int32)
 
 
+@dataclass
+class ShardedStream:
+    """Data-parallel stream: one ``StreamProtocol`` per data shard, windows
+    concatenated shard-major.
+
+    Rows ``[i*n/S, (i+1)*n/S)`` of every window belong to shard ``i`` —
+    exactly the row partition ``dist.sharding.data_sharding`` stages onto
+    the engine mesh, so shard ``i`` of the mesh always consumes shard ``i``
+    of the stream. Member streams decorrelate through the existing
+    ``shard``/``num_shards`` plumbing (``mix_seed`` keys every distinct
+    ``(seed, shard, round)`` tuple onto a distinct generator stream), so a
+    restarted host replays its shard exactly and no shard ever sees another
+    shard's samples.
+    """
+    streams: Tuple
+
+    def __post_init__(self):
+        self.streams = tuple(self.streams)
+        if not self.streams:
+            raise ValueError("ShardedStream needs at least one shard stream")
+
+    @classmethod
+    def make(cls, factory, num_shards: int) -> "ShardedStream":
+        """``factory(shard=i, num_shards=S)`` per shard — every stream in
+        this module accepts those fields."""
+        return cls(tuple(factory(shard=i, num_shards=num_shards)
+                         for i in range(num_shards)))
+
+    def next_window(self, n: int) -> Dict[str, np.ndarray]:
+        S = len(self.streams)
+        if n % S:
+            raise ValueError(f"window size {n} must divide over {S} shards")
+        outs = [s.next_window(n // S) for s in self.streams]
+        return {k: np.concatenate([o[k] for o in outs], axis=0)
+                for k in outs[0]}
+
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        S = len(self.streams)
+        if n % S:
+            # same contract as next_window — specs for an unproducible
+            # window would only defer the error into the prefetch thread
+            raise ValueError(f"window size {n} must divide over {S} shards")
+        per = self.streams[0].window_specs(n // S)
+        return {k: jax.ShapeDtypeStruct((n,) + tuple(v.shape[1:]), v.dtype)
+                for k, v in per.items()}
+
+
 def save_stream_shard(path: str, window: Dict[str, np.ndarray]):
     """Atomically write a window shard: write to a sibling tmp file, then
     rename. The tmp name must end in .npz or np.savez appends the suffix

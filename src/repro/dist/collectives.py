@@ -7,6 +7,8 @@ can model the compression error on a single device (tests, dry runs).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -22,6 +24,38 @@ def quantize_dequantize_int8(g):
     q = jnp.round(gf / jnp.maximum(scale, 1e-30))
     q = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
     return (q.astype(jnp.float32) * scale).astype(g.dtype)
+
+
+def replicate_metrics(mets, axis: str):
+    """Reduce a dict of per-shard scalar diagnostics so every value leaves
+    a ``shard_map`` replicated: mean for floats, max for ints (a counter's
+    max is a sane cross-shard diagnostic; summing is the caller's job where
+    a total is meant). Values that diverge across shards under an
+    ``out_specs=P()`` are silently unsound — this is the one chokepoint
+    both the engine and the train step reduce through."""
+    return {k: (jax.lax.pmean(v, axis)
+                if jnp.issubdtype(jnp.asarray(v).dtype, jnp.inexact)
+                else jax.lax.pmax(v, axis)) for k, v in mets.items()}
+
+
+def allreduce_payload_bytes(grads, compression: str = "none") -> int:
+    """Per-participant wire payload of one data-parallel gradient
+    all-reduce over ``grads`` (a pytree of arrays or ShapeDtypeStructs).
+
+    ``"none"``: every floating leaf ships at its own dtype width.
+    ``"int8"``: every floating leaf ships one byte per element plus one
+    fp32 abs-max scale per tensor. Non-floating leaves never ride the
+    gradient reduction. Used by benchmarks/bench_shard.py to record the
+    int8-vs-fp32 traffic saving next to the measured scaling numbers.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(grads):
+        dt = jnp.dtype(leaf.dtype)
+        if not jnp.issubdtype(dt, jnp.floating):
+            continue
+        n = int(math.prod(leaf.shape))
+        total += n + 4 if compression == "int8" else n * dt.itemsize
+    return total
 
 
 def make_compressed_allreduce(mesh, axis: str):

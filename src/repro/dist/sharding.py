@@ -156,6 +156,14 @@ def constrain(x, *axes):
     return jax.lax.with_sharding_constraint(x, rules.sharding(*axes))
 
 
+def data_sharding(mesh, axis: str = "data") -> NamedSharding:
+    """Leading-dim row partition over the mesh's data axis — the layout of
+    every per-row array in the sharded engine (stream windows staged by the
+    Prefetcher, candidate-buffer slots, selected-batch rows). One sharding
+    works for any rank: trailing dims stay unsharded."""
+    return NamedSharding(mesh, P(axis))
+
+
 def param_shardings(defs, rules: AxisRules):
     """ParamDef tree -> NamedSharding tree under `rules`."""
     from repro.models.model import ParamDef

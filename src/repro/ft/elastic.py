@@ -17,8 +17,36 @@ import jax
 
 
 def reshard(tree, shardings):
-    """Elastic re-mesh: place a (host or device) pytree under new shardings."""
+    """Elastic re-mesh: place a (host or device) pytree under new shardings.
+
+    ``shardings`` must mirror ``tree`` leaf-for-leaf. The structures are
+    checked up front: a mismatch (missing state field, shardings built for
+    a different pytree) used to surface as an inscrutable tree-map arity
+    error from deep inside ``jax.tree.map``."""
+    t_struct = jax.tree.structure(tree)
+    s_struct = jax.tree.structure(shardings)
+    if t_struct != s_struct:
+        raise ValueError(
+            "reshard: `shardings` does not mirror `tree` — every array leaf "
+            "needs exactly one sharding leaf.\n"
+            f"  tree structure:      {t_struct}\n"
+            f"  shardings structure: {s_struct}")
     return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+
+
+def reshard_engine_state(state, engine, mesh=None):
+    """Re-mesh a TitanEngine ``EngineState`` onto ``engine``'s mesh (or an
+    explicit ``mesh``) and resume — the elastic-restart path when the data
+    axis grows or shrinks (node loss, capacity change).
+
+    The global arrays are untouched: buffer slots, selected-batch rows and
+    the replicated train/policy state keep their values, only the
+    slot→shard ownership map changes (``P("data")`` over M rows re-
+    partitions M/S_old-per-shard into M/S_new-per-shard). The target engine
+    must be built for the new mesh (its jitted step is specialized to the
+    axis size); global sizes must divide the new axis — ``TitanEngine``
+    validates that at construction."""
+    return reshard(state, engine.state_shardings(state, mesh=mesh))
 
 
 class StragglerGuard:

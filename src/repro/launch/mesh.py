@@ -36,3 +36,25 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for subprocess tests (8 host devices)."""
     n = int(np.prod(shape))
     return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def make_engine_mesh(data: int = 1, model: int = 1):
+    """``(data, model)`` mesh for TitanEngine's sharded data plane
+    (``TitanEngine.from_config(..., mesh=...)``, ``launch.train --mesh d,m``).
+
+    Sized to whatever devices exist — any backend. On CPU (CI, the
+    multidevice test lane) fake the devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+    first jax import.
+    """
+    n = int(data) * int(model)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh (data={data}, model={model}) needs {n} devices, have "
+            f"{len(devs)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"the first jax import")
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(int(data), int(model)),
+        ("data", "model"))

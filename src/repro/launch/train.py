@@ -4,11 +4,14 @@
         --steps 100 --batch 8 --seq 128 --policy titan-cis --ckpt-dir /tmp/run1
 
 Runs on whatever devices exist (1 CPU device in this container; the
-production mesh path is exercised by dryrun.py). Features: streaming data
+production pjit path is exercised by dryrun.py). Features: streaming data
 selection via TitanEngine with any registered policy (``--policy list``
 prints the registry; ``--titan`` is a legacy alias for titan-cis), AdamW +
 warmup-cosine, checkpoint/auto-resume, straggler guard, eval loss, gradient
-compression.
+compression, and a data-parallel device mesh: ``--mesh 4,1`` runs the whole
+round sharded over 4 data shards (per-shard buffer partitions + streams,
+distributed top-k selection, gradient all-reduce — DESIGN.md §8; int8
+all-reduce compression via ``--grad-compress int8``).
 
 The round loop is ``engine.run()``: stream windows are prefetched on a
 background thread (``--prefetch`` buffered windows, 0 = synchronous),
@@ -58,6 +61,12 @@ def main(argv=None):
     ap.add_argument("--policy", default="",
                     help="selection policy from the registry "
                          "('list' prints the available policies)")
+    ap.add_argument("--mesh", default="",
+                    help="d,m data×model device mesh for the sharded engine "
+                         "(e.g. --mesh 4,1). Needs d*m visible devices; on "
+                         "CPU fake them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N before "
+                         "launch. Requires a --policy (the engine path).")
     ap.add_argument("--stream-ratio", type=int, default=4)
     ap.add_argument("--buffer-ratio", type=int, default=2)
     ap.add_argument("--n-micro", type=int, default=1)
@@ -80,16 +89,46 @@ def main(argv=None):
         sys.exit(2)
     policy = args.policy or ("titan-cis" if args.titan else "")
 
+    mesh = None
+    data_shards = 1
+    if args.mesh:
+        if not policy:
+            print("error: --mesh runs through the sharded TitanEngine; "
+                  "pick a --policy (e.g. --policy titan-cis)",
+                  file=sys.stderr)
+            sys.exit(2)
+        try:
+            d, m = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            print(f"error: --mesh wants 'd,m' (got {args.mesh!r})",
+                  file=sys.stderr)
+            sys.exit(2)
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh(d, m)
+        data_shards = d
+
     cfg = get_config(args.arch)
     model = build_model(cfg)
     tcfg = TrainConfig(seq_len=args.seq, global_batch=args.batch, lr=args.lr,
                        warmup_steps=max(args.steps // 10, 5),
                        total_steps=args.steps,
                        grad_compression=args.grad_compress, seed=args.seed)
-    train_step = make_train_step(model, tcfg, n_micro=args.n_micro)
+    train_step = make_train_step(model, tcfg, n_micro=args.n_micro,
+                                 data_axis="data" if mesh is not None
+                                 else None)
 
-    stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=args.seq,
-                               n_domains=cfg.n_domains, seed=args.seed)
+    if data_shards > 1:
+        # one decorrelated stream slice per data shard (mix_seed keys each
+        # (seed, shard, round) onto its own generator stream)
+        from repro.data.stream import ShardedStream
+        stream = ShardedStream.make(
+            lambda shard, num_shards: SyntheticLMStream(
+                vocab=cfg.vocab, seq_len=args.seq, n_domains=cfg.n_domains,
+                seed=args.seed, shard=shard, num_shards=num_shards),
+            data_shards)
+    else:
+        stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=args.seq,
+                                   n_domains=cfg.n_domains, seed=args.seed)
     guard = StragglerGuard(stream, deadline_s=5.0)
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed))
@@ -137,12 +176,13 @@ def main(argv=None):
                           policy=policy)
         engine = TitanEngine.from_config(
             ttn, model, train_step_fn=train_step,
-            params_of=lambda s: s.params, batch_size=args.batch)
+            params_of=lambda s: s.params, batch_size=args.batch, mesh=mesh)
         w0 = to_batch(guard.next_window(engine.window_size))
         estate = engine.init(jax.random.PRNGKey(args.seed + 1), state, w0)
         print(f"[engine] policy={engine.policy.name} "
               f"window={engine.window_size} buffer={engine.buffer_size} "
-              f"prefetch={args.prefetch} donate={engine.donate}")
+              f"prefetch={args.prefetch} donate={engine.donate} "
+              f"mesh={args.mesh or 'none'}")
         estate, _ = engine.run(
             estate, guard, rounds, prefetch=args.prefetch,
             metrics_every=args.log_every, on_metrics=log_metrics,

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig, TrainConfig
-from repro.dist.collectives import quantize_dequantize_int8
+from repro.dist.collectives import quantize_dequantize_int8, replicate_metrics
 from repro.dist.sharding import constrain
 from repro.optim.adamw import adamw_update
 from repro.optim.schedule import warmup_cosine
@@ -31,8 +31,19 @@ def _split_micro(batch, n_micro: int):
 
 def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
                     grad_compress: Optional[str] = None,
-                    constrain_grads: bool = True):
-    """Returns train_step(state, batch) -> (state', metrics)."""
+                    constrain_grads: bool = True,
+                    data_axis: Optional[str] = None):
+    """Returns train_step(state, batch) -> (state', metrics).
+
+    ``data_axis`` names the mesh axis to all-reduce gradients over when the
+    step runs inside ``shard_map`` (the TitanEngine mesh path): each shard
+    computes grads on its batch slice, then grads/loss are ``pmean``-ed over
+    the axis before the optimizer update. Combined with
+    ``grad_compress="int8"`` this is exactly the compressed all-reduce of
+    ``dist.collectives.make_compressed_allreduce`` — every participant
+    contributes its quantize-dequantized local grads. ``None`` (default)
+    keeps the single-program behavior (GSPMD owns any reduction).
+    """
     cfg: ArchConfig = model.cfg
     acc_dtype = jnp.dtype(cfg.opt_state_dtype)
     grad_compress = grad_compress or tcfg.grad_compression
@@ -77,6 +88,16 @@ def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
 
         if grad_compress == "int8":
             grads = jax.tree.map(quantize_dequantize_int8, grads)
+
+        if data_axis is not None:
+            # data-parallel all-reduce (mean) over the mesh axis; with int8
+            # compression above, the payload on the wire is the quantized
+            # contribution of each shard. One pytree-level pmean = one
+            # bundled collective, not one rendezvous per tensor
+            grads, loss = lax.pmean((grads, loss), data_axis)
+            if isinstance(mets, dict):
+                # scalar diagnostics must leave the shard_map replicated
+                mets = replicate_metrics(mets, data_axis)
 
         lr = warmup_cosine(state.step, peak_lr=tcfg.lr,
                            warmup_steps=tcfg.warmup_steps,

@@ -40,9 +40,22 @@ def pytest_addoption(parser):
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "bench_smoke: benchmark smoke tests (need --bench-smoke)")
+    config.addinivalue_line(
+        "markers",
+        "multidevice: needs several XLA devices in THIS process — run under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=8 (the CI `mesh` "
+        "job); skips cleanly when only one device is visible")
 
 
 def pytest_collection_modifyitems(config, items):
+    if any("multidevice" in item.keywords for item in items) \
+            and jax.device_count() < 2:
+        skip_md = pytest.mark.skip(
+            reason="needs >1 XLA device "
+                   "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        for item in items:
+            if "multidevice" in item.keywords:
+                item.add_marker(skip_md)
     if config.getoption("--bench-smoke"):
         return
     skip = pytest.mark.skip(reason="needs --bench-smoke")

@@ -1,9 +1,12 @@
 """Benchmark-harness smoke tests (opt-in: ``pytest --bench-smoke``).
 
-Runs the kernel, policy, data-plane and candidate-buffer micro-benchmarks
-at tiny shapes and checks the machine-readable ``BENCH_kernels.json`` /
-``BENCH_policies.json`` / ``BENCH_pipeline.json`` / ``BENCH_buffer.json``
-contracts that track the perf trajectory across PRs."""
+Runs the kernel, policy, data-plane, candidate-buffer and sharded-engine
+micro-benchmarks at tiny shapes and checks the machine-readable
+``BENCH_kernels.json`` / ``BENCH_policies.json`` / ``BENCH_pipeline.json``
+/ ``BENCH_buffer.json`` / ``BENCH_shard.json`` contracts that track the
+perf trajectory across PRs. Set ``BENCH_JSON_DIR`` to collect the JSONs in
+a fixed directory (CI uploads them as workflow artifacts) instead of the
+per-test tmp dir."""
 import json
 import os
 
@@ -12,10 +15,18 @@ import pytest
 pytestmark = pytest.mark.bench_smoke
 
 
+def _json_path(tmp_path, name):
+    d = os.environ.get("BENCH_JSON_DIR")
+    if d:
+        os.makedirs(d, exist_ok=True)
+        return os.path.join(d, name)
+    return os.path.join(str(tmp_path), name)
+
+
 def test_bench_kernels_smoke_writes_json(tmp_path):
     from benchmarks import bench_kernels
 
-    path = os.path.join(str(tmp_path), "BENCH_kernels.json")
+    path = _json_path(tmp_path, "BENCH_kernels.json")
     rows = bench_kernels.main(smoke=True, json_path=path)
     assert rows, "benchmark produced no rows"
     with open(path) as f:
@@ -40,7 +51,7 @@ def test_bench_policies_smoke_writes_json(tmp_path):
     from benchmarks import bench_policies
     from repro.core.registry import available_policies
 
-    path = os.path.join(str(tmp_path), "BENCH_policies.json")
+    path = _json_path(tmp_path, "BENCH_policies.json")
     rows = bench_policies.main(smoke=True, json_path=path)
     assert rows, "benchmark produced no rows"
     with open(path) as f:
@@ -58,7 +69,7 @@ def test_bench_policies_smoke_writes_json(tmp_path):
 def test_bench_pipeline_smoke_writes_json(tmp_path):
     from benchmarks import bench_pipeline
 
-    path = os.path.join(str(tmp_path), "BENCH_pipeline.json")
+    path = _json_path(tmp_path, "BENCH_pipeline.json")
     rows = bench_pipeline.main(smoke=True, json_path=path)
     assert rows, "benchmark produced no rows"
     with open(path) as f:
@@ -77,7 +88,7 @@ def test_bench_pipeline_smoke_writes_json(tmp_path):
 def test_bench_buffer_smoke_writes_json(tmp_path):
     from benchmarks import bench_buffer
 
-    path = os.path.join(str(tmp_path), "BENCH_buffer.json")
+    path = _json_path(tmp_path, "BENCH_buffer.json")
     rows = bench_buffer.main(smoke=True, json_path=path)
     assert rows, "benchmark produced no rows"
     with open(path) as f:
@@ -107,3 +118,32 @@ def test_bench_buffer_smoke_writes_json(tmp_path):
     # stats_max_age=0 is the exact seed engine: the smoke task must train
     a0 = next(s for s in stale if s["stats_max_age"] == 0)
     assert a0["final_acc"] > 0.8, stale
+
+
+def test_bench_shard_smoke_writes_json(tmp_path):
+    from benchmarks import bench_shard
+
+    path = _json_path(tmp_path, "BENCH_shard.json")
+    payload = bench_shard.main(smoke=True, json_path=path)
+    with open(path) as f:
+        ondisk = json.load(f)
+    assert ondisk["schema"] == payload["schema"] == "bench_shard/v1"
+    shards = {r["data_shards"] for r in payload["scaling"]}
+    assert {1, 2} <= shards
+    for r in payload["scaling"]:
+        assert {"data_shards", "rounds_per_sec", "rounds_per_sec_e2e",
+                "speedup_vs_single", "speedup_vs_single_e2e",
+                "host_window_ms"} <= set(r)
+        assert r["rounds_per_sec"] > 0 and r["rounds_per_sec_e2e"] > 0
+    two = next(r for r in payload["scaling"] if r["data_shards"] == 2)
+    # CI gate (ISSUE 5): the 2-device forced-host run must keep >= 0.9x the
+    # single-device device-side rounds/sec. That acceptance number is
+    # recorded by the committed BENCH_shard.json (0.93x on the full run);
+    # the smoke gate carries the same noise slack as the pipeline/buffer
+    # gates (shared 2-core CI runners) — the lanes run interleaved in one
+    # process with paired-median ratios, so a sub-0.8 reading means the
+    # sharded plane itself regressed, not box weather
+    assert two["speedup_vs_single"] >= 0.8, two
+    ar = payload["allreduce"]
+    assert ar["int8_bytes"] < ar["fp32_bytes"]
+    assert 3.0 <= ar["ratio"] <= 4.5, ar

@@ -1,11 +1,29 @@
-"""Fault tolerance: straggler guard, failure-injected training with resume."""
+"""Fault tolerance: straggler guard, failure-injected training with resume,
+reshard input validation."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt.checkpoint import (CheckpointManager, find_latest,
                                    restore_checkpoint)
-from repro.ft.elastic import StragglerGuard, run_with_restarts
+from repro.ft.elastic import StragglerGuard, reshard, run_with_restarts
+
+
+def test_reshard_structure_mismatch_raises_readable_error():
+    """Regression: reshard used to tree-map device_put over two trees
+    without checking they mirror each other — a missing/renamed state field
+    surfaced as a confusing tree-map arity error. It must now name both
+    structures up front."""
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    tree = {"params": jnp.zeros((4,)), "opt": jnp.zeros((4,))}
+    with pytest.raises(ValueError, match="does not mirror"):
+        reshard(tree, {"params": sh})
+    with pytest.raises(ValueError, match="shardings structure"):
+        reshard(tree, {"params": sh, "opt": sh, "extra": sh})
+    # matching structures still work
+    out = reshard(tree, {"params": sh, "opt": sh})
+    np.testing.assert_array_equal(np.asarray(out["params"]), np.zeros((4,)))
 
 
 def test_straggler_guard_substitutes_on_failure():

@@ -1,0 +1,406 @@
+"""Sharded Titan: data-parallel engine.run over a device mesh (DESIGN.md §8).
+
+Single-device tests cover the mesh machinery at data=1 (shard_map over a
+1-way axis must reproduce mesh=None exactly) plus the host-side stream
+sharding. The ``multidevice`` tests need forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the CI ``mesh``
+job) and cover the real thing: lockstep parity of a 4-way data mesh with
+the single-device engine, int8-compressed gradient all-reduce, sharded
+policy state, and elastic resharding of a live EngineState.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TitanConfig
+from repro.core.engine import TitanEngine
+from repro.core.registry import SelectionPolicy
+from repro.data.stream import ShardedStream, mixed_rng
+from repro.dist.collectives import quantize_dequantize_int8
+from repro.hooks import har_hooks
+from repro.launch.mesh import make_engine_mesh
+from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+C, IN, B, W = 4, 12, 8, 16
+
+
+def _require(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+
+
+class IdStream:
+    """Per-shard gaussian stream with a globally unique, exactly
+    representable id channel in x[:, 0] (shard-major ids, so the
+    ShardedStream concatenation is the id order)."""
+
+    def __init__(self, seed, shard=0, num_shards=1, window=W):
+        self.seed, self.shard, self.num_shards = seed, shard, num_shards
+        self.window = window
+        base = np.random.RandomState(seed)
+        self.centers = base.randn(C, IN) * 2.0
+        self.round = 0
+
+    def next_window(self, n):
+        rs = mixed_rng(self.seed, self.shard, self.round)
+        ids = self.round * self.window + self.shard * n + np.arange(n)
+        self.round += 1
+        y = rs.randint(0, C, n)
+        x = (self.centers[y] + rs.randn(n, IN)).astype(np.float32)
+        x[:, 0] = ids / 4096.0
+        return {"x": x, "y": y.astype(np.int32),
+                "domain": y.astype(np.int32)}
+
+    def window_specs(self, n):
+        return {"x": jax.ShapeDtypeStruct((n, IN), np.float32),
+                "y": jax.ShapeDtypeStruct((n,), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32)}
+
+
+def ids_of(x):
+    return np.round(np.asarray(x)[:, 0] * 4096).astype(int)
+
+
+def _setup(seed=0):
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(24, 12), n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    return ecfg, params, har_hooks(ecfg)
+
+
+def _make_train(ecfg, axis=None, int8=False, lr=0.2):
+    """SGD step; on the mesh path it owns the data-axis gradient all-reduce
+    (optionally int8-compressed — the make_train_step(...) contract)."""
+
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        if int8:
+            g = jax.tree.map(quantize_dequantize_int8, g)
+        if axis:
+            g, loss = jax.lax.pmean((g, loss), axis)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+
+    return train
+
+
+def _run(engine, stream, rounds, params, seed=2, window=W):
+    w0 = stream.next_window(window)
+    st = engine.init(jax.random.PRNGKey(seed), params, w0)
+    sel = []
+    st, m = engine.run(st, stream, rounds, prefetch=0, metrics_every=1,
+                       window_size=window,
+                       on_round=lambda r, s, _m: sel.append(
+                           sorted(ids_of(s.next_batch["x"]))))
+    return st, m, sel
+
+
+def _parity_engines(mesh, *, rounds, hooks, ecfg, int8=False, **cfg_kw):
+    """hl policy in the no-admission-eviction regime: the buffer is big
+    enough to hold every streamed sample, so per-shard admission keeps
+    exactly the global kept set and the distributed top-k must reproduce
+    the single-device selection id-for-id."""
+    M = W * (rounds + 2)
+    tcfg = TitanConfig(policy="hl", stream_ratio=W // B, buffer_decay=1.0,
+                       evict_selected=True, **cfg_kw)
+    return TitanEngine.from_config(
+        tcfg, hooks=hooks,
+        train_step_fn=_make_train(ecfg, "data" if mesh is not None else None,
+                                  int8=int8),
+        params_of=lambda s: s, batch_size=B, n_classes=C, buffer_size=M,
+        mesh=mesh)
+
+
+# -- single-device coverage of the mesh machinery ---------------------------
+
+
+def test_mesh_data1_is_equivalent_to_mesh_none():
+    """The whole shard_map plumbing at data=1 — local proposals, candidate
+    pool, global rank, slot eviction — must reproduce the mesh=None engine's
+    selections and loss exactly (top-B of a B-candidate pool == top-B)."""
+    ecfg, params, hooks = _setup()
+    rounds = 5
+    mesh = make_engine_mesh(1, 1)
+    em = _parity_engines(mesh, rounds=rounds, hooks=hooks, ecfg=ecfg)
+    e1 = _parity_engines(None, rounds=rounds, hooks=hooks, ecfg=ecfg)
+    stm, mm, selm = _run(em, ShardedStream.make(
+        lambda shard, num_shards: IdStream(7, shard, num_shards), 1),
+        rounds, params)
+    st1, m1, sel1 = _run(e1, ShardedStream.make(
+        lambda shard, num_shards: IdStream(7, shard, num_shards), 1),
+        rounds, params)
+    assert selm == sel1
+    np.testing.assert_allclose(float(mm["loss"]), float(m1["loss"]),
+                               rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(st1.train), jax.tree.leaves(stm.train)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_mesh_rejects_unknown_data_axis():
+    ecfg, params, hooks = _setup()
+    with pytest.raises(ValueError, match="data axis"):
+        TitanEngine.from_config(
+            TitanConfig(), hooks=hooks, train_step_fn=_make_train(ecfg),
+            batch_size=B, n_classes=C, mesh=make_engine_mesh(1, 1),
+            data_axis="rows")
+
+
+def test_sharded_stream_concatenates_shard_major():
+    s = ShardedStream.make(
+        lambda shard, num_shards: IdStream(3, shard, num_shards), 4)
+    w = s.next_window(W)
+    per = W // 4
+    assert w["x"].shape == (W, IN)
+    ids = ids_of(w["x"])
+    # shard i owns rows [i*per, (i+1)*per) — the data_sharding row partition
+    np.testing.assert_array_equal(ids, np.arange(W))
+    specs = s.window_specs(W)
+    assert specs["x"].shape == (W, IN)
+    w2 = s.next_window(W)
+    assert ids_of(w2["x"])[0] == W  # round advanced on every shard
+    with pytest.raises(ValueError, match="divide"):
+        s.next_window(W + 1)
+    with pytest.raises(ValueError, match="divide"):
+        s.window_specs(W + 1)  # same contract as next_window
+
+
+def test_run_rejects_stream_sharded_unlike_the_mesh():
+    """A ShardedStream partitioned differently from the mesh would silently
+    hand shard i another stream shard's rows — fail fast instead."""
+    ecfg, params, hooks = _setup()
+    engine = _parity_engines(make_engine_mesh(1, 1), rounds=2, hooks=hooks,
+                             ecfg=ecfg)
+    stream = ShardedStream.make(
+        lambda shard, num_shards: IdStream(5, shard, num_shards), 2)
+    w0 = stream.next_window(W)
+    st = engine.init(jax.random.PRNGKey(0), params, w0)
+    with pytest.raises(ValueError, match="sharded 2-way"):
+        engine.run(st, stream, 1, window_size=W)
+
+
+def test_int8_quantize_dequantize_error_bound_on_real_grads():
+    """The documented compression error: symmetric per-tensor int8 with
+    scale = absmax/127 and round-to-nearest keeps every entry within half a
+    quantization step, |qdq(g) - g| <= absmax/254."""
+    ecfg, params, hooks = _setup(seed=5)
+    s = IdStream(11)
+    b = dict(s.next_window(B), weights=np.ones((B,), np.float32))
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    grads = jax.grad(lambda q: mlp_loss(ecfg, q, b))(params)
+    checked = 0
+    for g in jax.tree.leaves(grads):
+        q = np.asarray(quantize_dequantize_int8(g))
+        g = np.asarray(g)
+        absmax = np.abs(g).max()
+        if absmax == 0:
+            continue
+        assert np.abs(q - g).max() <= absmax / 254.0 + 1e-12
+        checked += 1
+    assert checked > 0
+
+
+# -- multidevice: the real mesh --------------------------------------------
+
+
+@pytest.mark.multidevice
+def test_mesh_divisibility_validated():
+    _require(2)
+    ecfg, params, hooks = _setup()
+    mesh = make_engine_mesh(2, 1)
+    with pytest.raises(ValueError, match="batch_size"):
+        TitanEngine.from_config(
+            TitanConfig(), hooks=hooks, train_step_fn=_make_train(ecfg),
+            batch_size=B + 1, n_classes=C, mesh=mesh)
+    with pytest.raises(ValueError, match="buffer_size"):
+        TitanEngine.from_config(
+            TitanConfig(), hooks=hooks, train_step_fn=_make_train(ecfg),
+            batch_size=B, n_classes=C, buffer_size=B * 2 + 1, mesh=mesh)
+
+
+@pytest.mark.multidevice
+def test_sharded_engine_lockstep_parity_with_single_device():
+    """Satellite: engine.run on a 4-way data mesh vs the single-device
+    engine, same stream seeds — identical selected ids every round, final
+    loss within fp tolerance, train states within reduction-order slop."""
+    _require(4)
+    ecfg, params, hooks = _setup()
+    rounds = 6
+
+    def mk_stream(S):
+        return ShardedStream.make(
+            lambda shard, num_shards: IdStream(7, shard, num_shards), S)
+
+    em = _parity_engines(make_engine_mesh(4, 1), rounds=rounds,
+                         hooks=hooks, ecfg=ecfg)
+    e1 = _parity_engines(None, rounds=rounds, hooks=hooks, ecfg=ecfg)
+    stm, mm, selm = _run(em, mk_stream(4), rounds, params)
+    st1, m1, sel1 = _run(e1, mk_stream(4), rounds, params)
+    assert selm == sel1, "mesh selection diverged from single device"
+    np.testing.assert_allclose(float(mm["loss"]), float(m1["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(st1.train), jax.tree.leaves(stm.train)):
+        # cross-device reduction order differs; fp32 tolerance
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.multidevice
+def test_sharded_engine_int8_allreduce_stays_within_bound():
+    """grad_compression="int8" on the mesh: each shard contributes its
+    quantize-dequantized grads to the pmean. Per entry and per step the
+    compression error is <= absmax/254 (unit bound asserted above), so the
+    trained loss must track the fp32 mesh run closely."""
+    _require(4)
+    ecfg, params, hooks = _setup()
+    rounds = 6
+
+    def mk_stream():
+        return ShardedStream.make(
+            lambda shard, num_shards: IdStream(7, shard, num_shards), 4)
+
+    e_fp = _parity_engines(make_engine_mesh(4, 1), rounds=rounds,
+                           hooks=hooks, ecfg=ecfg)
+    e_q = _parity_engines(make_engine_mesh(4, 1), rounds=rounds,
+                          hooks=hooks, ecfg=ecfg, int8=True)
+    _, m_fp, _ = _run(e_fp, mk_stream(), rounds, params)
+    _, m_q, _ = _run(e_q, mk_stream(), rounds, params)
+    assert np.isfinite(float(m_q["loss"]))
+    np.testing.assert_allclose(float(m_q["loss"]), float(m_fp["loss"]),
+                               rtol=0.05, atol=0.02)
+
+
+@pytest.mark.multidevice
+def test_titan_cis_runs_on_mesh_legacy_and_incremental():
+    """titan-cis end-to-end on a (4, 2) mesh through engine.run (prefetch +
+    donation + sharded staging), on both buffer paths; the incremental
+    scatter-admission kernel and stat caches run per-shard unchanged."""
+    _require(8)
+    ecfg, params, hooks = _setup(seed=3)
+    mesh = make_engine_mesh(4, 2)
+    for extra in ({}, {"stats_max_age": 3}):
+        tcfg = TitanConfig(stream_ratio=4, buffer_ratio=8, **extra)
+        engine = TitanEngine.from_config(
+            tcfg, hooks=hooks, train_step_fn=_make_train(ecfg, "data"),
+            params_of=lambda s: s, batch_size=B, n_classes=C,
+            buffer_size=64, mesh=mesh)
+        stream = ShardedStream.make(
+            lambda shard, num_shards: IdStream(9, shard, num_shards,
+                                               window=engine.window_size), 4)
+        w0 = {k: jnp.asarray(v)
+              for k, v in stream.next_window(engine.window_size).items()}
+        st = engine.init(jax.random.PRNGKey(1), params, w0)
+        st, m = engine.run(st, stream, 4, prefetch=2, metrics_every=2)
+        assert np.isfinite(float(m["loss"]))
+        assert st.next_batch["weights"].shape == (B,)
+        assert len(st.buffer["_score"].sharding.device_set) == 8
+        if extra:
+            assert int(m["titan_buffer_admitted"]) <= 64
+            assert int(m["titan_stats_backlog"]) >= 0
+
+
+@pytest.mark.multidevice
+def test_shard_state_policy_keeps_per_shard_estimators():
+    """shard_state=True: one independent policy state per data shard, local
+    observation and local B/S selection (the federated mode)."""
+    _require(4)
+
+    class LocalMean(SelectionPolicy):
+        """Tracks the running mean of locally observed domains; selects the
+        lowest-domain rows (deterministic)."""
+        name = "local-mean"
+        shard_state = True
+        needs_stats = False
+        stat_keys = ()
+
+        def init_state(self, specs):
+            self.specs = specs
+            return {"sum": jnp.zeros(()), "n": jnp.zeros(())}
+
+        def observe(self, state, window, obs):
+            return {"sum": state["sum"] + jnp.sum(
+                        obs["domain"].astype(jnp.float32)),
+                    "n": state["n"] + obs["domain"].shape[0]}
+
+        def select(self, rng, state, stats, valid, batch):
+            from repro.core.baselines import _topk
+            idx, w = _topk(-stats["domain"].astype(jnp.float32), valid,
+                           batch)
+            return idx, w, state
+
+        def metrics(self, state):
+            return {"mean_domain": state["sum"] / jnp.maximum(state["n"], 1)}
+
+    ecfg, params, hooks = _setup(seed=4)
+    S = 4
+    mesh = make_engine_mesh(S, 1)
+    engine = TitanEngine.from_config(
+        TitanConfig(stream_ratio=2), hooks=hooks,
+        train_step_fn=_make_train(ecfg, "data"), params_of=lambda s: s,
+        batch_size=B, n_classes=C, buffer_size=32, mesh=mesh,
+        policy=LocalMean())
+    stream = ShardedStream.make(
+        lambda shard, num_shards: IdStream(13, shard, num_shards), S)
+    w0 = stream.next_window(W)
+    st = engine.init(jax.random.PRNGKey(5), params, w0)
+    for _ in range(3):
+        w = stream.next_window(W)
+        st, m = engine.step(st, w)
+    # one state per shard, stacked on the leading dim
+    assert st.policy["sum"].shape == (S,)
+    sums = np.asarray(st.policy["sum"])
+    assert len(np.unique(sums)) > 1, "shards observed identical streams?"
+    # bootstrap observed the global window; afterwards W/S rows per round
+    np.testing.assert_allclose(np.asarray(st.policy["n"]),
+                               np.full((S,), W + 3 * (W // S)))
+    assert np.isfinite(float(m["mean_domain"]))
+    assert st.next_batch["weights"].shape == (B,)
+    # per-shard states cannot be re-meshed onto a different shard count:
+    # P("data") would re-partition 4 stacked states into 2 blocks and the
+    # shard step only reads block[0], silently dropping half the estimators
+    if jax.device_count() >= 2:
+        engine2 = TitanEngine.from_config(
+            TitanConfig(stream_ratio=2), hooks=hooks,
+            train_step_fn=_make_train(ecfg, "data"), params_of=lambda s: s,
+            batch_size=B, n_classes=C, buffer_size=32,
+            mesh=make_engine_mesh(2, 1), policy=LocalMean())
+        from repro.ft.elastic import reshard_engine_state
+        with pytest.raises(ValueError, match="re-meshed"):
+            reshard_engine_state(st, engine2)
+
+
+@pytest.mark.multidevice
+def test_reshard_engine_state_4_to_2_shards_and_resume():
+    """Satellite: ft.elastic.reshard_engine_state re-meshes a live
+    EngineState 4→2 data shards — global arrays bit-identical, new
+    ownership layout, and the 2-shard engine resumes stepping on it."""
+    _require(4)
+    from repro.ft.elastic import reshard, reshard_engine_state
+
+    ecfg, params, hooks = _setup(seed=6)
+    rounds = 4
+
+    def mk_stream(S):
+        return ShardedStream.make(
+            lambda shard, num_shards: IdStream(17, shard, num_shards), S)
+
+    e4 = _parity_engines(make_engine_mesh(4, 1), rounds=rounds,
+                         hooks=hooks, ecfg=ecfg)
+    stream = mk_stream(4)
+    st4 = e4.init(jax.random.PRNGKey(8), params, stream.next_window(W))
+    for _ in range(2):
+        w = stream.next_window(W)
+        st4, _ = e4.step(st4, w)
+    snap = jax.tree.map(np.asarray, st4)
+
+    e2 = _parity_engines(make_engine_mesh(2, 1), rounds=rounds,
+                         hooks=hooks, ecfg=ecfg)
+    st2 = reshard_engine_state(st4, e2)
+    for a, b in zip(jax.tree.leaves(snap), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(st2.buffer["_score"].sharding.device_set) == 2
+    st2, m = e2.step(st2, stream.next_window(W))
+    assert np.isfinite(float(m["loss"]))
+
+    # the structure guard: shardings for a different pytree fail loudly
+    shardings = e2.state_shardings(st4)
+    with pytest.raises(ValueError, match="does not mirror"):
+        reshard({"only": st4.buffer["_score"]}, shardings)
