@@ -1,0 +1,212 @@
+"""Fault-tolerance overhead + recovery benchmark (DESIGN.md §9).
+
+Three lanes of the full Titan round (stage-1 filter, admission, stage-2
+C-IS, train step) on the HAR-style MLP workload, strictly interleaved per
+rep so paired ratios cancel shared-box drift (the bench_pipeline /
+bench_shard protocol):
+
+- ``baseline``   — the seed engine: guard off, no checkpointing.
+- ``guard``      — ``nonfinite_guard=True``: per-round loss/grad-norm
+  finiteness check, donation-safe rollback select, window sanitisation and
+  quarantine bookkeeping. The gated lane: the guard must cost <= 5% of
+  baseline rounds/sec on the full run (the acceptance number recorded in
+  the committed ``BENCH_faults.json``; the smoke gate in
+  tests/test_bench_smoke.py carries 0.85x noise slack for loaded CI boxes).
+- ``guard_ckpt`` — guard plus an async checkpoint every
+  ``ckpt_every`` rounds through ``engine.run(checkpoint_dir=...)``.
+  Recorded for visibility (the async writer overlaps the round), not gated.
+
+Also records recovery latency (synchronous full-EngineState save and
+restore round-trips, in ms) and a seeded chaos run — ``engine.run`` over a
+``FaultyStream`` injecting nan / transient / short faults — reporting the
+guard-trip and retry counters plus the chaos wall-clock overhead.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults            # full
+    PYTHONPATH=src python -m benchmarks.bench_faults --smoke    # quick
+
+Writes ``BENCH_faults.json`` (schema ``bench_faults/v1``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import statistics
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+IN_DIM, HIDDEN, C = 64, (256, 128), 6
+B, SR, BR = 16, 8, 16            # window 128, buffer 256
+
+
+def _make_lane(guard: bool, seed: int = 1):
+    import jax
+
+    from repro.configs.base import TitanConfig
+    from repro.core.engine import TitanEngine
+    from repro.data.stream import GaussianMixtureStream
+    from repro.hooks import har_hooks
+    from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+    ecfg = EdgeMLPConfig(in_dim=IN_DIM, hidden=HIDDEN, n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(0))
+
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        return (jax.tree.map(lambda a, gg: a - 0.1 * gg, p, g),
+                {"loss": loss})
+
+    tcfg = TitanConfig(stream_ratio=SR, buffer_ratio=BR,
+                       nonfinite_guard=guard)
+    engine = TitanEngine.from_config(
+        tcfg, hooks=har_hooks(ecfg), train_step_fn=train,
+        params_of=lambda s: s, batch_size=B, n_classes=C)
+    stream = GaussianMixtureStream(in_dim=IN_DIM, n_classes=C, seed=seed)
+    state = engine.init(jax.random.PRNGKey(1), params,
+                        stream.next_window(engine.window_size))
+    state, _ = engine.run(state, stream, 3, prefetch=2,
+                          metrics_every=0)       # warmup + compile
+    return {"engine": engine, "stream": stream, "state": state, "rps": []}
+
+
+def _overhead(rounds: int, reps: int, ckpt_dir: str) -> List[Dict]:
+    import jax
+
+    lanes = {"baseline": _make_lane(False), "guard": _make_lane(True),
+             "guard_ckpt": _make_lane(True)}
+    every = max(rounds // 2, 1)
+    for _ in range(reps):
+        for name, lane in lanes.items():       # interleaved: paired weather
+            kw = {}
+            if name == "guard_ckpt":
+                shutil.rmtree(ckpt_dir, ignore_errors=True)
+                kw = dict(checkpoint_dir=ckpt_dir, checkpoint_every=every,
+                          auto_resume=False)
+            t0 = time.perf_counter()
+            lane["state"], m = lane["engine"].run(
+                lane["state"], lane["stream"], rounds, prefetch=2,
+                metrics_every=0, **kw)
+            jax.block_until_ready(m["loss"])
+            lane["rps"].append(rounds / (time.perf_counter() - t0))
+
+    def paired(name):
+        r = sorted(a / b for a, b in
+                   zip(lanes[name]["rps"], lanes["baseline"]["rps"]))
+        return r[len(r) // 2]
+
+    return [{"lane": name,
+             "rounds_per_sec": statistics.median(lane["rps"]),
+             "rel_to_baseline": paired(name)}
+            for name, lane in lanes.items()]
+
+
+def _recovery(ckpt_dir: str, reps: int) -> Dict:
+    """Synchronous save + restore round-trips of the full EngineState."""
+    import jax
+
+    from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+    lane = _make_lane(True)
+    state = lane["state"]
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    saves, restores = [], []
+    for i in range(reps):
+        t0 = time.perf_counter()
+        path = save_checkpoint(ckpt_dir, i + 1, state)
+        saves.append((time.perf_counter() - t0) * 1e3)
+        target = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        t0 = time.perf_counter()
+        restored, _ = restore_checkpoint(path, target)
+        jax.block_until_ready(restored.t)
+        restores.append((time.perf_counter() - t0) * 1e3)
+    leaves = jax.tree.leaves(state)
+    return {"state_bytes": int(sum(x.size * x.dtype.itemsize
+                                   for x in leaves)),
+            "state_leaves": len(leaves),
+            "ckpt_save_ms": statistics.median(saves),
+            "ckpt_restore_ms": statistics.median(restores)}
+
+
+def _chaos(rounds: int) -> Dict:
+    """Seeded chaos: engine.run (guard on) straight through an injected
+    nan/transient/short fault schedule. Must complete with a finite loss;
+    records the detector/retry counters and the wall-clock vs clean run."""
+    import numpy as np
+
+    from repro.ft.faults import FaultyStream
+
+    clean = _make_lane(True, seed=3)
+    t0 = time.perf_counter()
+    clean["state"], m = clean["engine"].run(
+        clean["state"], clean["stream"], rounds, prefetch=2, metrics_every=1)
+    clean_s = time.perf_counter() - t0
+
+    lane = _make_lane(True, seed=3)
+    schedule = {i: kind for i, kind in
+                zip(range(2, rounds + 2, max(rounds // 4, 1)),
+                    ("nan", "transient", "short", "nan"))}
+    faulty = FaultyStream(lane["stream"], seed=11, schedule=schedule)
+    trips = quarantined = 0
+
+    def tally(r, h):
+        nonlocal trips, quarantined
+        trips += int(h.get("titan_guard_trips", 0))
+        quarantined += int(h.get("titan_quarantined", 0))
+
+    t0 = time.perf_counter()
+    lane["state"], m = lane["engine"].run(
+        lane["state"], faulty, rounds, prefetch=2, metrics_every=1,
+        on_metrics=tally)
+    chaos_s = time.perf_counter() - t0
+    loss = float(np.asarray(m["loss"]))
+    return {"rounds": rounds, "schedule": {str(k): v for k, v
+                                           in schedule.items()},
+            "final_loss": loss, "loss_finite": bool(np.isfinite(loss)),
+            "guard_trips": trips, "quarantined": quarantined,
+            "faults_raised": faulty.raised, "faults_poisoned":
+            faulty.poisoned, "faults_shorted": faulty.shorted,
+            "chaos_overhead_x": chaos_s / clean_s}
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_faults.json") -> Dict:
+    rounds = 10 if smoke else 30
+    reps = 3 if smoke else 7
+    tmp = tempfile.mkdtemp(prefix="bench_faults_")
+    try:
+        overhead = _overhead(rounds, reps, os.path.join(tmp, "ck"))
+        recovery = _recovery(os.path.join(tmp, "rec"), max(reps, 3))
+        chaos = _chaos(rounds)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    payload = {"schema": "bench_faults/v1", "smoke": smoke,
+               "workload": {"batch": B, "window": B * SR, "buffer": B * BR,
+                            "in_dim": IN_DIM, "hidden": list(HIDDEN),
+                            "classes": C, "policy": "titan-cis",
+                            "rounds": rounds, "reps": reps},
+               "overhead": overhead, "recovery": recovery, "chaos": chaos}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"{'lane':>12} {'rounds/s':>10} {'vs baseline':>12}")
+    for r in overhead:
+        print(f"{r['lane']:>12} {r['rounds_per_sec']:>10.2f} "
+              f"{r['rel_to_baseline']:>11.3f}x")
+    print(f"recovery: save {recovery['ckpt_save_ms']:.1f} ms, "
+          f"restore {recovery['ckpt_restore_ms']:.1f} ms "
+          f"({recovery['state_bytes']:,} B, "
+          f"{recovery['state_leaves']} leaves)")
+    print(f"chaos: {chaos['guard_trips']} trips, "
+          f"{chaos['quarantined']} quarantined, "
+          f"{chaos['faults_raised']} raised/"
+          f"{chaos['faults_poisoned']} poisoned/"
+          f"{chaos['faults_shorted']} shorted, "
+          f"loss {chaos['final_loss']:.3f}, "
+          f"{chaos['chaos_overhead_x']:.2f}x wall-clock")
+    print(f"wrote {json_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -9,9 +9,9 @@ import time
 
 def main() -> None:
     fast = "--full" not in sys.argv
-    from benchmarks import (bench_buffer, bench_fig2, bench_fig5a,
-                            bench_fig5b, bench_fig5c, bench_fig6, bench_fig8,
-                            bench_fig9, bench_fig10, bench_fig11,
+    from benchmarks import (bench_buffer, bench_faults, bench_fig2,
+                            bench_fig5a, bench_fig5b, bench_fig5c, bench_fig6,
+                            bench_fig8, bench_fig9, bench_fig10, bench_fig11,
                             bench_kernels, bench_policies, bench_shard,
                             bench_table1)
     csv = []
@@ -100,6 +100,14 @@ def main() -> None:
                 f"{two['speedup_vs_single']:.2f}"))
     csv.append(("shard_int8_allreduce_ratio", dt,
                 f"{out['allreduce']['ratio']:.2f}"))
+
+    print("=" * 70)
+    name, dt, out = run("faults", bench_faults.main)  # writes BENCH_faults.json
+    guard = next(r for r in out["overhead"] if r["lane"] == "guard")
+    csv.append(("faults_guard_rel_rps", dt,
+                f"{guard['rel_to_baseline']:.3f}"))
+    csv.append(("faults_ckpt_restore_ms", dt,
+                f"{out['recovery']['ckpt_restore_ms']:.1f}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

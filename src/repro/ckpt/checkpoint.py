@@ -123,38 +123,70 @@ def restore_checkpoint(path: str, target, *, shardings=None):
     return tree, manifest
 
 
+class CheckpointError(RuntimeError):
+    """A background checkpoint write failed. Raised (with the original
+    exception chained) on the wait()/save()/latest() call *after* the
+    failure — an async save error must surface to the train loop, never
+    die silently on a daemon thread."""
+
+
 class CheckpointManager:
-    """keep-last-k + optional async save (the train loop never blocks on IO)."""
+    """keep-last-k + optional async save (the train loop never blocks on IO).
+
+    Failure semantics: the background writer records any exception and the
+    next ``wait()``/``save()``/``latest()`` re-raises it as
+    :class:`CheckpointError` (then clears it — the manager stays usable,
+    e.g. to retry onto a fixed directory). ``_gc`` tolerates concurrent
+    deletion: two restarted supervisors pruning the same directory, or an
+    operator rm-ing old steps mid-run, must not kill the writer."""
 
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                f"background checkpoint save to {self.dir!r} failed: "
+                f"{err!r}") from err
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
 
     def save(self, step: int, tree, *, extra=None):
         host = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
-        self.wait()
+        self.wait()  # re-raises a recorded background failure
 
         def _do():
-            save_checkpoint(self.dir, step, host, extra=extra)
-            self._gc()
+            try:
+                save_checkpoint(self.dir, step, host, extra=extra)
+                self._gc()
+            except BaseException as e:  # surface on the next wait()/save()
+                self._error = e
 
         if self.async_save:
             self._thread = threading.Thread(target=_do, daemon=True)
             self._thread.start()
         else:
             _do()
+            self._raise_pending()
 
     def _gc(self):
-        cands = sorted(d for d in os.listdir(self.dir)
-                       if d.startswith("step_") and not d.endswith(".tmp"))
+        try:
+            cands = sorted(d for d in os.listdir(self.dir)
+                           if d.startswith("step_") and not d.endswith(".tmp"))
+        except OSError:
+            return  # directory vanished under us: nothing left to prune
         for d in cands[:-self.keep] if self.keep else []:
+            # ignore_errors also covers an entry deleted between listdir
+            # and rmtree by a concurrent gc/operator
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     def latest(self):

@@ -274,6 +274,16 @@ class TitanConfig:
     admit_impl: str = "auto"      # prefix-compaction kernel impl for the
                                   # scatter-admission plan:
                                   # auto|pallas|interpret|ref
+    # --- fault tolerance (DESIGN.md §9) ---
+    nonfinite_guard: bool = False  # post-step NaN/inf guard: roll the train
+                                  # update back to last-known-good on a
+                                  # non-finite loss/grad-norm, NEG-evict the
+                                  # selected slots that produced it, and
+                                  # quarantine non-finite stream rows before
+                                  # they reach the policy estimators. Off by
+                                  # default: the guarded step is value-
+                                  # identical on clean data but adds a
+                                  # sel_mask state field + elementwise checks
 
 
 @dataclass(frozen=True)

@@ -61,10 +61,37 @@ class EngineState:
     next_batch: Dict    # batch selected last round (trained on this round)
     rng: jax.Array
     t: jax.Array        # round counter (recency admission for bufferless policies)
+    sel_mask: Any = None  # nonfinite_guard only: bool[buffer_size] marking
+                        # the slots whose rows became next_batch — the
+                        # quarantine set if this round's update trips the
+                        # guard (None when the guard is off: zero-leaf
+                        # subtree, bit-identical state structure)
 
 
 def _default_params_of(s):
     return getattr(s, "params", s)
+
+
+def _sanitize_window(window: Dict):
+    """Row-level non-finite quarantine for one stream window (DESIGN.md §9).
+
+    A NaN/inf row from a corrupt shard must never reach the policy
+    estimators, the buffer, or the next batch. Every inexact leaf is
+    scrubbed (bad entries -> 0, keeping shapes/dtypes) and any row with a
+    non-finite entry in *any* leaf is flagged so the caller can force its
+    admission score to ``NEG``. Returns ``(clean_window, row_bad)``.
+    """
+    rows = next(iter(window.values())).shape[0]
+    row_bad = jnp.zeros((rows,), bool)
+    clean = {}
+    for k, v in window.items():
+        if jnp.issubdtype(v.dtype, jnp.inexact):
+            finite = jnp.isfinite(v)
+            row_bad = row_bad | (~finite).reshape(v.shape[0], -1).any(axis=1)
+            clean[k] = jnp.where(finite, v, jnp.zeros_like(v))
+        else:
+            clean[k] = v
+    return clean, row_bad
 
 
 class TitanEngine:
@@ -99,6 +126,11 @@ class TitanEngine:
         # the stalest survivors each round. stats_max_age == 0 is the seed
         # path: full-rewrite merge + recompute-everything (bit-identical).
         self.incremental = self.cfg.stats_max_age > 0
+        # Non-finite guard (DESIGN.md §9): post-step loss/grad-norm check
+        # with in-program rollback + slot quarantine. Off by default —
+        # guard-off states carry sel_mask=None so the pytree (and every
+        # jitted program) is bit-identical to the unguarded engine.
+        self.guard = bool(self.cfg.nonfinite_guard)
         self._stat_keys = (tuple(self.policy.stat_keys)
                            if self.policy.needs_stats else ())
         if self.incremental:
@@ -203,8 +235,11 @@ class TitanEngine:
         stacked on a leading shard dim."""
         data = P(self.data_axis)
         pol = data if self.policy.shard_state else P()
+        # sel_mask partitions with the buffer slots it indexes; with the
+        # guard off it is None (an empty subtree) and the spec leaf simply
+        # has nothing to bind to
         return EngineState(train=P(), policy=pol, buffer=data,
-                           next_batch=data, rng=P(), t=P())
+                           next_batch=data, rng=P(), t=P(), sel_mask=data)
 
     def state_shardings(self, state: EngineState, mesh=None) -> EngineState:
         """NamedSharding tree for ``state`` under ``mesh`` (default: the
@@ -256,6 +291,9 @@ class TitanEngine:
                 lambda a: jnp.array(a) if isinstance(a, jax.Array) else a,
                 train_state)
         params = self._params_of(train_state)
+        row_bad = None
+        if self.guard:
+            window, row_bad = _sanitize_window(window)
         t0 = jnp.zeros((), jnp.int32)
         obs = {"domain": window["domain"], "round": t0, "features": None}
         feat_dim = 0
@@ -267,6 +305,8 @@ class TitanEngine:
         pstate = self.policy.init_state(specs)
         pstate = self.policy.observe(pstate, window, obs)
         scores = self.policy.admission_scores(pstate, window, obs)
+        if row_bad is not None:
+            scores = jnp.where(row_bad, NEG, scores)
         wspecs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
                   for k, v in window.items()}
         buf = init_buffer(wspecs, self.buffer_size)
@@ -289,8 +329,13 @@ class TitanEngine:
             buf = buffer_merge(buf, window, scores)
         nb = {k: v[:self.batch_size] for k, v in window.items()}
         nb["weights"] = jnp.ones((self.batch_size,), jnp.float32)
+        # the bootstrap batch is taken from the window, not from buffer
+        # slots, so the guard starts with an empty quarantine set
+        sel_mask = (jnp.zeros((self.buffer_size,), bool)
+                    if self.guard else None)
         state = EngineState(train=train_state, policy=pstate, buffer=buf,
-                            next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1)
+                            next_batch=nb, rng=jnp.asarray(rng), t=t0 + 1,
+                            sel_mask=sel_mask)
         if self.mesh is not None:
             # bootstrap is computed globally (one-time cost), then committed
             # to the mesh layout: buffer slots [i*M/S, (i+1)*M/S) become
@@ -403,6 +448,20 @@ class TitanEngine:
             valid = buffer_valid(buffer)
         return buffer, examples, stats, valid, n_admitted, n_backlog
 
+    @staticmethod
+    def _nonfinite_trip(metrics: Dict):
+        """Guard trip condition (DESIGN.md §9): a NaN/inf loss or grad norm
+        means the update just written into ``new_train`` is poisoned. The
+        caller rolls back with a ``where`` *inside* the jitted program, so
+        rollback composes with donation — the donated input buffers are
+        rewritten with their own values instead of the bad update, and no
+        host round-trip sits on the step path."""
+        ok = jnp.asarray(True)
+        for k in ("loss", "grad_norm"):
+            if k in metrics:
+                ok = ok & jnp.all(jnp.isfinite(metrics[k]))
+        return ~ok
+
     def _step(self, state: EngineState, window: Dict):
         cfg = self.cfg
         params = self._params_of(state.train)   # w_t: stale for selection
@@ -410,14 +469,33 @@ class TitanEngine:
         # (A) model update with the batch selected last round
         new_train, metrics = self._train_step_fn(state.train, state.next_batch)
 
+        buffer_in = state.buffer
+        trip = q_slots = n_bad = row_bad = None
+        if self.guard:
+            trip = self._nonfinite_trip(metrics)
+            new_train = jax.tree.map(
+                lambda o, n: jnp.where(trip, o, n), state.train, new_train)
+            # quarantine: state.buffer still has last round's slot layout
+            # (the batch that just exploded came from sel_mask's slots), so
+            # NEG them *before* decay/admission can repack the buffer
+            q_slots = (jnp.sum((state.sel_mask & buffer_valid(buffer_in))
+                               .astype(jnp.int32)) * trip.astype(jnp.int32))
+            buffer_in = dict(buffer_in)
+            buffer_in["_score"] = jnp.where(trip & state.sel_mask, NEG,
+                                            buffer_in["_score"])
+            window, row_bad = _sanitize_window(window)
+            n_bad = jnp.sum(row_bad.astype(jnp.int32))
+
         # (B) stage 1: observe the stream window, score it for admission
         obs = {"domain": window["domain"], "round": state.t, "features": None}
         if self.policy.needs_window_features:
             obs["features"] = self.hooks.features_fn(params, window)
         pstate = self.policy.observe(state.policy, window, obs)
         scores = self.policy.admission_scores(pstate, window, obs)
+        if row_bad is not None:
+            scores = jnp.where(row_bad, NEG, scores)
         buffer, examples, stats, valid, n_admitted, n_backlog = \
-            self._maintain(params, state.buffer, window, scores,
+            self._maintain(params, buffer_in, window, scores,
                            self.refresh_chunk)
         rng, key = jax.random.split(state.rng)
         idx, w, pstate = self.policy.select(key, pstate, stats, valid,
@@ -426,6 +504,11 @@ class TitanEngine:
             w = jnp.minimum(w, cfg.weight_clip)
         nb = {k: jnp.take(v, idx, axis=0) for k, v in examples.items()}
         nb["weights"] = w.astype(jnp.float32)
+        sel_mask = state.sel_mask
+        if self.guard:
+            # next round's quarantine set: the slots whose rows become nb
+            sel_mask = (jnp.zeros((self.buffer_size,), bool)
+                        .at[idx].set(True))
         if cfg.evict_selected:
             # selected data is consumed: training on it again next round
             # would bias the stream estimate (and overfit a static buffer)
@@ -435,6 +518,13 @@ class TitanEngine:
         metrics = dict(metrics)
         metrics.update(self.policy.metrics(pstate))
         metrics["titan_mean_weight"] = jnp.mean(w)
+        if self.guard:
+            # trips count loss/grad blowups OR quarantined stream rows —
+            # the sanitizer usually stops a poisoned row before it can NaN
+            # the loss, and both layers must be observable
+            metrics["titan_guard_trips"] = (trip | (n_bad > 0)).astype(
+                jnp.int32)
+            metrics["titan_quarantined"] = q_slots + n_bad
         if n_admitted is not None:
             metrics["titan_buffer_admitted"] = n_admitted
             if n_backlog is not None:
@@ -446,7 +536,8 @@ class TitanEngine:
                     jnp.where(valid, buffer["_param_age"], 0))
                 metrics["titan_stats_backlog"] = n_backlog
         return EngineState(train=new_train, policy=pstate, buffer=buffer,
-                           next_batch=nb, rng=rng, t=state.t + 1), metrics
+                           next_batch=nb, rng=rng, t=state.t + 1,
+                           sel_mask=sel_mask), metrics
 
     def _shard_step(self, state: EngineState, window: Dict):
         """Per-shard body of the mesh step (DESIGN.md §8), running under
@@ -472,6 +563,23 @@ class TitanEngine:
         # (A) model update on this shard's rows of last round's batch
         new_train, metrics = self._train_step_fn(state.train, state.next_batch)
 
+        buffer_in = state.buffer
+        trip = q_slots = n_bad = row_bad = None
+        if self.guard:
+            # one shard's non-finite gradients poison the all-reduced
+            # update on EVERY shard: the trip decision must be global
+            trip = jax.lax.pmax(
+                self._nonfinite_trip(metrics).astype(jnp.int32), ax) > 0
+            new_train = jax.tree.map(
+                lambda o, n: jnp.where(trip, o, n), state.train, new_train)
+            q_slots = (jnp.sum((state.sel_mask & buffer_valid(buffer_in))
+                               .astype(jnp.int32)) * trip.astype(jnp.int32))
+            buffer_in = dict(buffer_in)
+            buffer_in["_score"] = jnp.where(trip & state.sel_mask, NEG,
+                                            buffer_in["_score"])
+            window, row_bad = _sanitize_window(window)
+            n_bad = jnp.sum(row_bad.astype(jnp.int32))
+
         # (B) stage 1. Replicated policy state observes the GLOBAL window
         # view (obs features/domains all-gathered, shard-major order) so
         # the estimators evolve exactly as on a single device; the `window`
@@ -496,12 +604,15 @@ class TitanEngine:
         # slice and fills its own slots (divergence from global admission
         # is bounded and documented in DESIGN.md §8)
         scores = self.policy.admission_scores(pstate, window, obs_l)
+        if row_bad is not None:
+            scores = jnp.where(row_bad, NEG, scores)
         buffer, examples, stats, valid, n_admitted, n_backlog = \
-            self._maintain(params, state.buffer, window, scores,
+            self._maintain(params, buffer_in, window, scores,
                            self._local_chunk)
 
         rng, k1, k2 = jax.random.split(state.rng, 3)
         k1 = jax.random.fold_in(k1, my)     # shard-local proposal draw
+        sel_mask = state.sel_mask
         if shard_state:
             # local selection: each shard independently picks its B/S rows
             # from its own buffer (the federated mode — no cross-client
@@ -513,6 +624,9 @@ class TitanEngine:
             nb_local = {k: jnp.take(v, idx, axis=0)
                         for k, v in examples.items()}
             nb_local["weights"] = w.astype(jnp.float32)
+            if self.guard:
+                sel_mask = (jnp.zeros(buffer["_score"].shape, bool)
+                            .at[idx].set(True))
             if cfg.evict_selected:
                 buffer = dict(buffer)
                 buffer["_score"] = buffer["_score"].at[idx].set(NEG)
@@ -548,7 +662,7 @@ class TitanEngine:
                         for k, v in pool_ex.items()}
             nb_local["weights"] = jax.lax.dynamic_slice_in_dim(
                 w, my * bl, bl).astype(jnp.float32)
-            if cfg.evict_selected:
+            if cfg.evict_selected or self.guard:
                 # pool position p == shard p//k_prop, local pick idx1[p%k_prop]:
                 # slice this shard's span of the global winner mask and
                 # scatter-max it onto the proposing slots (idempotent for
@@ -557,8 +671,14 @@ class TitanEngine:
                 mine = jax.lax.dynamic_slice_in_dim(won, my * k_prop, k_prop)
                 ev = (jnp.zeros(buffer["_score"].shape, jnp.int32)
                       .at[idx1].max(mine))
-                buffer = dict(buffer)
-                buffer["_score"] = jnp.where(ev > 0, NEG, buffer["_score"])
+                if self.guard:
+                    # this shard's slots that fed the winning batch — the
+                    # union over shards covers every contributing slot
+                    sel_mask = ev > 0
+                if cfg.evict_selected:
+                    buffer = dict(buffer)
+                    buffer["_score"] = jnp.where(ev > 0, NEG,
+                                                 buffer["_score"])
             mean_w = jnp.mean(w)
 
         metrics = dict(metrics)
@@ -578,11 +698,15 @@ class TitanEngine:
             else:
                 metrics["titan_buffer_admitted"] = jax.lax.psum(n_admitted,
                                                                 ax)
+        if self.guard:
+            q, b = jax.lax.psum((q_slots, n_bad), ax)
+            metrics["titan_guard_trips"] = (trip | (b > 0)).astype(jnp.int32)
+            metrics["titan_quarantined"] = q + b
         pstate_out = (jax.tree.map(lambda x: x[None], pstate) if shard_state
                       else pstate)
         return EngineState(train=new_train, policy=pstate_out, buffer=buffer,
                            next_batch=nb_local, rng=rng,
-                           t=state.t + 1), metrics
+                           t=state.t + 1, sel_mask=sel_mask), metrics
 
     # -- driver -------------------------------------------------------------
 
@@ -591,7 +715,9 @@ class TitanEngine:
             on_metrics: Optional[Callable[[int, Dict], None]] = None,
             on_round: Optional[Callable[[int, EngineState, Dict], None]] = None,
             window_size: Optional[int] = None, start_round: int = 0,
-            device=None) -> tuple:
+            device=None, checkpoint_dir: Optional[str] = None,
+            checkpoint_every: int = 0, auto_resume: bool = True,
+            checkpoint_keep: int = 3) -> tuple:
         """Drive ``rounds`` engine steps over ``stream`` — the one loop every
         caller shares.
 
@@ -619,6 +745,22 @@ class TitanEngine:
 
         Returns ``(state, last_metrics)``; ``last_metrics`` is the final
         round's host metrics (None when ``rounds == 0``).
+
+        Crash safety (DESIGN.md §9): with ``checkpoint_dir`` set the loop
+        periodically saves the full EngineState *plus* the stream cursor and
+        round counter through a keep-last-``checkpoint_keep``
+        :class:`~repro.ckpt.checkpoint.CheckpointManager` — every
+        ``checkpoint_every`` rounds (0 = only a final checkpoint) and once
+        after the last round. With ``auto_resume`` (the default) a restarted
+        call finds the newest valid checkpoint, restores the state under the
+        engine's current shardings (elastic re-mesh is free here) and seeks
+        the stream, then runs only the remaining rounds — the resumed run is
+        bit-identical to one that never crashed. The save path snapshots to
+        host before the next step can donate the state, so checkpointing
+        needs no ``donate=False``; the snapshot blocks on the in-flight step,
+        which is why ``checkpoint_every`` should stay ≫ 1 on the hot path.
+        Resume requires the same engine config (guard flag, policy, sizes) —
+        the restore structure-checks state against the checkpoint manifest.
         """
         n = int(window_size) if window_size else self.window_size
         if self.mesh is not None:
@@ -641,6 +783,41 @@ class TitanEngine:
                 # straight into its row partition over the data axis, so no
                 # post-hoc reshard sits on the dispatch path
                 device = data_sharding(self.mesh, self.data_axis)
+        mgr = None
+        done = 0
+        if checkpoint_dir is not None:
+            from repro.ckpt.checkpoint import (CheckpointManager,
+                                               restore_checkpoint)
+            from repro.data.stream import seek_stream
+            mgr = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+            if auto_resume:
+                path = mgr.latest()
+                if path is not None:
+                    target = jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        state)
+                    shardings = (self.state_shardings(state)
+                                 if self.mesh is not None else None)
+                    state, manifest = restore_checkpoint(
+                        path, target, shardings=shardings)
+                    extra = manifest.get("extra", {})
+                    done = min(int(extra.get("rounds_done", 0)), rounds)
+                    if extra.get("stream_cursor") is not None:
+                        seek_stream(stream, extra["stream_cursor"])
+        if mgr is not None:
+            from repro.data.stream import cursor_add, stream_cursor
+            # the prefetcher's lookahead advances the live stream counter
+            # past the consumed round; checkpoints must record the CONSUMED
+            # position, so count rounds from the post-seek base cursor
+            base_cursor = stream_cursor(stream)
+
+        def ckpt(rounds_done: int):
+            mgr.save(start_round + rounds_done, state, extra={
+                "rounds_done": rounds_done,
+                "stream_cursor": cursor_add(base_cursor, rounds_done - done),
+                "round": start_round + rounds_done,
+            })
+
         pending: deque = deque()
         last: Dict[str, Any] = {"m": None}
 
@@ -655,9 +832,10 @@ class TitanEngine:
                 if on_metrics is not None:
                     on_metrics(r, host)
 
-        with Prefetcher(stream, n, depth=prefetch, rounds=rounds,
+        saved_at = done
+        with Prefetcher(stream, n, depth=prefetch, rounds=rounds - done,
                         device=device) as pf:
-            for i in range(rounds):
+            for i in range(done, rounds):
                 r = start_round + i
                 state, metrics = self.step(state, pf.get())
                 if metrics_every:
@@ -668,7 +846,15 @@ class TitanEngine:
                     last["m"] = metrics  # device-side; fetched after the loop
                 if on_round is not None:
                     on_round(r, state, metrics)
+                if (mgr is not None and checkpoint_every
+                        and (i + 1) % checkpoint_every == 0):
+                    ckpt(i + 1)
+                    saved_at = i + 1
         drain()
+        if mgr is not None:
+            if saved_at != rounds:
+                ckpt(rounds)
+            mgr.wait()
         if not metrics_every and last["m"] is not None:
             last["m"] = jax.device_get(last["m"])
         return state, last["m"]

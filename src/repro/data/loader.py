@@ -20,23 +20,77 @@ Guarantees:
 - **Bounded lookahead.** The queue holds at most ``depth`` windows, so the
   stream never runs unboundedly ahead of training (host memory stays flat;
   ``depth+1`` windows exist at most: ``depth`` parked + 1 in flight).
+- **Degrading, not dying.** Transient stream failures (see the exception
+  taxonomy below) are retried with exponential backoff + deterministic
+  jitter, up to ``retries`` attempts per window; windows with the wrong
+  leading dimension ("short windows" from a degraded producer) count as
+  transient. Only a fatal error — or retry exhaustion — surfaces to the
+  consumer, and the worker thread always shuts down cleanly on the way out.
 - **Clean shutdown.** ``close()`` (or the context manager) wakes a blocked
-  worker, joins the thread, and is idempotent. Worker exceptions surface on
-  the consumer's next ``get()`` instead of dying silently.
+  worker (including one parked in a retry backoff), drains the queue while
+  joining so a worker stalled on a full queue can never deadlock the join,
+  and is idempotent. Worker exceptions surface on the consumer's next
+  ``get()`` instead of dying silently.
 - **Sync fallback.** ``depth=0`` is a synchronous passthrough (no thread),
   byte-identical behavior for parity tests and debugging.
+
+Exception taxonomy (the fault-tolerance contract, DESIGN.md §9):
+
+- :class:`TransientStreamError` — the producer hiccuped (IO timeout, a
+  short window, a dropped connection) and the same round can be re-drawn.
+  Retried.
+- :class:`FatalStreamError` — the stream is wedged (corrupt shard,
+  protocol violation); retrying cannot help. Surfaces immediately.
+- Anything else: builtin timeout/connection errors are treated as
+  transient (the usual flaky-IO shapes); every other exception is fatal.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Dict, Optional
 
 import jax
 
 
+class StreamError(Exception):
+    """Base class of the data-plane fault taxonomy."""
+
+
+class TransientStreamError(StreamError):
+    """A retryable stream hiccup: the same round can be re-drawn."""
+
+
+class FatalStreamError(StreamError):
+    """The stream is wedged; retrying cannot help. Never retried."""
+
+
 class StreamExhausted(Exception):
     """Raised by ``get()`` once a rounds-capped Prefetcher is drained."""
+
+
+#: Exception types retried by default (besides TransientStreamError):
+#: the usual transient-IO shapes a remote/file-backed stream raises.
+TRANSIENT_ERRORS = (TransientStreamError, TimeoutError, ConnectionError,
+                    BlockingIOError)
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Classify a stream exception per the taxonomy above. An explicit
+    ``FatalStreamError`` always wins, even if it also subclasses a
+    transient type."""
+    if isinstance(exc, FatalStreamError):
+        return False
+    return isinstance(exc, TRANSIENT_ERRORS)
+
+
+def _jitter_frac(seed: int, attempt: int) -> float:
+    """Deterministic jitter in [0, 1) keyed on (seed, attempt) — seeded so
+    chaos tests replay exactly, decorrelated so a fleet of retrying hosts
+    does not thundering-herd the producer."""
+    from repro.data.stream import mix_seed
+    return (mix_seed(seed, attempt) >> 11) / float(1 << 53)
 
 
 _DONE = object()
@@ -57,25 +111,45 @@ class Prefetcher:
         partition on a device mesh (the engine's ``run(mesh=...)`` default),
         so the sharded step never reshards input on the dispatch path.
         Default device when None.
+      retries: transient-failure retries per window (0 disables). Fatal
+        errors (see module taxonomy) are never retried.
+      backoff_s: initial retry delay; doubles per attempt up to
+        ``max_backoff_s``, plus up to ``jitter`` fraction of deterministic
+        seeded jitter.
+      validate: check every window's leading dimension against ``n`` and
+        classify short windows as transient (retryable) faults.
     """
 
     def __init__(self, stream, n: int, *, depth: int = 2,
-                 rounds: Optional[int] = None, device=None):
+                 rounds: Optional[int] = None, device=None,
+                 retries: int = 3, backoff_s: float = 0.05,
+                 max_backoff_s: float = 2.0, jitter: float = 0.5,
+                 seed: int = 0, validate: bool = True):
         if depth < 0:
             raise ValueError(f"depth must be >= 0, got {depth}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
         self.stream = stream
         self.n = int(n)
         self.depth = depth
         self.rounds = rounds
         self.device = device
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.jitter = jitter
+        self.seed = seed
+        self.validate = validate
+        self.retried = 0          # transient fetch attempts that were retried
+        self.leaked = False       # close() could not join the worker in time
         self._produced = 0
         self._exhausted = False
         self._closed = False
         self._error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
         if depth > 0:
             self._q: queue.Queue = queue.Queue(maxsize=depth)
-            self._stop = threading.Event()
             self._thread = threading.Thread(
                 target=self._worker, name="titan-prefetch", daemon=True)
             self._thread.start()
@@ -84,6 +158,37 @@ class Prefetcher:
 
     def _stage(self, window: Dict[str, Any]) -> Dict[str, jax.Array]:
         return {k: jax.device_put(v, self.device) for k, v in window.items()}
+
+    def _check(self, window: Dict[str, Any]):
+        if not self.validate:
+            return
+        for k, v in window.items():
+            rows = getattr(v, "shape", (self.n,))[:1]
+            if rows and rows[0] != self.n:
+                raise TransientStreamError(
+                    f"short window: {k!r} has {rows[0]} rows, round needs "
+                    f"{self.n}")
+
+    def _fetch(self) -> Optional[Dict[str, Any]]:
+        """One window, with bounded transient-retry. None = shut down
+        mid-backoff (close() was called)."""
+        attempt = 0
+        while True:
+            try:
+                window = self.stream.next_window(self.n)
+                self._check(window)
+                return window
+            except Exception as e:
+                if not is_transient(e) or attempt >= self.retries:
+                    raise
+                delay = min(self.backoff_s * (2 ** attempt),
+                            self.max_backoff_s)
+                delay *= 1.0 + self.jitter * _jitter_frac(self.seed, attempt)
+                self.retried += 1
+                attempt += 1
+                # stop-aware sleep: close() must never wait out a backoff
+                if self._stop.wait(delay):
+                    return None
 
     def _offer(self, item) -> bool:
         """Blocking put that stays responsive to close(). False = shut down."""
@@ -101,7 +206,10 @@ class Prefetcher:
                 if self.rounds is not None and self._produced >= self.rounds:
                     self._offer(_DONE)
                     return
-                window = self._stage(self.stream.next_window(self.n))
+                window = self._fetch()
+                if window is None:      # shut down mid-backoff
+                    return
+                window = self._stage(window)
                 self._produced += 1
                 if not self._offer(("ok", window)):
                     return
@@ -124,8 +232,11 @@ class Prefetcher:
             if self.rounds is not None and self._produced >= self.rounds:
                 self._exhausted = True
                 raise StreamExhausted(f"prefetcher capped at {self.rounds} rounds")
+            window = self._fetch()
+            if window is None:
+                raise RuntimeError("Prefetcher is closed")
             self._produced += 1
-            return self._stage(self.stream.next_window(self.n))
+            return self._stage(window)
         item = self._q.get()
         if item is _DONE:
             self._exhausted = True
@@ -138,19 +249,33 @@ class Prefetcher:
             raise val
         return val
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
         """Stop the worker and join it. Idempotent; safe mid-stream. The
-        prefetcher is unusable afterwards (get() raises)."""
+        prefetcher is unusable afterwards (get() raises).
+
+        The queue is drained *while* joining, not just once up front: a
+        worker stalled in ``_offer`` on a full queue can refill the slot we
+        just freed before noticing the stop flag, and a one-shot drain
+        followed by a blocking join would then deadlock. If the worker is
+        wedged inside the stream itself (a hung ``next_window``) the join
+        times out and ``leaked`` is set — the daemon thread dies with the
+        process instead of hanging shutdown."""
         self._closed = True
-        if self._thread is None:
+        thread = self._thread
+        if thread is None:
             return
         self._stop.set()
-        try:  # unblock a worker stuck in put()
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=5.0)
+        deadline = time.monotonic() + timeout
+        while thread.is_alive():
+            try:  # unblock a worker stuck in put()
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            thread.join(timeout=0.05)
+            if time.monotonic() > deadline:
+                break
+        self.leaked = thread.is_alive()
         self._thread = None
 
     def __enter__(self) -> "Prefetcher":

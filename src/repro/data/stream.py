@@ -55,6 +55,80 @@ def mixed_rng(*fields: int) -> np.random.RandomState:
         np.array([h & 0xFFFFFFFF, h >> 32], dtype=np.uint32))
 
 
+# ---------------------------------------------------------------------------
+# Cursors: the checkpointable notion of "where a stream is".
+#
+# A cursor is a plain nested structure of ints — one leaf per member stream,
+# each the number of rounds that member has produced — so it round-trips
+# through a JSON checkpoint manifest. `stream_cursor` reads it off any
+# stream/wrapper pytree (wrappers recurse through `.stream`, ShardedStream
+# through `.streams`); `seek_stream` repositions a stream to a cursor, which
+# is how a crash-resumed `engine.run` replays from the exact round the last
+# checkpoint saw (DESIGN.md §9). Streams with state beyond the round counter
+# implement `seek(round)` themselves (drift replay in GaussianMixtureStream).
+# ---------------------------------------------------------------------------
+
+def stream_cursor(stream):
+    """Rounds-produced cursor of ``stream``: an int, or a nested list with
+    one leaf per member stream (``ShardedStream``). Wrappers (StragglerGuard,
+    FaultyStream) report the position of the stream they wrap."""
+    streams = getattr(stream, "streams", None)
+    if streams:
+        return [stream_cursor(s) for s in streams]
+    inner = getattr(stream, "stream", None)
+    if inner is not None and hasattr(inner, "next_window"):
+        return stream_cursor(inner)
+    return int(getattr(stream, "round", 0))
+
+
+def cursor_add(cursor, k: int):
+    """Advance every leaf of a cursor by ``k`` consumed rounds."""
+    if isinstance(cursor, (list, tuple)):
+        return [cursor_add(c, k) for c in cursor]
+    return int(cursor) + int(k)
+
+
+def _cursor_leaves(cursor):
+    if isinstance(cursor, (list, tuple)):
+        out = []
+        for c in cursor:
+            out.extend(_cursor_leaves(c))
+        return out
+    return [int(cursor)]
+
+
+def seek_stream(stream, cursor):
+    """Reposition ``stream`` to ``cursor`` (from :func:`stream_cursor`).
+
+    Streams exposing ``seek(round)`` own their repositioning (stateful
+    drift replay); plain counter-keyed streams get ``round`` assigned.
+    A sharded cursor seeks member streams pairwise; if the shard count
+    changed since the cursor was taken (elastic re-mesh), every member
+    seeks to ``max(leaves)`` — no round is ever replayed twice, at the
+    cost of skipping at most one cursor-spread of rounds (DESIGN.md §9)."""
+    if hasattr(stream, "seek"):
+        stream.seek(cursor)
+        return
+    streams = getattr(stream, "streams", None)
+    if streams:
+        cs = cursor if isinstance(cursor, (list, tuple)) else [cursor]
+        if len(cs) != len(streams):
+            m = max(_cursor_leaves(cursor))
+            cs = [m] * len(streams)
+        for s, c in zip(streams, cs):
+            seek_stream(s, c)
+        return
+    inner = getattr(stream, "stream", None)
+    if inner is not None and hasattr(inner, "next_window"):
+        seek_stream(inner, cursor)
+        return
+    if hasattr(stream, "round"):
+        stream.round = int(cursor)
+    elif _cursor_leaves(cursor) != [0]:
+        raise TypeError(f"{type(stream).__name__} has no round counter and "
+                        f"no seek(); cannot resume it mid-stream")
+
+
 @runtime_checkable
 class StreamProtocol(Protocol):
     """Contract between streams and the async data plane.
@@ -159,6 +233,24 @@ class GaussianMixtureStream:
             y_obs[m] = rs.randint(0, self.n_classes, int(m.sum()))
         return {"x": x.astype(np.float32), "y": y_obs.astype(np.int32),
                 "domain": y_obs.astype(np.int32)}
+
+    def seek(self, round) -> None:
+        """Reposition to ``round`` (checkpoint resume). The centers are
+        cumulative under drift, so a bare ``self.round = k`` would replay
+        the right per-round generators against the *wrong* distribution;
+        instead the centers are rebuilt from seed and every drift increment
+        up to ``round`` is replayed (the increment is the first draw of each
+        round's generator, so replay is exact and independent of the window
+        sizes the original run requested)."""
+        round = int(round)
+        if self.drift_per_round:
+            base = np.random.RandomState(self.seed)
+            self.centers = base.randn(self.n_classes, self.in_dim) * 2.0
+            for r in range(round):
+                rs = mixed_rng(self.seed, self.shard, r)
+                self.centers += rs.randn(*self.centers.shape) \
+                    * self.drift_per_round
+        self.round = round
 
     def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
         return {"x": jax.ShapeDtypeStruct((n, self.in_dim), np.float32),

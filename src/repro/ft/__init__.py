@@ -1,1 +1,4 @@
-from repro.ft.elastic import StragglerGuard, reshard, run_with_restarts  # noqa: F401
+from repro.ft.elastic import (RestartsExhausted, StragglerGuard,  # noqa: F401
+                              reshard, reshard_engine_state,
+                              run_with_restarts)
+from repro.ft.faults import FaultyStream  # noqa: F401

@@ -5,11 +5,13 @@ from the last valid checkpoint, possibly on a different mesh shape;
 (ii) slow hosts on the input pipeline -> per-step data deadline with batch
 substitution; (iii) DCN jitter on cross-pod reductions -> compressed
 all-reduce (dist/collectives). This module implements (i) and (ii) end-to-end
-in a way that is testable on CPU; the multi-slice goodput accounting is
-documented in DESIGN.md.
+in a way that is testable on CPU; the fault x detection x recovery matrix is
+DESIGN.md §9, the multi-slice goodput accounting DESIGN.md.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from typing import Callable, Dict, Iterable, Optional
 
@@ -50,9 +52,16 @@ def reshard_engine_state(state, engine, mesh=None):
 
 
 class StragglerGuard:
-    """Per-round data deadline. If the stream cannot produce the next window
-    within `deadline_s`, the previous window is substituted (training never
-    stalls on a slow host); substitutions are counted for goodput accounting.
+    """Per-round data deadline with late-result discard.
+
+    If the stream cannot produce the next window within ``deadline_s``, the
+    previous window is substituted (training never stalls on a slow host);
+    substitutions are counted for goodput accounting. Fetches run on an
+    internal worker thread, so the deadline is *real*: a hung
+    ``next_window`` (dead NFS mount, wedged socket) times out instead of
+    blocking the round, and when the hung fetch eventually returns its
+    result is **discarded** — a stale window from round r must never be
+    delivered as round r+k's data (``discarded`` counts these).
 
     Wraps either a ``repro.data.StreamProtocol`` (preferred — the guard then
     conforms to the protocol itself, so it slots under a
@@ -70,26 +79,83 @@ class StragglerGuard:
         self.deadline_s = deadline_s
         self.last: Optional[Dict] = None
         self.substituted = 0
+        self.discarded = 0      # late results dropped, never delivered
         self.rounds = 0
+        self.leaked = False
+        self._req: queue.Queue = queue.Queue()
+        self._res: queue.Queue = queue.Queue()
+        self._ticket = 0        # id of the most recently submitted fetch
+        self._inflight: Optional[int] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- worker -------------------------------------------------------------
+
+    def _ensure_thread(self):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._worker, name="titan-straggler-guard", daemon=True)
+            self._thread.start()
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                ticket, n = self._req.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            if ticket is None:          # shutdown sentinel
+                return
+            try:
+                if self.fetch is not None:
+                    window = self.fetch()
+                else:
+                    window = self.stream.next_window(n)
+                self._res.put((ticket, "ok", window))
+            except BaseException as e:
+                self._res.put((ticket, "err", e))
+
+    # -- consumer -----------------------------------------------------------
+
+    def _substitute(self, err: Optional[BaseException] = None) -> Dict:
+        self.substituted += 1
+        if self.last is None:
+            if err is not None:
+                raise err
+            raise RuntimeError("no window available and no fallback yet")
+        return self.last
 
     def next_window(self, n: Optional[int] = None) -> Dict:
         self.rounds += 1
-        t0 = time.monotonic()
-        try:
-            if self.fetch is not None:
-                window = self.fetch()
-            else:
-                window = self.stream.next_window(n)
-        except Exception:
-            window = None
-        late = (time.monotonic() - t0) > self.deadline_s
-        if (window is None or late) and self.last is not None:
-            self.substituted += 1
-            return self.last
-        if window is None:
-            raise RuntimeError("no window available and no fallback yet")
-        self.last = window
-        return window
+        self._ensure_thread()
+        deadline = time.monotonic() + self.deadline_s
+        fresh: Optional[int] = None     # the fetch submitted for THIS round
+        while True:
+            if self._inflight is None:
+                self._ticket += 1
+                self._inflight = fresh = self._ticket
+                self._req.put((self._ticket, n))
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                # deadline expired; the in-flight fetch keeps running and
+                # its eventual result is discarded by a later round
+                return self._substitute()
+            try:
+                ticket, tag, val = self._res.get(timeout=remaining)
+            except queue.Empty:
+                return self._substitute()
+            if ticket != self._inflight:
+                continue                # result of an already-abandoned fetch
+            self._inflight = None
+            if ticket != fresh:
+                # a previous round's straggler finally arrived: drop it (it
+                # is that round's data, not ours) and fetch fresh within
+                # whatever deadline budget remains
+                self.discarded += 1
+                continue
+            if tag == "err":
+                return self._substitute(val)
+            self.last = val
+            return val
 
     def window_specs(self, n: int):
         if self.stream is None or not hasattr(self.stream, "window_specs"):
@@ -97,30 +163,98 @@ class StragglerGuard:
                             "construct it with a StreamProtocol for specs")
         return self.stream.window_specs(n)
 
+    def seek(self, cursor) -> None:
+        """Checkpoint-resume repositioning: abandon any in-flight fetch
+        (its result predates the seek) and seek the wrapped stream. Only
+        call while no ``next_window`` is executing."""
+        from repro.data.stream import seek_stream
+        if self.stream is None:
+            raise TypeError("cannot seek a StragglerGuard over a bare "
+                            "fetch callable")
+        self._inflight = None   # any late result is now discarded on arrival
+        self.last = None        # pre-seek fallback would replay old data
+        seek_stream(self.stream, cursor)
+
+    def close(self, timeout: float = 2.0):
+        """Stop the worker thread. Idempotent. If the worker is wedged
+        inside a hung fetch the join times out and ``leaked`` is set (the
+        daemon thread dies with the process)."""
+        self._stop.set()
+        thread = self._thread
+        if thread is None:
+            return
+        self._req.put((None, None))
+        thread.join(timeout=timeout)
+        self.leaked = thread.is_alive()
+        self._thread = None
+
     @property
     def goodput(self) -> float:
         return 1.0 - self.substituted / max(self.rounds, 1)
 
 
-def run_with_restarts(make_loop: Callable[[Optional[str]], Iterable],
-                      failures_at: Iterable[int]):
-    """Failure-injection harness: runs `make_loop(resume_path)`; at each step
-    listed in `failures_at` the loop is killed (simulated node failure) and
-    restarted from the latest checkpoint. Returns the completed history.
+class RestartsExhausted(RuntimeError):
+    """run_with_restarts hit its restart budget without finishing."""
 
-    make_loop(resume) must yield (step, ckpt_dir) tuples and handle resume.
+
+def run_with_restarts(make_loop: Callable[[Optional[str]], Iterable],
+                      failures_at: Iterable[int] = (), *,
+                      max_restarts: Optional[int] = None,
+                      backoff_s: float = 0.0, max_backoff_s: float = 5.0,
+                      on_restart: Optional[Callable] = None,
+                      sleep: Callable[[float], None] = time.sleep):
+    """Restart supervisor: runs ``make_loop(resume_path)`` to completion,
+    restarting from the latest checkpoint on failure.
+
+    Failures come from two places: (a) *injected* — at each step listed in
+    ``failures_at`` the loop is killed (simulated node loss) and restarted
+    from the checkpoint it yielded; (b) *real* — an exception escaping the
+    loop body triggers a restart from the last checkpoint any attempt
+    yielded. Restarts are bounded by ``max_restarts`` (None = unbounded;
+    exceeding the budget raises :class:`RestartsExhausted` chained to the
+    last real error) with exponential backoff between attempts
+    (``backoff_s`` doubling up to ``max_backoff_s`` — storming a recovering
+    fleet back onto a struggling storage layer is how one failure becomes
+    an outage). ``on_restart(attempt, err)`` observes each restart.
+
+    ``make_loop(resume)`` must yield ``(step, ckpt_dir)`` tuples and handle
+    resume. Elastic re-mesh on restart (the 4→2→4 device-churn path) is the
+    loop body's job: restore with the *current* engine's shardings —
+    ``restore_checkpoint(..., shardings=engine.state_shardings(...))`` or
+    ``reshard_engine_state`` re-partition the saved state transparently.
+
+    Returns the completed step history.
     """
     failures = sorted(failures_at, reverse=True)
     history = []
     resume = None
+    last_ckpt = None
+    restarts = 0
     while True:
         crash_at = failures.pop() if failures else None
         finished = True
-        for step, ckpt_dir in make_loop(resume):
-            history.append(step)
-            if crash_at is not None and step >= crash_at:
-                resume = ckpt_dir          # simulate losing in-memory state
-                finished = False
-                break
+        err: Optional[BaseException] = None
+        try:
+            for step, ckpt_dir in make_loop(resume):
+                history.append(step)
+                if ckpt_dir is not None:
+                    last_ckpt = ckpt_dir
+                if crash_at is not None and step >= crash_at:
+                    resume = ckpt_dir      # simulate losing in-memory state
+                    finished = False
+                    break
+        except Exception as e:
+            finished = False
+            err = e
+            resume = last_ckpt
         if finished:
             return history
+        restarts += 1
+        if max_restarts is not None and restarts > max_restarts:
+            raise RestartsExhausted(
+                f"loop did not finish within {max_restarts} restarts"
+            ) from err
+        if on_restart is not None:
+            on_restart(restarts, err)
+        if backoff_s:
+            sleep(min(backoff_s * (2 ** (restarts - 1)), max_backoff_s))

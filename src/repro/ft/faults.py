@@ -1,0 +1,140 @@
+"""Seeded fault injection for the data plane (DESIGN.md §9).
+
+Chaos testing the fault-tolerant stack needs faults that are (a) *realistic*
+— the failure modes a 1000-node input pipeline actually produces: transient
+read errors, wedged fetches, truncated shards, corrupt (NaN/inf) rows, hard
+shard loss — and (b) *deterministic*, so a failing chaos run replays
+bit-for-bit from its seed. :class:`FaultyStream` wraps any
+``repro.data.StreamProtocol`` and injects faults keyed on the *fetch attempt
+counter* through the same splitmix64 hashing the streams themselves use:
+attempt k of a given seed always produces the same fault, while a retry
+(attempt k+1) rolls fresh dice — exactly how a flaky-but-recovering source
+behaves under ``Prefetcher``'s bounded retry.
+
+Fault kinds:
+
+``transient``   raise :class:`~repro.data.loader.TransientStreamError`
+                before touching the inner stream (retry-safe: the stream
+                position does not advance, so the retry replays the round).
+``fatal``       raise :class:`~repro.data.loader.FatalStreamError` — the
+                non-retryable taxonomy class; propagates to the restart
+                supervisor.
+``hang``        sleep ``hang_s`` before serving (straggler). Finite, so a
+                chaos run never leaks a permanently-wedged thread; make it
+                long relative to a StragglerGuard deadline to force
+                substitution, short to exercise plain slowness.
+``nan``         serve the window with the first ``nan_rows`` rows of every
+                float leaf poisoned (NaN) — the engine's non-finite guard
+                must quarantine them.
+``short``       serve a truncated window (half the requested rows) — the
+                prefetcher's validator rejects it as transient.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.data.loader import FatalStreamError, TransientStreamError
+from repro.data.stream import mixed_rng, seek_stream
+
+KINDS = ("transient", "fatal", "hang", "nan", "short")
+
+
+class FaultyStream:
+    """Schedule- and rate-driven fault injector around a stream.
+
+    ``schedule`` maps a fetch-attempt index (0-based, counting every
+    ``next_window`` call including retries) to a fault kind — exact
+    choreography for regression tests. ``*_rate`` draws faults
+    probabilistically per attempt from ``mixed_rng(seed, attempt)`` — chaos
+    mode. Rates are evaluated in :data:`KINDS` order against one uniform
+    draw, so their sum must stay ≤ 1.
+
+    Counters (``raised``, ``hung``, ``poisoned``, ``shorted``, ``calls``)
+    let tests assert that the intended faults actually fired — a chaos test
+    that silently injected nothing proves nothing.
+    """
+
+    def __init__(self, stream, *, seed: int = 0,
+                 schedule: Optional[Dict[int, str]] = None,
+                 transient_rate: float = 0.0, fatal_rate: float = 0.0,
+                 hang_rate: float = 0.0, nan_rate: float = 0.0,
+                 short_rate: float = 0.0, hang_s: float = 0.05,
+                 nan_rows: int = 1):
+        self.stream = stream
+        self.seed = int(seed)
+        self.schedule = dict(schedule or {})
+        for a, kind in self.schedule.items():
+            if kind not in KINDS:
+                raise ValueError(f"schedule[{a}]: unknown fault {kind!r} "
+                                 f"(kinds: {KINDS})")
+        self.rates = {"transient": transient_rate, "fatal": fatal_rate,
+                      "hang": hang_rate, "nan": nan_rate,
+                      "short": short_rate}
+        total = sum(self.rates.values())
+        if total > 1.0:
+            raise ValueError(f"fault rates sum to {total} > 1")
+        self.hang_s = hang_s
+        self.nan_rows = int(nan_rows)
+        self.calls = 0
+        self.raised = 0      # transient + fatal raises
+        self.hung = 0
+        self.poisoned = 0
+        self.shorted = 0
+
+    def _fault_for(self, attempt: int) -> Optional[str]:
+        if attempt in self.schedule:
+            return self.schedule[attempt]
+        if not any(self.rates.values()):
+            return None
+        u = mixed_rng(self.seed, attempt).rand()
+        edge = 0.0
+        for kind in KINDS:
+            edge += self.rates[kind]
+            if u < edge:
+                return kind
+        return None
+
+    def next_window(self, n: int) -> Dict[str, np.ndarray]:
+        attempt = self.calls
+        self.calls += 1
+        kind = self._fault_for(attempt)
+        if kind == "transient":
+            # raised BEFORE the inner fetch: the stream position does not
+            # advance, so the prefetcher's retry replays this exact round
+            self.raised += 1
+            raise TransientStreamError(
+                f"injected transient fault (attempt {attempt})")
+        if kind == "fatal":
+            self.raised += 1
+            raise FatalStreamError(
+                f"injected fatal fault (attempt {attempt})")
+        if kind == "hang":
+            self.hung += 1
+            time.sleep(self.hang_s)
+        window = self.stream.next_window(n)
+        if kind == "short":
+            self.shorted += 1
+            keep = max(1, n // 2)
+            return {k: v[:keep] for k, v in window.items()}
+        if kind == "nan":
+            self.poisoned += 1
+            window = dict(window)
+            rows = min(self.nan_rows, n)
+            for k, v in window.items():
+                if np.issubdtype(np.asarray(v).dtype, np.floating):
+                    v = np.array(v, copy=True)
+                    v[:rows] = np.nan
+                    window[k] = v
+        return window
+
+    def window_specs(self, n: int):
+        return self.stream.window_specs(n)
+
+    def seek(self, cursor) -> None:
+        """Checkpoint-resume repositioning: delegate to the wrapped stream.
+        The attempt counter keeps running — fault injection is a property
+        of the *harness timeline*, not of the stream position."""
+        seek_stream(self.stream, cursor)

@@ -73,6 +73,18 @@ def main(argv=None):
     ap.add_argument("--grad-compress", default="none", choices=["none", "int8"])
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="auto-resume from the newest valid checkpoint in "
+                         "--ckpt-dir (--no-resume starts fresh)")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="restart the round loop in-process up to N times "
+                         "on failure, resuming from the last checkpoint "
+                         "(engine path; needs --ckpt-dir to make progress "
+                         "across restarts)")
+    ap.add_argument("--guard", action="store_true",
+                    help="non-finite guard: skip NaN/inf updates, "
+                         "quarantine the offending rows (DESIGN.md §9)")
     ap.add_argument("--eval-every", type=int, default=25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -133,8 +145,12 @@ def main(argv=None):
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed))
     start_step = 0
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    if mgr is not None:
+    # the engine path checkpoints the FULL EngineState (buffer, policy
+    # estimators, stream cursor, round) through engine.run itself; the
+    # legacy path keeps the train-state-only manager here
+    mgr = (CheckpointManager(args.ckpt_dir)
+           if args.ckpt_dir and not policy else None)
+    if mgr is not None and args.resume:
         latest = find_latest(args.ckpt_dir)
         if latest:
             state, manifest = restore_checkpoint(latest, state)
@@ -170,10 +186,11 @@ def main(argv=None):
             mgr.save(step + 1, train_state, extra={"arch": args.arch})
 
     if policy:
+        from repro.data.stream import seek_stream, stream_cursor
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
                           score_seq_len=min(args.seq, 1024), sketch_dim=8,
-                          policy=policy)
+                          policy=policy, nonfinite_guard=args.guard)
         engine = TitanEngine.from_config(
             ttn, model, train_step_fn=train_step,
             params_of=lambda s: s.params, batch_size=args.batch, mesh=mesh)
@@ -182,12 +199,38 @@ def main(argv=None):
         print(f"[engine] policy={engine.policy.name} "
               f"window={engine.window_size} buffer={engine.buffer_size} "
               f"prefetch={args.prefetch} donate={engine.donate} "
-              f"mesh={args.mesh or 'none'}")
-        estate, _ = engine.run(
-            estate, guard, rounds, prefetch=args.prefetch,
-            metrics_every=args.log_every, on_metrics=log_metrics,
-            on_round=lambda step, st, m: eval_and_ckpt(step, st.train),
-            start_round=start_step)
+              f"guard={engine.guard} mesh={args.mesh or 'none'}")
+        cursor0 = stream_cursor(guard)
+        init_host = (jax.tree.map(np.asarray, estate)
+                     if args.max_restarts > 0 else None)
+        attempt = 0
+        while True:
+            try:
+                estate, _ = engine.run(
+                    estate, guard, rounds, prefetch=args.prefetch,
+                    metrics_every=args.log_every, on_metrics=log_metrics,
+                    on_round=lambda step, st, m: eval_and_ckpt(step,
+                                                               st.train),
+                    start_round=start_step,
+                    checkpoint_dir=args.ckpt_dir or None,
+                    checkpoint_every=args.ckpt_every,
+                    auto_resume=args.resume or attempt > 0)
+                break
+            except Exception as e:
+                attempt += 1
+                if attempt > args.max_restarts:
+                    raise
+                print(f"[restart {attempt}/{args.max_restarts}] {e!r}",
+                      file=sys.stderr)
+                if not (args.ckpt_dir and find_latest(args.ckpt_dir)):
+                    # nothing saved yet: the crashed attempt may have
+                    # donated `estate` away and left the stream mid-run —
+                    # rebuild both so the retry replays from the start
+                    seek_stream(guard, cursor0)
+                    estate = jax.tree.map(jnp.asarray, init_host)
+                    if engine.mesh is not None:
+                        estate = jax.device_put(
+                            estate, engine.state_shardings(estate))
         state = estate.train
     else:
         tstep = jax.jit(train_step)

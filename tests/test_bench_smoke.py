@@ -1,10 +1,11 @@
 """Benchmark-harness smoke tests (opt-in: ``pytest --bench-smoke``).
 
-Runs the kernel, policy, data-plane, candidate-buffer and sharded-engine
-micro-benchmarks at tiny shapes and checks the machine-readable
-``BENCH_kernels.json`` / ``BENCH_policies.json`` / ``BENCH_pipeline.json``
-/ ``BENCH_buffer.json`` / ``BENCH_shard.json`` contracts that track the
-perf trajectory across PRs. Set ``BENCH_JSON_DIR`` to collect the JSONs in
+Runs the kernel, policy, data-plane, candidate-buffer, sharded-engine and
+fault-tolerance micro-benchmarks at tiny shapes and checks the
+machine-readable ``BENCH_kernels.json`` / ``BENCH_policies.json`` /
+``BENCH_pipeline.json`` / ``BENCH_buffer.json`` / ``BENCH_shard.json`` /
+``BENCH_faults.json`` contracts that track the perf trajectory across
+PRs. Set ``BENCH_JSON_DIR`` to collect the JSONs in
 a fixed directory (CI uploads them as workflow artifacts) instead of the
 per-test tmp dir."""
 import json
@@ -147,3 +148,36 @@ def test_bench_shard_smoke_writes_json(tmp_path):
     ar = payload["allreduce"]
     assert ar["int8_bytes"] < ar["fp32_bytes"]
     assert 3.0 <= ar["ratio"] <= 4.5, ar
+
+
+def test_bench_faults_smoke_writes_json(tmp_path):
+    from benchmarks import bench_faults
+
+    path = _json_path(tmp_path, "BENCH_faults.json")
+    payload = bench_faults.main(smoke=True, json_path=path)
+    with open(path) as f:
+        ondisk = json.load(f)
+    assert ondisk["schema"] == payload["schema"] == "bench_faults/v1"
+    lanes = {r["lane"]: r for r in payload["overhead"]}
+    assert {"baseline", "guard", "guard_ckpt"} <= set(lanes)
+    for r in lanes.values():
+        assert r["rounds_per_sec"] > 0
+    # CI gate (ISSUE 6): the non-finite guard must cost <= 5% rounds/sec.
+    # That acceptance number is enforced on the full run and recorded by
+    # the committed BENCH_faults.json; the smoke gate carries the same
+    # noise slack as the pipeline/buffer/shard gates (loaded 2-core CI
+    # runners) — lanes run interleaved with paired-median ratios, so a
+    # sub-0.85 reading means the guard itself regressed, not box weather.
+    assert lanes["guard"]["rel_to_baseline"] >= 0.85, lanes["guard"]
+    # guard_ckpt is recorded for visibility, not gated: at smoke scale the
+    # checkpoint interval is a handful of ~2.5 ms rounds, so the async
+    # writer can't amortise. Only catch a collapse.
+    assert lanes["guard_ckpt"]["rel_to_baseline"] >= 0.3, lanes["guard_ckpt"]
+    rec = payload["recovery"]
+    assert rec["ckpt_save_ms"] > 0 and rec["ckpt_restore_ms"] > 0
+    assert rec["state_bytes"] > 0 and rec["state_leaves"] > 0
+    chaos = payload["chaos"]
+    assert chaos["loss_finite"], chaos
+    assert chaos["guard_trips"] >= 1, chaos     # the injected nans tripped
+    assert chaos["faults_raised"] >= 1          # transient was retried through
+    assert chaos["chaos_overhead_x"] > 0

@@ -5,6 +5,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt.checkpoint import (CheckpointManager, find_latest,
                                    restore_checkpoint, save_checkpoint)
@@ -52,6 +53,64 @@ def test_async_save_completes(tmp_path):
     mgr.save(5, _tree())
     mgr.wait()
     assert find_latest(str(tmp_path)).endswith("step_0000000005")
+
+
+def test_async_save_error_reraised_on_next_call(tmp_path):
+    """Satellite: a background save failure must surface as CheckpointError
+    on the NEXT wait()/save() — never die silently on the daemon thread —
+    and the manager stays usable afterwards (retry onto a fixed dir)."""
+    from repro.ckpt.checkpoint import CheckpointError
+
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")   # makedirs will fail in the worker
+    mgr = CheckpointManager(str(blocker), keep=2, async_save=True)
+    mgr.save(1, _tree())                    # async: returns without error
+    with pytest.raises(CheckpointError, match="background checkpoint save"):
+        mgr.wait()
+    os.remove(blocker)                      # operator fixes the path
+    mgr.save(2, _tree())                    # error was cleared: usable again
+    mgr.wait()
+    assert find_latest(str(blocker)).endswith("step_0000000002")
+
+
+def test_async_save_error_reraised_by_next_save(tmp_path):
+    from repro.ckpt.checkpoint import CheckpointError
+
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")
+    mgr = CheckpointManager(str(blocker), keep=2, async_save=True)
+    mgr.save(1, _tree())
+    with pytest.raises(CheckpointError):
+        mgr.save(2, _tree())                # save() re-raises before writing
+
+
+def test_sync_save_error_raises_immediately(tmp_path):
+    from repro.ckpt.checkpoint import CheckpointError
+
+    blocker = tmp_path / "ckpt"
+    blocker.write_text("not a directory")
+    mgr = CheckpointManager(str(blocker), keep=2, async_save=False)
+    with pytest.raises(CheckpointError):
+        mgr.save(1, _tree())
+
+
+def test_gc_tolerates_concurrent_deletion(tmp_path):
+    """Satellite: two supervisors pruning the same directory (or an
+    operator rm-ing old steps mid-run) must not kill the writer."""
+    import shutil
+
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree())
+    # a concurrent gc deleted a prunable step between listdir and rmtree:
+    # simulate by making _gc see entries that vanish underneath it
+    save_checkpoint(str(tmp_path), 4, _tree())
+    shutil.rmtree(tmp_path / "step_0000000003")
+    mgr._gc()                               # entry gone mid-prune: no raise
+    # the whole directory vanishing is also survivable
+    shutil.rmtree(tmp_path)
+    mgr._gc()
+    assert find_latest(str(tmp_path)) is None
 
 
 def test_restore_shape_mismatch_raises(tmp_path):

@@ -1,0 +1,484 @@
+"""Fault-tolerant Titan (DESIGN.md §9): crash-safe engine.run with
+checkpoint/auto-resume, the non-finite guard, seeded fault injection, and the
+restart supervisor — the chaos suite.
+
+The multidevice tests (elastic 4→2→4 device churn) need forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the CI ``chaos``
+job) and skip cleanly at one device.
+"""
+import dataclasses
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TitanConfig
+from repro.core.engine import TitanEngine
+from repro.data.loader import (FatalStreamError, Prefetcher,
+                               TransientStreamError)
+from repro.data.stream import (GaussianMixtureStream, ShardedStream,
+                               StreamProtocol, cursor_add, seek_stream,
+                               stream_cursor)
+from repro.ft.elastic import StragglerGuard, run_with_restarts
+from repro.ft.faults import FaultyStream
+from repro.hooks import har_hooks
+from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+C, IN, B, W, M = 4, 16, 8, 32, 16
+
+
+def _require(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+
+
+def _setup(seed=0):
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(24, 12), n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    return ecfg, params, har_hooks(ecfg)
+
+
+def _make_train(ecfg, axis=None, lr=0.1):
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        if axis:
+            g, loss = jax.lax.pmean((g, loss), axis)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+    return train
+
+
+def _engine(ecfg, hooks, *, guard=False, mesh=None, buffer_size=M, **kw):
+    tcfg = TitanConfig(stream_ratio=W // B, nonfinite_guard=guard, **kw)
+    return TitanEngine.from_config(
+        tcfg, hooks=hooks,
+        train_step_fn=_make_train(ecfg, "data" if mesh is not None else None),
+        params_of=lambda s: s, batch_size=B, n_classes=C,
+        buffer_size=buffer_size, mesh=mesh)
+
+
+def _drift_stream(seed=7, shard=0, num_shards=1):
+    # drift makes the stream stateful beyond its round counter — the hard
+    # case for cursor seek (replayed increments, not just a counter reset)
+    return GaussianMixtureStream(in_dim=IN, n_classes=C, seed=seed,
+                                 shard=shard, num_shards=num_shards,
+                                 drift_per_round=0.02)
+
+
+def _fresh_init(engine, params, seed=7):
+    """Init state from the stream's bootstrap window (a dedicated stream
+    instance, so run() streams start at round 0 like the original run)."""
+    return engine.init(jax.random.PRNGKey(2), params,
+                       _drift_stream(seed).next_window(W))
+
+
+def _states_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- fault injector ----------------------------------------------------------
+
+
+def test_faulty_stream_conforms_and_injects_on_schedule():
+    inner = _drift_stream()
+    fs = FaultyStream(inner, seed=3,
+                      schedule={1: "transient", 2: "fatal", 3: "hang",
+                                4: "nan", 5: "short"}, hang_s=0.01)
+    assert isinstance(fs, StreamProtocol)
+    assert fs.window_specs(W)["x"].shape == (W, IN)
+    w = fs.next_window(W)                      # attempt 0: clean
+    assert w["x"].shape == (W, IN)
+    with pytest.raises(TransientStreamError):
+        fs.next_window(W)                      # raised BEFORE the fetch:
+    assert inner.round == 1                    # the round did not advance
+    with pytest.raises(FatalStreamError):
+        fs.next_window(W)
+    fs.next_window(W)                          # hang: slow but served
+    poisoned = fs.next_window(W)
+    assert np.isnan(poisoned["x"][0]).any()
+    assert not np.isnan(poisoned["x"][1:]).any()
+    short = fs.next_window(W)
+    assert short["x"].shape[0] == W // 2
+    assert (fs.raised, fs.hung, fs.poisoned, fs.shorted) == (2, 1, 1, 1)
+
+
+def test_faulty_stream_rates_are_seed_deterministic():
+    def run(seed):
+        fs = FaultyStream(_drift_stream(), seed=seed, transient_rate=0.3,
+                          nan_rate=0.2)
+        kinds = []
+        for _ in range(30):
+            try:
+                w = fs.next_window(4)
+                kinds.append("nan" if np.isnan(w["x"]).any() else "ok")
+            except TransientStreamError:
+                kinds.append("transient")
+        return kinds
+    a, b = run(11), run(11)
+    assert a == b, "same seed must inject the same fault sequence"
+    assert "transient" in a and "nan" in a
+    assert run(12) != a
+
+    with pytest.raises(ValueError, match="sum"):
+        FaultyStream(_drift_stream(), transient_rate=0.7, nan_rate=0.7)
+    with pytest.raises(ValueError, match="unknown fault"):
+        FaultyStream(_drift_stream(), schedule={0: "meteor"})
+
+
+# -- crash-safe run: checkpoint + auto-resume --------------------------------
+
+
+def test_crash_at_round_k_resume_is_bit_identical(tmp_path):
+    """THE tentpole acceptance: 20 straight rounds == crash at round 12
+    (past the round-10 checkpoint) + auto-resume, bit-for-bit — train state,
+    buffer contents, policy estimators, selected batch, and the metrics of
+    every post-resume round."""
+    ecfg, params, hooks = _setup()
+    d = str(tmp_path / "ckpt")
+
+    def metrics_log(rec):
+        return lambda r, m: rec.append((r, float(m["loss"])))
+
+    ref_metrics = []
+    e0 = _engine(ecfg, hooks)
+    full, mf = e0.run(
+        _fresh_init(e0, params), _drift_stream(),
+        rounds=20, window_size=W, on_metrics=metrics_log(ref_metrics))
+
+    class Crash(RuntimeError):
+        pass
+
+    def crash_at(r, state, m):
+        if r == 12:
+            raise Crash("node lost at round 12")
+
+    e1 = _engine(ecfg, hooks)
+    with pytest.raises(Crash):
+        e1.run(_fresh_init(e1, params), _drift_stream(), rounds=20,
+               window_size=W, checkpoint_dir=d, checkpoint_every=5,
+               on_round=crash_at)
+
+    # fresh process equivalent: new engine, new stream, init replayed
+    e2 = _engine(ecfg, hooks)
+    res_metrics = []
+    resumed, mr = e2.run(_fresh_init(e2, params), _drift_stream(), rounds=20,
+                         window_size=W, checkpoint_dir=d, checkpoint_every=5,
+                         on_metrics=metrics_log(res_metrics))
+
+    _states_equal(full, resumed)
+    np.testing.assert_array_equal(np.asarray(full.next_batch["y"]),
+                                  np.asarray(resumed.next_batch["y"]))
+    assert mf["loss"] == mr["loss"]
+    done = 20 - len(res_metrics)
+    assert 0 < done < 20, "resume must skip exactly the checkpointed rounds"
+    assert res_metrics == ref_metrics[done:]
+
+
+def test_resume_skips_nothing_to_do(tmp_path):
+    """rounds already checkpointed: run() must not step or consume stream
+    rounds, just return the restored state."""
+    ecfg, params, hooks = _setup()
+    d = str(tmp_path / "ckpt")
+    e = _engine(ecfg, hooks)
+    done, _ = e.run(_fresh_init(e, params), _drift_stream(), rounds=6,
+                    window_size=W, checkpoint_dir=d, checkpoint_every=3)
+    s = _drift_stream()
+    e2 = _engine(ecfg, hooks)
+    again, m = e2.run(_fresh_init(e2, params), s, rounds=6, window_size=W,
+                      checkpoint_dir=d, checkpoint_every=3)
+    _states_equal(done, again)
+    assert stream_cursor(s) == 6  # seeked, nothing consumed past the cursor
+
+
+def test_resume_survives_transient_faults_on_the_stream(tmp_path):
+    """Retry/backoff + checkpoint resume compose: a stream that raises
+    transient errors (replay-safe: before the fetch) still yields the
+    bit-identical final state because retries never skip a round."""
+    ecfg, params, hooks = _setup()
+    e0 = _engine(ecfg, hooks)
+    ref, _ = e0.run(_fresh_init(e0, params), _drift_stream(), rounds=10,
+                    window_size=W)
+    e1 = _engine(ecfg, hooks)
+    flaky = FaultyStream(_drift_stream(), seed=5,
+                         schedule={2: "transient", 6: "transient",
+                                   7: "transient"})
+    got, _ = e1.run(_fresh_init(e1, params), flaky, rounds=10, window_size=W,
+                    checkpoint_dir=str(tmp_path / "c"), checkpoint_every=4)
+    assert flaky.raised == 3
+    _states_equal(ref, got)
+
+
+# -- non-finite guard --------------------------------------------------------
+
+
+def test_guard_off_is_bit_identical_to_seed_engine():
+    ecfg, params, hooks = _setup()
+    e0, e1 = _engine(ecfg, hooks), _engine(ecfg, hooks, guard=True)
+    s0, _ = e0.run(_fresh_init(e0, params), _drift_stream(), rounds=6,
+                   window_size=W)
+    s1, m1 = e1.run(_fresh_init(e1, params), _drift_stream(), rounds=6,
+                    window_size=W)
+    assert s0.sel_mask is None and s1.sel_mask is not None
+    _states_equal(s0.train, s1.train)
+    np.testing.assert_array_equal(np.asarray(s0.buffer["_score"]),
+                                  np.asarray(s1.buffer["_score"]))
+    assert int(m1["titan_guard_trips"]) == 0
+    assert int(m1["titan_quarantined"]) == 0
+
+
+def test_guard_rolls_back_nonfinite_update_and_quarantines(tmp_path):
+    """A poisoned next_batch NaNs the loss: the guard must (a) keep the
+    last-known-good train state despite donation, (b) trip the metric,
+    (c) NEG-evict the selected slots that produced the batch."""
+    ecfg, params, hooks = _setup()
+    e = _engine(ecfg, hooks, guard=True, evict_selected=False)
+    st = _fresh_init(e, params)
+    stream = _drift_stream()
+    stream.next_window(W)  # init consumed round 0 on its own instance
+    for _ in range(3):
+        st, _ = e.step(st, stream.next_window(W))
+    host_train = jax.tree.map(np.asarray, st.train)
+    # the armed quarantine set: the (deduplicated) slots behind next_batch
+    armed = int(np.asarray(st.sel_mask).sum())
+    assert 0 < armed <= B
+
+    bad = dict(st.next_batch)
+    bad["x"] = bad["x"].at[0, 0].set(jnp.nan)
+    st = dataclasses.replace(st, next_batch=bad)
+    st, m = e.step(st, stream.next_window(W))
+
+    assert int(m["titan_guard_trips"]) == 1
+    assert int(m["titan_quarantined"]) == armed  # armed slots NEG-evicted
+    for a, b in zip(jax.tree.leaves(host_train), jax.tree.leaves(st.train)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_guard_quarantines_nonfinite_stream_rows():
+    """NaN/inf rows must never reach the loss, the buffer, or the policy:
+    sanitized on entry, admission score forced to NEG, trip counted."""
+    ecfg, params, hooks = _setup()
+    e = _engine(ecfg, hooks, guard=True)
+    st = _fresh_init(e, params)
+    stream = _drift_stream()
+    stream.next_window(W)
+    w = {k: jnp.asarray(v) for k, v in stream.next_window(W).items()}
+    w["x"] = w["x"].at[3].set(jnp.inf)
+    st, m = e.step(st, w)
+    assert int(m["titan_guard_trips"]) == 1
+    assert int(m["titan_quarantined"]) == 1
+    assert bool(jnp.isfinite(m["loss"]))
+    assert np.isfinite(np.asarray(st.buffer["x"])).all()
+    st, m = e.step(st, stream.next_window(W))
+    assert bool(jnp.isfinite(m["loss"]))  # next round trains clean
+
+
+# -- the chaos run -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("with_guard_wrapper", [False, True])
+def test_seeded_chaos_run_completes(tmp_path, with_guard_wrapper):
+    """Acceptance: a seeded chaos schedule (transient raises, hangs, NaN
+    rows, short windows) over a checkpointed, guarded engine.run completes
+    all rounds with a finite final loss, a nonzero titan_guard_trips total,
+    and no leaked prefetcher threads."""
+    ecfg, params, hooks = _setup(seed=1)
+    rounds = 24
+    faulty = FaultyStream(
+        _drift_stream(), seed=13,
+        schedule={3: "nan", 7: "transient", 11: "short", 15: "hang",
+                  19: "nan"},
+        transient_rate=0.05, hang_rate=0.03, nan_rate=0.05, hang_s=0.01)
+    stream = (StragglerGuard(faulty, deadline_s=5.0) if with_guard_wrapper
+              else faulty)
+    e = _engine(ecfg, hooks, guard=True)
+    st = _fresh_init(e, params)
+
+    trips = {"n": 0, "q": 0}
+
+    def on_metrics(r, m):
+        trips["n"] += int(m["titan_guard_trips"])
+        trips["q"] += int(m["titan_quarantined"])
+
+    before = threading.active_count()
+    st, m = e.run(st, stream, rounds, window_size=W,
+                  checkpoint_dir=str(tmp_path / "c"), checkpoint_every=8,
+                  on_metrics=on_metrics)
+    if with_guard_wrapper:
+        stream.close()
+        assert not stream.leaked
+    deadline = time.monotonic() + 5.0
+    while threading.active_count() > before and time.monotonic() < deadline:
+        time.sleep(0.01)
+
+    assert int(st.t) == rounds + 1
+    assert np.isfinite(float(m["loss"]))
+    assert trips["n"] > 0, "chaos schedule injected NaN rows; guard silent"
+    assert trips["q"] > 0
+    assert faulty.poisoned > 0 and faulty.raised > 0
+    assert threading.active_count() == before, "leaked data-plane threads"
+
+
+def test_restart_supervisor_resumes_after_fatal_faults(tmp_path):
+    """run_with_restarts × engine.run: a fatal stream fault kills the loop
+    mid-run; the supervisor restarts it, engine.run auto-resumes from the
+    checkpoint, and the final state is bit-identical to a crash-free run."""
+    ecfg, params, hooks = _setup()
+    d = str(tmp_path / "ckpt")
+    e0 = _engine(ecfg, hooks)
+    ref, _ = e0.run(_fresh_init(e0, params), _drift_stream(), rounds=12,
+                    window_size=W)
+
+    # ONE injector across attempts: its attempt counter keeps running, so
+    # the fatal fires once (like a poisoned shard that gets re-imaged)
+    faulty = FaultyStream(_drift_stream(), seed=9, schedule={7: "fatal"})
+    out = {}
+    restarts = []
+
+    def make_loop(resume):
+        def loop():
+            e = _engine(ecfg, hooks)
+            st, m = e.run(_fresh_init(e, params), faulty, rounds=12,
+                          window_size=W, checkpoint_dir=d,
+                          checkpoint_every=3)
+            out["state"], out["metrics"] = st, m
+            yield 12, d
+        return loop()
+
+    history = run_with_restarts(
+        make_loop, max_restarts=2,
+        on_restart=lambda a, err: restarts.append(type(err).__name__))
+    assert history == [12]
+    assert restarts == ["FatalStreamError"]
+    _states_equal(ref, out["state"])
+
+
+# -- elastic device churn ----------------------------------------------------
+
+
+@pytest.mark.multidevice
+def test_checkpoint_resume_across_4_2_4_device_churn(tmp_path):
+    """Elastic restarts under device churn: run on a 4-way data mesh, crash,
+    resume on 2 shards (restore re-partitions the global state under the new
+    engine's shardings), crash again, finish back on 4. Selection data
+    differs per topology (per-shard streams and admission), so the assertion
+    is the mechanics: every phase resumes at the right round, state stays
+    globally shaped and finite, and the final loss is finite."""
+    _require(4)
+    from repro.launch.mesh import make_engine_mesh
+
+    ecfg, params, hooks = _setup(seed=2)
+    d = str(tmp_path / "ckpt")
+
+    def mk_stream(S):
+        return ShardedStream.make(
+            lambda shard, num_shards: _drift_stream(21, shard, num_shards),
+            S)
+
+    def phase(S, rounds):
+        e = _engine(ecfg, hooks, mesh=make_engine_mesh(S, 1))
+        stream = mk_stream(S)
+        st = e.init(jax.random.PRNGKey(4), params,
+                    mk_stream(S).next_window(W))
+        st, m = e.run(st, stream, rounds, window_size=W, checkpoint_dir=d,
+                      checkpoint_every=2)
+        assert len(st.buffer["_score"].sharding.device_set) == S
+        return st, m
+
+    st, _ = phase(4, 4)
+    assert int(st.t) == 5
+    st, _ = phase(2, 8)           # shrink: 4-leaf cursor seeks 2 streams
+    assert int(st.t) == 9
+    st, m = phase(4, 12)          # grow back
+    assert int(st.t) == 13
+    assert np.isfinite(float(m["loss"]))
+    assert st.buffer["_score"].shape == (M,)
+    for leaf in jax.tree.leaves(st.train):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.multidevice
+def test_mesh_resume_bit_identical_same_topology(tmp_path):
+    """On a stable mesh the crash-resume contract is as strict as on one
+    device: 8 straight rounds == crash@4 + resume, bit-for-bit."""
+    _require(4)
+    from repro.launch.mesh import make_engine_mesh
+
+    ecfg, params, hooks = _setup(seed=3)
+
+    def mk_stream():
+        return ShardedStream.make(
+            lambda shard, num_shards: _drift_stream(23, shard, num_shards),
+            4)
+
+    def mk_engine():
+        return _engine(ecfg, hooks, mesh=make_engine_mesh(4, 1))
+
+    def init(e):
+        return e.init(jax.random.PRNGKey(6), params, mk_stream().next_window(W))
+
+    e0 = mk_engine()
+    ref, mf = e0.run(init(e0), mk_stream(), rounds=8, window_size=W)
+    d = str(tmp_path / "ckpt")
+    e1 = mk_engine()
+    e1.run(init(e1), mk_stream(), rounds=4, window_size=W,
+           checkpoint_dir=d, checkpoint_every=4)
+    e2 = mk_engine()
+    res, mr = e2.run(init(e2), mk_stream(), rounds=8, window_size=W,
+                     checkpoint_dir=d, checkpoint_every=4)
+    _states_equal(ref, res)
+    assert mf["loss"] == mr["loss"]
+
+
+# -- kill -9 the whole process ----------------------------------------------
+
+
+def test_subprocess_kill_and_resume(tmp_path):
+    """The real thing: SIGKILL the training CLI mid-run, relaunch, and the
+    job finishes from its last checkpoint (atomicity: the interrupted write
+    must never be picked up)."""
+    d = str(tmp_path / "ckpt")
+    env = dict(os.environ, PYTHONPATH="src", PYTHONUNBUFFERED="1",
+               JAX_PLATFORMS="cpu")
+    args = [sys.executable, "-m", "repro.launch.train", "--steps", "8",
+            "--batch", "4", "--seq", "32", "--policy", "titan-cis",
+            "--ckpt-dir", d, "--ckpt-every", "2", "--log-every", "1",
+            "--eval-every", "100", "--prefetch", "1"]
+    root = os.path.join(os.path.dirname(__file__), "..")
+    proc = subprocess.Popen(args, cwd=root, env=env,
+                            stdout=subprocess.PIPE, stderr=subprocess.STDOUT)
+    try:
+        deadline = time.monotonic() + 300
+        while time.monotonic() < deadline:
+            ckpts = (sorted(x for x in os.listdir(d)
+                            if x.startswith("step_")
+                            and not x.endswith(".tmp"))
+                     if os.path.isdir(d) else [])
+            if ckpts:
+                break
+            if proc.poll() is not None:
+                out = proc.stdout.read().decode()
+                pytest.fail(f"train exited before first checkpoint:\n{out}")
+            time.sleep(0.2)
+        else:
+            pytest.fail("no checkpoint appeared within 300s")
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert proc.returncode != 0  # really killed mid-run
+
+    done = subprocess.run(args, cwd=root, env=env, capture_output=True,
+                          timeout=500)
+    out = done.stdout.decode() + done.stderr.decode()
+    assert done.returncode == 0, out
+    assert "done." in out
+    final = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert final[-1] == "step_0000000008", final

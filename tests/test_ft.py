@@ -55,6 +55,112 @@ def test_straggler_guard_deadline():
     g.last = {"x": 0}
     out = g.next_window()
     assert out["x"] == 0 and g.substituted == 1
+    g.close()
+    assert not g.leaked
+
+
+def test_straggler_guard_deadline_expiry_on_hung_fetch():
+    """A wedged next_window (dead mount) must not block the round: the
+    deadline is real because fetches run on a worker thread."""
+    import time
+
+    class Hung:
+        calls = 0
+
+        def next_window(self, n):
+            self.calls += 1
+            if self.calls == 2:
+                time.sleep(0.5)      # wedged
+            return {"x": self.calls}
+
+    g = StragglerGuard(Hung(), deadline_s=0.1)
+    assert g.next_window(1)["x"] == 1
+    t0 = time.monotonic()
+    out = g.next_window(1)           # hung fetch: substitute within deadline
+    assert time.monotonic() - t0 < 0.4
+    assert out["x"] == 1 and g.substituted == 1
+    g.close()
+
+
+def test_straggler_guard_late_result_discarded_not_delivered():
+    """Satellite: a straggler from round r arriving during round r+k must be
+    DISCARDED — stale data delivered as fresh silently skews the stream."""
+    import time
+
+    class Straggler:
+        calls = 0
+
+        def next_window(self, n):
+            self.calls += 1
+            if self.calls == 2:
+                time.sleep(0.2)      # this one will arrive late
+            return {"x": self.calls}
+
+    g = StragglerGuard(Straggler(), deadline_s=0.05)
+    assert g.next_window(1)["x"] == 1
+    assert g.next_window(1)["x"] == 1     # call 2 times out -> substitute
+    time.sleep(0.3)                        # call 2's result lands in _res
+    out = g.next_window(1)
+    assert out["x"] == 3, "stale round-2 window must never be delivered"
+    assert g.discarded == 1
+    assert g.substituted == 1
+    g.close()
+    assert not g.leaked
+
+
+def test_straggler_guard_goodput_accounting():
+    import time
+
+    class Sometimes:
+        calls = 0
+
+        def next_window(self, n):
+            self.calls += 1
+            if self.calls % 3 == 0:
+                raise RuntimeError("flaky host")
+            return {"x": self.calls}
+
+    g = StragglerGuard(Sometimes(), deadline_s=5.0)
+    for _ in range(9):
+        g.next_window(1)
+    assert g.rounds == 9
+    assert g.substituted == 3
+    assert g.goodput == pytest.approx(1.0 - 3 / 9)
+    g.close()
+
+
+def test_straggler_guard_no_fallback_reraises():
+    def bad():
+        raise RuntimeError("cold start failure")
+
+    g = StragglerGuard(bad, deadline_s=5.0)
+    with pytest.raises(RuntimeError, match="cold start"):
+        g.next_window()
+    g.close()
+
+
+def test_run_with_restarts_budget_and_backoff():
+    """Satellite hardening: unbounded crash loops are bounded by
+    max_restarts (RestartsExhausted chains the real error), with
+    exponential backoff between attempts and an on_restart hook."""
+    from repro.ft.elastic import RestartsExhausted
+
+    sleeps, seen = [], []
+
+    def make_loop(resume):
+        def loop():
+            raise OSError("storage down")
+            yield  # pragma: no cover
+        return loop()
+
+    with pytest.raises(RestartsExhausted) as ei:
+        run_with_restarts(make_loop, max_restarts=3, backoff_s=0.1,
+                          max_backoff_s=0.25, sleep=sleeps.append,
+                          on_restart=lambda a, e: seen.append((a, str(e))))
+    assert isinstance(ei.value.__cause__, OSError)
+    assert seen == [(1, "storage down"), (2, "storage down"),
+                    (3, "storage down")]
+    assert sleeps == [0.1, 0.2, 0.25]  # doubling, capped
 
 
 def test_run_with_restarts_completes_training(tmp_path):

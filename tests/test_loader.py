@@ -116,3 +116,114 @@ def test_prefetcher_propagates_worker_errors():
     with pytest.raises(ValueError, match="shard corrupted"):
         pf.get()
     assert pf._thread is None  # closed itself after surfacing the error
+
+
+# -- retry/backoff: the degrading data plane (DESIGN.md §9) -----------------
+
+
+class Flaky:
+    """Raises ``fail_at`` exceptions at the given call indexes (0-based),
+    otherwise serves sequential windows. The round only advances on a
+    successful draw, so retries replay the same round (like a real
+    re-openable source)."""
+
+    def __init__(self, fail_at, exc=None):
+        self.fail_at = dict(fail_at)
+        self.exc = exc
+        self.calls = 0
+        self.round = 0
+
+    def next_window(self, n):
+        c = self.calls
+        self.calls += 1
+        if c in self.fail_at:
+            raise self.fail_at[c]
+        w = {"x": np.full((n, 2), self.round, np.float32)}
+        self.round += 1
+        return w
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_prefetcher_retries_transient_errors(depth):
+    from repro.data.loader import TransientStreamError
+    s = Flaky({1: TransientStreamError("io blip"),
+               2: TimeoutError("socket"),
+               4: ConnectionError("reset")})
+    with Prefetcher(s, 4, depth=depth, retries=3, backoff_s=0.001,
+                    rounds=3) as pf:
+        got = [pf.get()["x"][0, 0] for _ in range(3)]
+    assert got == [0, 1, 2]      # no round skipped or replayed twice
+    assert pf.retried == 3
+
+
+def test_prefetcher_retry_exhaustion_surfaces_transient_error():
+    from repro.data.loader import TransientStreamError
+    s = Flaky({i: TransientStreamError("down") for i in range(10)})
+    pf = Prefetcher(s, 4, depth=1, retries=2, backoff_s=0.001)
+    with pytest.raises(TransientStreamError, match="down"):
+        pf.get()
+    assert pf.retried == 2       # retries attempted, then gave up
+
+
+def test_prefetcher_fatal_error_not_retried():
+    from repro.data.loader import FatalStreamError
+    s = Flaky({0: FatalStreamError("corrupt shard")})
+    pf = Prefetcher(s, 4, depth=1, retries=5, backoff_s=0.001)
+    with pytest.raises(FatalStreamError, match="corrupt shard"):
+        pf.get()
+    assert pf.retried == 0 and s.calls == 1
+
+
+def test_prefetcher_short_window_is_transient_and_retried():
+    class Short:
+        round = 0
+
+        def next_window(self, n):
+            self.round += 1
+            rows = n // 2 if self.round == 1 else n
+            return {"x": np.zeros((rows, 2), np.float32)}
+
+    s = Short()
+    with Prefetcher(s, 4, depth=1, retries=2, backoff_s=0.001) as pf:
+        assert pf.get()["x"].shape == (4, 2)
+    assert pf.retried == 1
+
+    from repro.data.loader import TransientStreamError
+    s2 = Short()
+    pf2 = Prefetcher(s2, 4, depth=1, retries=0)
+    with pytest.raises(TransientStreamError, match="short window"):
+        pf2.get()
+
+
+def test_prefetcher_close_while_worker_stalled_on_full_queue():
+    """Regression (shutdown race): a worker blocked in put() on a full
+    queue can refill the slot a one-shot drain freed, deadlocking a
+    blocking join. close() must drain WHILE joining and return promptly
+    without leaking the thread — even when the consumer never read a
+    single window."""
+    s = SyntheticLMStream(vocab=100, seq_len=8, seed=1)
+    pf = Prefetcher(s, 4, depth=1)
+    deadline = time.monotonic() + 5.0
+    while s.round < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)   # queue full + one window in flight: worker stalls
+    thread = pf._thread
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 2.0, "close() stalled on a blocked worker"
+    assert not thread.is_alive()
+    assert not pf.leaked
+
+
+def test_prefetcher_close_interrupts_retry_backoff():
+    """close() during an exponential-backoff sleep must wake the worker
+    immediately instead of waiting out the delay."""
+    from repro.data.loader import TransientStreamError
+    s = Flaky({i: TransientStreamError("down") for i in range(100)})
+    pf = Prefetcher(s, 4, depth=1, retries=50, backoff_s=30.0)
+    deadline = time.monotonic() + 5.0
+    while s.calls == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)   # worker is now parked in its first backoff
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 2.0, "close() waited out the backoff"
+    assert not pf.leaked
