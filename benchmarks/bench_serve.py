@@ -1,0 +1,243 @@
+"""Serve-and-select benchmark (DESIGN.md §10).
+
+Three lanes of the continuous-batching loop on the reduced dense LM,
+strictly interleaved per rep so paired ratios cancel shared-box drift (the
+bench_faults / bench_shard protocol). Every lane serves the same seeded
+closed-loop traffic trace:
+
+- ``serve``            — decode only (``collect_stats=False``, no sink):
+  the baseline the production loop would run without Titan.
+- ``select-cached``    — the tentpole: decode-time stat accumulators +
+  a ``RequestStream`` tee + a TitanEngine consuming windows on a background
+  thread with :func:`repro.serve.select.serve_hooks` — selection reads the
+  cached ``sel_*`` columns, zero model FLOPs. The gated lane: serving
+  throughput must stay within 10% of ``serve`` on the full run (the
+  acceptance number recorded in the committed ``BENCH_serve.json``; the
+  smoke gate in tests/test_bench_smoke.py carries 0.75x noise slack).
+- ``select-recompute`` — same pipeline but the engine re-forwards every
+  buffered candidate each round (:func:`recompute_hooks`) — what selection
+  costs WITHOUT feature reuse, competing with decode for the device.
+
+The engine train step is frozen (identity) in all select lanes, so the
+measured overhead is the selection machinery itself, not the optimizer.
+Also records the analytic FLOPs ledger: per-token decode forward vs the
+O((V+D)·r) stat-accumulator extra, and the per-round re-forward the cached
+path avoids.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve            # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # quick
+
+Writes ``BENCH_serve.json`` (schema ``bench_serve/v1``).
+"""
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import threading
+import time
+from typing import Dict, List
+
+ARCH = "qwen1.5-32b-reduced"
+MAX_BATCH, MAX_SEQ = 4, 32
+PROMPT_LENS, GEN_LEN = (6, 10), 8
+B, SR, R_SKETCH = 2, 4, 8       # selection batch, stream ratio, sketch r
+
+LANES = ("serve", "select-cached", "select-recompute")
+
+
+def _build():
+    import jax
+
+    from repro.configs import TitanConfig, get_config, replace
+    from repro.models.model import build_model
+    from repro.serve import TrafficGen
+
+    cfg = get_config(ARCH)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ttn = replace(TitanConfig(), policy="ll", stream_ratio=SR,
+                  buffer_ratio=3, sketch_dim=R_SKETCH)
+    tg = TrafficGen(vocab=cfg.vocab, n_domains=cfg.n_domains,
+                    prompt_lens=PROMPT_LENS, max_new_tokens=GEN_LEN,
+                    rps=0.0, seed=0)
+    return cfg, model, params, ttn, tg
+
+
+def _make_lanes(cfg, model, params, ttn):
+    import jax
+
+    from repro.core.engine import TitanEngine
+    from repro.serve import ServeLoop, recompute_hooks, serve_hooks
+
+    def identity_step(s, b):
+        import jax.numpy as jnp
+        return s, {"loss": jnp.zeros(())}
+
+    lanes: Dict[str, Dict] = {}
+    for name in LANES:
+        loop = ServeLoop(model, params, max_batch=MAX_BATCH, max_seq=MAX_SEQ,
+                         sketch_dim=R_SKETCH,
+                         collect_stats=name != "serve")
+        engine = None
+        if name != "serve":
+            hooks = (serve_hooks() if name == "select-cached"
+                     else recompute_hooks(model, ttn))
+            engine = TitanEngine.from_config(
+                ttn, model, hooks=hooks, train_step_fn=identity_step,
+                params_of=lambda s: s, batch_size=B,
+                n_classes=cfg.n_domains)
+        lanes[name] = {"loop": loop, "engine": engine, "rps": [],
+                       "tps": [], "lat": [], "sel_rounds": 0}
+    return lanes
+
+
+def _run_lane(lane, cfg, reqs, *, warm=False):
+    """Serve one trace through a lane; select lanes consume the tee on a
+    background thread for the duration of the serve run."""
+    import jax
+
+    from repro.data.loader import (FatalStreamError, StreamExhausted,
+                                   TransientStreamError)
+    from repro.serve import RequestStream
+
+    loop, engine = lane["loop"], lane["engine"]
+    sink = thread = None
+    rounds_done = [0]
+    if engine is not None:
+        sink = RequestStream(seq_len=MAX_SEQ, feat_dim=cfg.d_model,
+                             sketch_dim=R_SKETCH, timeout_s=2.0)
+        loop.sink = sink
+        rounds = len(reqs) // engine.window_size
+
+        def consume():
+            try:
+                while True:      # first window: outlast jit-compile stalls
+                    try:
+                        w = sink.next_window(engine.window_size)
+                        break
+                    except TransientStreamError:
+                        continue
+                w0 = {k: jax.numpy.asarray(v) for k, v in w.items()}
+                st = engine.init(jax.random.PRNGKey(1), loop.params, w0)
+                st, _ = engine.run(
+                    st, sink, rounds=max(rounds - 1, 0), metrics_every=0,
+                    on_round=lambda r, s, m: rounds_done.__setitem__(
+                        0, r + 1))
+                rounds_done[0] = max(rounds_done[0], 1)
+            except (StreamExhausted, FatalStreamError):
+                pass
+
+        thread = threading.Thread(target=consume, daemon=True)
+        thread.start()
+
+    t0 = time.perf_counter()
+    done = loop.run(reqs, realtime=False)
+    wall = time.perf_counter() - t0
+    if sink is not None:
+        sink.close()
+        thread.join(timeout=60)
+        loop.sink = None
+    if warm:
+        return
+    import numpy as np
+    lat = np.array([d.latency_s for d in done])
+    lane["rps"].append(len(done) / wall)
+    lane["tps"].append(sum(len(d.tokens) - d.prompt_len for d in done) / wall)
+    lane["lat"].append((float(np.percentile(lat, 50) * 1e3),
+                        float(np.percentile(lat, 99) * 1e3)))
+    lane["sel_rounds"] += rounds_done[0]
+
+
+def _flops_ledger(cfg, model, params) -> Dict:
+    """Analytic per-token ledger: what the cached path adds to decode, and
+    the per-round re-forward it avoids (the seed stage-2 path recomputes
+    stats over the whole candidate buffer every round)."""
+    import jax
+
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    D, V, r = cfg.d_model, cfg.vocab, R_SKETCH
+    fwd_tok = 2 * n_params                      # matmul-dominated forward
+    # accumulators reuse the sampler's logits/softmax: extra work is the
+    # two sketch projections + the rank-1 outer product + norms
+    stats_tok = 2 * (V * r + D * r) + 2 * r * r + 2 * D + 3 * V
+    buf = B * 3                                 # buffer_ratio = 3
+    recompute_round = buf * MAX_SEQ * fwd_tok
+    return {"n_params": n_params,
+            "flops_per_token_forward": fwd_tok,
+            "flops_per_token_stats_extra": stats_tok,
+            "stats_extra_frac_of_forward": stats_tok / fwd_tok,
+            "flops_per_round_recompute": recompute_round,
+            "flops_per_round_cached": 0,
+            "reuse_savings_x": recompute_round / max(
+                stats_tok * B * SR * GEN_LEN, 1)}
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_serve.json") -> Dict:
+    n_reqs = 24 if smoke else 64
+    reps = 3 if smoke else 7
+    cfg, model, params, ttn, tg = _build()
+    lanes = _make_lanes(cfg, model, params, ttn)
+
+    # jit warmup off the clock: every lane sees both prompt shapes + a
+    # full selection round
+    for name, lane in lanes.items():
+        _run_lane(lane, cfg,
+                  tg.requests(2 * B * SR, start_rid=90_000_000), warm=True)
+
+    for rep in range(reps):
+        reqs = tg.requests(n_reqs, start_rid=rep * n_reqs)
+        for name in LANES:                     # interleaved: paired weather
+            _run_lane(lanes[name], cfg, list(reqs))
+
+    def med(xs):
+        return statistics.median(xs)
+
+    base = lanes["serve"]["rps"]
+    rows: List[Dict] = []
+    for name, lane in lanes.items():
+        paired = sorted(a / b for a, b in zip(lane["rps"], base))
+        rows.append({
+            "lane": name,
+            "req_per_sec": med(lane["rps"]),
+            "tok_per_sec": med(lane["tps"]),
+            "latency_p50_ms": med([p for p, _ in lane["lat"]]),
+            "latency_p99_ms": med([q for _, q in lane["lat"]]),
+            "rel_to_serve": paired[len(paired) // 2],
+            "selection_rounds": lane["sel_rounds"],
+        })
+
+    flops = _flops_ledger(cfg, model, params)
+    cached = next(r for r in rows if r["lane"] == "select-cached")
+    payload = {"schema": "bench_serve/v1", "smoke": smoke,
+               "workload": {"arch": ARCH, "max_batch": MAX_BATCH,
+                            "max_seq": MAX_SEQ,
+                            "prompt_lens": list(PROMPT_LENS),
+                            "gen_len": GEN_LEN, "requests": n_reqs,
+                            "reps": reps, "policy": ttn.policy,
+                            "batch": B, "window": B * SR,
+                            "sketch_dim": R_SKETCH},
+               "lanes": rows,
+               "selection_overhead_pct": (1.0 - cached["rel_to_serve"])
+               * 100.0,
+               "flops": flops}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    print(f"{'lane':>18} {'req/s':>8} {'tok/s':>8} {'p50 ms':>8} "
+          f"{'p99 ms':>8} {'vs serve':>9} {'sel rounds':>10}")
+    for r in rows:
+        print(f"{r['lane']:>18} {r['req_per_sec']:>8.1f} "
+              f"{r['tok_per_sec']:>8.0f} {r['latency_p50_ms']:>8.1f} "
+              f"{r['latency_p99_ms']:>8.1f} {r['rel_to_serve']:>8.3f}x "
+              f"{r['selection_rounds']:>10}")
+    print(f"selection overhead (cached): "
+          f"{payload['selection_overhead_pct']:.1f}%  |  "
+          f"stats extra/token: {flops['stats_extra_frac_of_forward']:.4f} "
+          f"of a forward  |  reuse saves "
+          f"{flops['reuse_savings_x']:.0f}x FLOPs vs per-round recompute")
+    return payload
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

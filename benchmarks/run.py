@@ -12,8 +12,8 @@ def main() -> None:
     from benchmarks import (bench_buffer, bench_faults, bench_fig2,
                             bench_fig5a, bench_fig5b, bench_fig5c, bench_fig6,
                             bench_fig8, bench_fig9, bench_fig10, bench_fig11,
-                            bench_kernels, bench_policies, bench_shard,
-                            bench_table1)
+                            bench_kernels, bench_policies, bench_serve,
+                            bench_shard, bench_table1)
     csv = []
 
     def run(name, fn):
@@ -108,6 +108,16 @@ def main() -> None:
                 f"{guard['rel_to_baseline']:.3f}"))
     csv.append(("faults_ckpt_restore_ms", dt,
                 f"{out['recovery']['ckpt_restore_ms']:.1f}"))
+
+    print("=" * 70)
+    name, dt, out = run("serve", bench_serve.main)  # writes BENCH_serve.json
+    cached = next(r for r in out["lanes"] if r["lane"] == "select-cached")
+    csv.append(("serve_select_overhead_pct", dt,
+                f"{out['selection_overhead_pct']:.1f}"))
+    csv.append(("serve_cached_req_per_sec", dt,
+                f"{cached['req_per_sec']:.1f}"))
+    csv.append(("serve_reuse_savings_x", dt,
+                f"{out['flops']['reuse_savings_x']:.0f}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

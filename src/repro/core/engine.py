@@ -820,6 +820,30 @@ class TitanEngine:
 
         pending: deque = deque()
         last: Dict[str, Any] = {"m": None}
+        plane: Dict[str, Any] = {"pf": None}
+
+        def data_plane_health() -> Dict[str, Any]:
+            """Host-side data-plane counters, sampled at drain time
+            (DESIGN.md §10): Prefetcher retry/leak accounting plus — when
+            the stream is (or wraps) a StragglerGuard — its goodput and
+            late-discard counters, and any ``health_counters()`` the stream
+            itself exports (e.g. a serving RequestStream's queue depth)."""
+            h: Dict[str, Any] = {}
+            pf = plane["pf"]
+            if pf is not None:
+                h["titan_data_retried"] = int(pf.retried)
+                h["titan_data_leaked"] = int(pf.leaked)
+            s, seen = stream, set()
+            while s is not None and id(s) not in seen:
+                seen.add(id(s))
+                if hasattr(s, "goodput"):       # StragglerGuard
+                    h["titan_data_goodput"] = float(s.goodput)
+                    h["titan_data_discarded"] = int(s.discarded)
+                    h["titan_data_substituted"] = int(s.substituted)
+                if hasattr(s, "health_counters"):
+                    h.update(s.health_counters())
+                s = getattr(s, "stream", None)
+            return h
 
         def drain():
             if not pending:
@@ -827,7 +851,9 @@ class TitanEngine:
             items = list(pending)
             pending.clear()
             hosts = jax.device_get([m for _, m in items])  # one batched fetch
+            health = data_plane_health()
             for (r, _), host in zip(items, hosts):
+                host.update(health)
                 last["m"] = host
                 if on_metrics is not None:
                     on_metrics(r, host)
@@ -835,6 +861,7 @@ class TitanEngine:
         saved_at = done
         with Prefetcher(stream, n, depth=prefetch, rounds=rounds - done,
                         device=device) as pf:
+            plane["pf"] = pf
             for i in range(done, rounds):
                 r = start_round + i
                 state, metrics = self.step(state, pf.get())
@@ -856,5 +883,6 @@ class TitanEngine:
                 ckpt(rounds)
             mgr.wait()
         if not metrics_every and last["m"] is not None:
-            last["m"] = jax.device_get(last["m"])
+            last["m"] = dict(jax.device_get(last["m"]))
+            last["m"].update(data_plane_health())
         return state, last["m"]

@@ -1,0 +1,166 @@
+"""Serve-and-select driver: continuous-batching inference that feeds Titan.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-32b-reduced \
+        --requests 64 --rps 0 --max-batch 8 --select --policy ll
+
+Decodes seeded synthetic traffic (serve/traffic.py) through the
+continuous-batching loop (serve/loop.py); with ``--select`` every completed
+request is teed into a RequestStream and a TitanEngine consumes it on a
+background thread, selecting training batches from live traffic with the
+decode-time cached statistics — no re-forward (DESIGN.md §10). Prints
+requests/sec, latency percentiles, slot occupancy and the engine's
+selection + data-plane health metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import threading
+
+import jax
+import numpy as np
+
+from repro.configs import TitanConfig, TrainConfig, get_config, replace
+from repro.core.engine import TitanEngine
+from repro.core.registry import available_policies
+from repro.data.loader import StreamExhausted
+from repro.models.model import build_model
+from repro.serve import RequestStream, ServeLoop, TrafficGen, serve_hooks
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-32b-reduced")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rps", type=float, default=0.0,
+                    help="open-loop arrival rate; 0 = closed loop "
+                         "(all requests arrive at t=0)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous-batching slot count")
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--prompt-lens", default="8,12,16")
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--select", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="tee completed requests into a TitanEngine "
+                         "(--no-select = serve-only baseline)")
+    ap.add_argument("--policy", default="ll")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="selected training batch size")
+    ap.add_argument("--stream-ratio", type=int, default=2)
+    ap.add_argument("--train", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="--no-train freezes params (selection only)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.policy not in available_policies():
+        print(f"error: unknown policy {args.policy!r} "
+              f"(have: {', '.join(available_policies())})", file=sys.stderr)
+        sys.exit(2)
+    prompt_lens = tuple(int(x) for x in args.prompt_lens.split(","))
+    if max(prompt_lens) + args.gen_len > args.max_seq:
+        print(f"error: prompt {max(prompt_lens)} + gen {args.gen_len} "
+              f"exceeds --max-seq {args.max_seq}", file=sys.stderr)
+        sys.exit(2)
+
+    cfg = get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    tg = TrafficGen(vocab=cfg.vocab, n_domains=cfg.n_domains,
+                    prompt_lens=prompt_lens, max_new_tokens=args.gen_len,
+                    rps=args.rps, seed=args.seed)
+    reqs = tg.requests(args.requests)
+
+    ttn = replace(TitanConfig(), policy=args.policy,
+                  stream_ratio=args.stream_ratio, score_seq_len=0)
+    sink = engine_thread = None
+    report = {"rounds": 0, "last": None}
+    if args.select:
+        sink = RequestStream(seq_len=args.max_seq, feat_dim=cfg.d_model,
+                             sketch_dim=ttn.sketch_dim, timeout_s=2.0)
+        if args.train:
+            tcfg = TrainConfig(seq_len=args.max_seq,
+                               global_batch=args.batch, lr=args.lr,
+                               total_steps=max(args.requests, 10),
+                               seed=args.seed)
+            train_step = make_train_step(model, tcfg)
+            tstate = init_train_state(model, jax.random.PRNGKey(args.seed))
+            tstate = dataclasses.replace(tstate, params=params)
+            params_of = lambda s: s.params     # noqa: E731
+        else:
+            def train_step(s, b):
+                return s, {"loss": jax.numpy.zeros(())}
+            tstate, params_of = params, lambda s: s
+        engine = TitanEngine.from_config(
+            ttn, model, hooks=serve_hooks(), train_step_fn=train_step,
+            params_of=params_of, batch_size=args.batch,
+            n_classes=cfg.n_domains)
+        rounds = args.requests // engine.window_size
+
+        def run_engine():
+            try:
+                w0 = {k: jax.numpy.asarray(v) for k, v in
+                      sink.next_window(engine.window_size).items()}
+                st = engine.init(jax.random.PRNGKey(args.seed + 1),
+                                 tstate, w0)
+                st, m = engine.run(
+                    st, sink, rounds=max(rounds - 1, 0),
+                    on_metrics=lambda r, h: report.update(
+                        rounds=r + 1, last=h))
+                if m is not None:
+                    report["last"] = m
+            except StreamExhausted:
+                pass
+
+        engine_thread = threading.Thread(target=run_engine, daemon=True)
+
+    loop = ServeLoop(model, params, max_batch=args.max_batch,
+                     max_seq=args.max_seq, temperature=args.temperature,
+                     seed=args.seed, sketch_dim=ttn.sketch_dim, sink=None,
+                     collect_stats=args.select)
+    # warm the jit caches off the clock (and off the selection stream)
+    loop.run(tg.requests(2, start_rid=10_000_000), realtime=False)
+    loop.sink = sink
+    if engine_thread is not None:
+        engine_thread.start()
+
+    import time
+    t0 = time.perf_counter()
+    done = loop.run(reqs, realtime=args.rps > 0)
+    wall = time.perf_counter() - t0
+    if sink is not None:
+        sink.close()
+    if engine_thread is not None:
+        engine_thread.join(timeout=60)
+
+    lat = np.array([d.latency_s for d in done])
+    print(f"served {len(done)} requests in {wall:.2f}s "
+          f"({len(done) / wall:.1f} req/s, "
+          f"{sum(len(d.tokens) - d.prompt_len for d in done) / wall:.0f} "
+          f"tok/s)")
+    print(f"latency p50 {np.percentile(lat, 50) * 1e3:.1f} ms  "
+          f"p99 {np.percentile(lat, 99) * 1e3:.1f} ms  "
+          f"mean slot occupancy "
+          f"{loop.occupancy_sum / max(loop.ticks, 1):.2f}/{args.max_batch}")
+    if args.select:
+        h = report["last"] or {}
+        sel = {k: v for k, v in h.items()
+               if k.startswith(("titan_", "loss"))}
+        print(f"selection rounds {report['rounds']} "
+              f"(window {args.batch * args.stream_ratio}) "
+              f"pushed {sink.pushed} dropped {sink.dropped}")
+        if sel:
+            print("  " + "  ".join(
+                f"{k}={float(np.ravel(v)[0]):.4g}" for k, v in
+                sorted(sel.items())))
+    return done
+
+
+if __name__ == "__main__":
+    main()

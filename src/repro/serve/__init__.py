@@ -1,0 +1,10 @@
+"""Serving: per-family prefill/decode, KV caches, continuous batching,
+and the serve-and-select tee into the Titan engine (DESIGN.md §10)."""
+from repro.serve.cache import cache_defs, init_cache  # noqa: F401
+from repro.serve.decode import (decode_fn, decode_hidden_fn,  # noqa: F401
+                                decode_score_fn, prefill_fn,
+                                prefill_hidden_fn)
+from repro.serve.loop import Request, ServeLoop  # noqa: F401
+from repro.serve.select import (CompletedRequest, RequestStream,  # noqa: F401
+                                recompute_hooks, serve_hooks)
+from repro.serve.traffic import TrafficGen  # noqa: F401

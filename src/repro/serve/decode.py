@@ -3,6 +3,18 @@
 ``prefill_fn(model, params, batch)`` -> (last_logits (B,V) fp32, cache)
 ``decode_fn(model, params, cache, batch)`` -> (logits (B,V) fp32, new_cache)
 batch for decode: {"token": (B,), "pos": (B,)}.
+
+The hidden-state variants expose the post-final-norm last-position hidden
+state instead of projecting it through the unembed table — the serve-and-
+select loop (serve/loop.py) reuses it as the stage-1 feature vector and
+feeds it to the fused linear-score kernel, so scoring live traffic shares
+the forward pass with sampling:
+
+``prefill_hidden_fn(model, params, batch)`` -> (h_last (B,D), cache)
+``decode_hidden_fn(model, params, cache, batch)`` -> (h (B,D), new_cache)
+``decode_score_fn(cfg, params, h, labels, ...)`` -> linear-score stats of
+the next-token prediction *without materializing the (B,V) logits in HBM*
+(fused Pallas kernel from kernels/score; DESIGN.md §4/§10).
 """
 from __future__ import annotations
 
@@ -12,6 +24,7 @@ from jax import lax
 
 from repro.flags import pscan
 from repro.dist.sharding import constrain
+from repro.kernels.score.ops import linear_score
 from repro.models import layers as L
 from repro.models.model import (_dense_layer, _moe_layer, _rec_layer,
                                 _ssd_layer, _cross_layer, _img_kv,
@@ -26,11 +39,35 @@ def _logits(cfg, params, h_last):
     return constrain(out, "batch", "vocab")
 
 
+def decode_score_fn(cfg, params, h, labels, *, R=None, S=None,
+                    impl: str = "auto", n_block: int = 0, v_block: int = 0,
+                    d_block: int = 0):
+    """Scoring-only head: per-row linear-score stats from decode hiddens.
+
+    h (B,D) post-final-norm (from ``decode_hidden_fn``/``prefill_hidden_fn``),
+    labels (B,) int32 (negative = masked; mask the outputs yourself, as
+    ``lm_sequence_stats`` does). Returns the ``linear_score`` dict — loss,
+    pnorm2, entropy, py, hnorm2 (+psketch/hsketch with R/S) — with the
+    unembed matmul computed tile-by-tile, so the (B,V) logits never hit HBM
+    (``impl="unfused"`` restores the materialize-then-score baseline; the
+    parity test in tests/test_serve_select.py pins the two paths together).
+    """
+    table = unembed_table(cfg, params)
+    return linear_score(h, table, labels, R, S, impl=impl,
+                        n_block=n_block, v_block=v_block, d_block=d_block)
+
+
 # ---------------------------------------------------------------------------
 # Prefill
 # ---------------------------------------------------------------------------
 
 def prefill_fn(model, params, batch):
+    h_last, cache = prefill_hidden_fn(model, params, batch)
+    return _logits(model.cfg, params, h_last), cache
+
+
+def prefill_hidden_fn(model, params, batch):
+    """Prefill returning the last position's post-norm hidden (B,D)."""
     cfg = model.cfg
     if cfg.continuous_inputs:
         h = jnp.einsum("btd,de->bte", batch["frames"], params["in_proj"]["w"])
@@ -104,7 +141,7 @@ def prefill_fn(model, params, batch):
         raise ValueError(f)
 
     h = L.apply_norm(cfg, h, params["final_norm"])
-    return _logits(cfg, params, h[:, -1]), cache
+    return h[:, -1], cache
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +149,12 @@ def prefill_fn(model, params, batch):
 # ---------------------------------------------------------------------------
 
 def decode_fn(model, params, cache, batch):
+    h, new_cache = decode_hidden_fn(model, params, cache, batch)
+    return _logits(model.cfg, params, h), new_cache
+
+
+def decode_hidden_fn(model, params, cache, batch):
+    """One decode step returning the post-norm hidden (B,D)."""
     cfg = model.cfg
     token, pos = batch["token"], batch["pos"]
     h = L.embed(cfg, params["embed"], token[:, None])       # (B,1,D)
@@ -197,4 +240,4 @@ def decode_fn(model, params, cache, batch):
         raise ValueError(f"family {f!r} has no decode step")
 
     h = L.apply_norm(cfg, h, params["final_norm"])
-    return _logits(cfg, params, h[:, 0]), new_cache
+    return h[:, 0], new_cache

@@ -1,0 +1,342 @@
+"""Continuous-batching request loop with decode-time selection statistics.
+
+In-flight batching over ``serve/decode.py``: a fixed array of ``max_batch``
+slots, per-request prefill admission into a slot of the batched KV/state
+cache, one batched ``decode_hidden_fn`` tick for every active slot, and
+EOS/length retirement with immediate slot refill — the vLLM-style loop
+shape, not static batches (DESIGN.md §10).
+
+The selection tee is where the paper's production story lands: every tick
+already computes the post-final-norm hidden ``h`` and the logits it samples
+from, so the loop folds the ``lm_sequence_stats`` estimators token-by-token
+into per-slot accumulators — loss (lse - logit[y]), entropy
+(lse - Σ p·logit), gradient-norm proxy (Σ ||δ||²||h||²), the Kronecker JL
+sketch ((R^T δ) ⊗ (S^T h)) and the mean final hidden as the stage-1
+feature. Extra cost per token is O(V·r + D·r) on top of the forward the
+sampler needed anyway — near-zero recompute. On retirement the normalized
+stats ride the request into a :class:`~repro.serve.select.RequestStream`
+(``sink=``), feeding ``TitanEngine.run`` on the one-round-delay pipeline.
+
+Slot safety: inactive slots keep ticking inside the batched step (XLA wants
+a fixed shape); their cache writes land in retired rows that the next
+admission fully overwrites, and update-then-attend KV semantics mean a
+garbage row is never attended by a live request. Rolling-window (hybrid)
+caches are left-padded at admission so the newest entries stay end-aligned
+with the decode-time validity mask.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.importance import sketch_matrices
+from repro.models.model import ParamDef
+from repro.serve.cache import cache_defs, init_cache
+from repro.serve.decode import (_logits, decode_hidden_fn, prefill_hidden_fn)
+from repro.serve.select import CompletedRequest
+
+
+@dataclass
+class Request:
+    """One inference request for the open-loop generator / ServeLoop."""
+    rid: int
+    prompt: np.ndarray              # (P,) int32
+    domain: int = 0
+    arrival_s: float = 0.0
+    max_new_tokens: int = 16
+
+
+def _token_stats(cfg, h, logits, y, R, S):
+    """Per-row lm_sequence_stats contributions for one scored position.
+
+    ``h`` (B,D) post-norm hidden at position t, ``logits`` (B,V) fp32 (the
+    sampler's), ``y`` (B,) the sampled token — position t's label. Matches
+    ``linear_score`` outputs row-for-row: loss = lse - l[y],
+    pnorm2 = ||p - e_y||², entropy = lse - Σ p·l, psketch = R^T(p - e_y),
+    hsketch = S^T h, hnorm2 = ||h||².
+    """
+    lf = logits.astype(jnp.float32)
+    hf = h.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    p = jax.nn.softmax(lf, axis=-1)
+    ly = jnp.take_along_axis(lf, y[:, None], axis=-1)[:, 0]
+    py = jnp.take_along_axis(p, y[:, None], axis=-1)[:, 0]
+    return {
+        "loss": lse - ly,
+        "entropy": lse - jnp.sum(p * lf, axis=-1),
+        "pnorm2": jnp.sum(p * p, axis=-1) - 2.0 * py + 1.0,
+        "hnorm2": jnp.sum(hf * hf, axis=-1),
+        "psketch": p @ R - R[y],
+        "hsketch": hf @ S,
+        "hidden": hf,
+    }
+
+
+def _acc_update(acc, st, active):
+    """Fold one position's stats into the per-slot accumulators (masked)."""
+    a1 = active.astype(jnp.float32)
+    sk = st["psketch"][:, :, None] * st["hsketch"][:, None, :]
+    return {
+        "loss": acc["loss"] + a1 * st["loss"],
+        "gn2": acc["gn2"] + a1 * st["pnorm2"] * st["hnorm2"],
+        "entropy": acc["entropy"] + a1 * st["entropy"],
+        "sketch": acc["sketch"] + a1[:, None, None] * sk,
+        "hidden": acc["hidden"] + a1[:, None] * st["hidden"],
+        "cnt": acc["cnt"] + a1,
+    }
+
+
+class ServeLoop:
+    """Continuous-batching decode loop with a selection tee.
+
+    Args:
+      model: a ``build_model`` LM (token families: dense/moe/hybrid/ssm).
+      params: serving parameters.
+      max_batch: slot count B (in-flight requests).
+      max_seq: per-slot cache capacity; admission requires
+        ``prompt_len + max_new_tokens <= max_seq``.
+      eos_id: optional token id that retires a request early.
+      temperature: 0 = greedy (deterministic), else seeded categorical.
+      sketch_dim: JL sketch r (must match the selector's; the default
+        sketch key is ``PRNGKey(0)``, same as ``lm_sequence_stats``).
+      sink: optional ``RequestStream`` (or any ``push(CompletedRequest)``)
+        every retired request is teed into.
+      collect_stats: False skips the stat accumulators entirely — the
+        serve-only baseline lane in benchmarks/bench_serve.py.
+    """
+
+    def __init__(self, model, params, *, max_batch: int, max_seq: int,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 seed: int = 0, sketch_dim: int = 16, sink=None,
+                 collect_stats: bool = True):
+        cfg = model.cfg
+        if cfg.is_encoder or cfg.continuous_inputs or cfg.family == "vlm":
+            raise ValueError(f"ServeLoop serves token-only decoder families; "
+                             f"got family {cfg.family!r}")
+        self.model, self.params, self.cfg = model, params, cfg
+        self.B, self.S = int(max_batch), int(max_seq)
+        self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.seed = int(seed)
+        self.r = int(sketch_dim)
+        self.sink = sink
+        self.collect_stats = bool(collect_stats)
+        D, V = cfg.d_model, cfg.vocab
+        self.R, self.S_mat = sketch_matrices(jax.random.PRNGKey(0), V, D,
+                                             self.r)
+        self._ddefs = cache_defs(cfg, self.B, self.S)
+        self.cache = init_cache(cfg, self.B, self.S)
+        self.token = jnp.zeros((self.B,), jnp.int32)
+        self.pos = jnp.zeros((self.B,), jnp.int32)
+        self.acc = self._zero_acc()
+        # host-side slot table
+        self.active = np.zeros((self.B,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * self.B
+        self.slot_toks: List[List[int]] = [[] for _ in range(self.B)]
+        self.slot_gen = np.zeros((self.B,), np.int64)
+        self.ticks = 0
+        self.occupancy_sum = 0
+        self.completed: List[CompletedRequest] = []
+        self._tick = jax.jit(self._tick_impl)
+        self._admit_cache: Dict[int, Callable] = {}
+
+    # -- device programs ----------------------------------------------------
+
+    def _zero_acc(self):
+        B, D, r = self.B, self.cfg.d_model, self.r
+        z = jnp.zeros
+        return {"loss": z((B,), jnp.float32), "gn2": z((B,), jnp.float32),
+                "entropy": z((B,), jnp.float32),
+                "sketch": z((B, r, r), jnp.float32),
+                "hidden": z((B, D), jnp.float32), "cnt": z((B,), jnp.float32)}
+
+    def _sample(self, logits, key):
+        if self.temperature > 0:
+            y = jax.random.categorical(key, logits / self.temperature,
+                                       axis=-1)
+        else:
+            y = jnp.argmax(logits, axis=-1)
+        return y.astype(jnp.int32)
+
+    def _tick_impl(self, params, cache, token, pos, active, acc, key):
+        h, new_cache = decode_hidden_fn(self.model, params, cache,
+                                        {"token": token, "pos": pos})
+        logits = _logits(self.cfg, params, h)
+        y = self._sample(logits, key)
+        if self.collect_stats:
+            st = _token_stats(self.cfg, h, logits, y, self.R, self.S_mat)
+            acc = _acc_update(acc, st, active)
+        new_pos = jnp.where(active, pos + 1, pos)
+        new_token = jnp.where(active, y, token)
+        return new_token, new_pos, new_cache, acc, y
+
+    def _slot_write(self, dst_cache, src_cache, slot):
+        """Insert a B=1 prefill cache into slot ``slot`` of the batch cache.
+
+        Seq axes shorter than the decode capacity are right-padded for
+        positional KV caches (entry t lives at index t) but LEFT-padded for
+        the hybrid family's rolling-window caches, whose validity mask
+        counts from the END of the buffer (layers.attention_block rolls
+        ``concat([kc[:,1:], k])``) — end-padding would shift garbage into
+        the attended span on the first tick.
+        """
+        rolling = self.cfg.family == "hybrid"
+
+        def write(d, dst, src):
+            b_ax = d.axes.index("batch")
+            pad = [(0, 0)] * src.ndim
+            for ax in range(src.ndim):
+                if ax != b_ax and src.shape[ax] != dst.shape[ax]:
+                    delta = dst.shape[ax] - src.shape[ax]
+                    pad[ax] = (delta, 0) if rolling else (0, delta)
+            srcp = jnp.pad(src, pad).astype(dst.dtype)
+            start = [0] * src.ndim
+            start[b_ax] = slot
+            return lax.dynamic_update_slice(dst, srcp, tuple(start))
+
+        return jax.tree.map(write, self._ddefs, dst_cache, src_cache,
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    def _admit_fn(self, P: int):
+        """Jitted admission program, shape-specialized per prompt length."""
+        fn = self._admit_cache.get(P)
+        if fn is not None:
+            return fn
+
+        def admit(params, cache, token, pos, acc, prompt, slot, key):
+            h_last, pcache = prefill_hidden_fn(self.model, params,
+                                               {"tokens": prompt[None]})
+            logits = _logits(self.cfg, params, h_last)
+            y = self._sample(logits, key)
+            cache = self._slot_write(cache, pcache, slot)
+            token = token.at[slot].set(y[0])
+            pos = pos.at[slot].set(P)
+            if self.collect_stats:
+                # reset the slot's accumulators, then fold in the prefill
+                # position's stats (position P-1: its logits were computed
+                # for the first sampled token anyway)
+                st = _token_stats(self.cfg, h_last, logits, y, self.R,
+                                  self.S_mat)
+                sk0 = (st["psketch"][0][:, None] * st["hsketch"][0][None, :])
+                acc = {
+                    "loss": acc["loss"].at[slot].set(st["loss"][0]),
+                    "gn2": acc["gn2"].at[slot].set(
+                        st["pnorm2"][0] * st["hnorm2"][0]),
+                    "entropy": acc["entropy"].at[slot].set(st["entropy"][0]),
+                    "sketch": acc["sketch"].at[slot].set(sk0),
+                    "hidden": acc["hidden"].at[slot].set(st["hidden"][0]),
+                    "cnt": acc["cnt"].at[slot].set(1.0),
+                }
+            return token, pos, cache, acc, y
+
+        fn = jax.jit(admit)
+        self._admit_cache[P] = fn
+        return fn
+
+    # -- host loop ----------------------------------------------------------
+
+    def _admit(self, req: Request, slot: int, now: float):
+        P = len(req.prompt)
+        if P + req.max_new_tokens > self.S:
+            raise ValueError(f"request {req.rid}: prompt {P} + "
+                             f"max_new_tokens {req.max_new_tokens} exceeds "
+                             f"max_seq {self.S}")
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), req.rid)
+        prompt = jnp.asarray(np.asarray(req.prompt, np.int32))
+        self.token, self.pos, self.cache, self.acc, y = self._admit_fn(P)(
+            self.params, self.cache, self.token, self.pos, self.acc,
+            prompt, slot, key)
+        first = int(jax.device_get(y)[0])
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self.slot_toks[slot] = list(np.asarray(req.prompt)) + [first]
+        self.slot_gen[slot] = 1
+        self._maybe_retire(slot, first, now)
+
+    def _finalize(self, slot: int, now: float):
+        req = self.slot_req[slot]
+        row = jax.device_get(
+            jax.tree.map(lambda a: a[slot], self.acc))
+        cnt = max(float(row["cnt"]), 1.0)
+        stats = {
+            "loss": np.float32(row["loss"] / cnt),
+            "gnorm": np.float32(np.sqrt(max(row["gn2"], 0.0)) / cnt),
+            "entropy": np.float32(row["entropy"] / cnt),
+            "sketch": (row["sketch"] / cnt).reshape(-1).astype(np.float32),
+            "features": (row["hidden"] / cnt).astype(np.float32),
+        } if self.collect_stats else {
+            "loss": np.float32(0), "gnorm": np.float32(0),
+            "entropy": np.float32(0),
+            "sketch": np.zeros((self.r * self.r,), np.float32),
+            "features": np.zeros((self.cfg.d_model,), np.float32),
+        }
+        done = CompletedRequest(
+            rid=req.rid, domain=req.domain,
+            tokens=np.asarray(self.slot_toks[slot], np.int32),
+            prompt_len=len(req.prompt), stats=stats,
+            arrival_s=req.arrival_s, finish_s=now)
+        self.completed.append(done)
+        if self.sink is not None:
+            self.sink.push(done)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+
+    def _maybe_retire(self, slot: int, tok: int, now: float):
+        req = self.slot_req[slot]
+        hit_eos = self.eos_id is not None and tok == self.eos_id
+        if (hit_eos or self.slot_gen[slot] >= req.max_new_tokens
+                or len(req.prompt) + self.slot_gen[slot] >= self.S):
+            self._finalize(slot, now)
+
+    def step(self, now: float):
+        """One batched decode tick over every slot (inactive ones ride
+        along; their outputs are masked/discarded)."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed ^ 0x5EEDED),
+                                 self.ticks)
+        active_dev = jnp.asarray(self.active)
+        self.token, self.pos, self.cache, self.acc, y = self._tick(
+            self.params, self.cache, self.token, self.pos, active_dev,
+            self.acc, key)
+        toks = np.asarray(jax.device_get(y))
+        self.ticks += 1
+        self.occupancy_sum += int(self.active.sum())
+        for slot in np.nonzero(self.active)[0]:
+            self.slot_toks[slot].append(int(toks[slot]))
+            self.slot_gen[slot] += 1
+            self._maybe_retire(slot, int(toks[slot]), now)
+
+    def run(self, requests: Sequence[Request], *,
+            realtime: bool = True) -> List[CompletedRequest]:
+        """Serve ``requests`` to completion (open loop over ``arrival_s``;
+        ``realtime=False`` ignores arrival times — closed-loop saturation).
+        Returns the completed requests in retirement order."""
+        pending = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        pending = list(pending)
+        i = 0
+        t0 = time.perf_counter()
+        n_total = len(pending)
+        done0 = len(self.completed)
+        while len(self.completed) - done0 < n_total:
+            now = time.perf_counter() - t0
+            # slot refill: admit every arrived request into a free slot
+            while i < len(pending):
+                if realtime and pending[i].arrival_s > now:
+                    break
+                free = np.nonzero(~self.active)[0]
+                if not len(free):
+                    break
+                self._admit(pending[i], int(free[0]), now)
+                i += 1
+                now = time.perf_counter() - t0
+            if self.active.any():
+                self.step(time.perf_counter() - t0)
+            elif i < len(pending):
+                # open loop: idle until the next arrival
+                time.sleep(min(max(pending[i].arrival_s - now, 0.0), 0.01))
+        return self.completed[done0:]

@@ -1,0 +1,258 @@
+"""Serve-and-select: completed requests become a selection stream.
+
+The production story of the paper — live traffic is decoded, and Titan
+decides which of it is worth training on — needs exactly one new data-plane
+object: :class:`RequestStream`, a bounded queue of completed requests that
+implements :class:`repro.data.stream.StreamProtocol`. The continuous-
+batching loop (serve/loop.py) pushes every retired request into it; a
+``TitanEngine.run`` on another thread consumes fixed-size windows from it
+through the ordinary ``Prefetcher``. Backpressure is the existing fault
+taxonomy: when fewer than ``n`` requests have completed within
+``timeout_s``, ``next_window`` raises ``TransientStreamError`` and the
+prefetcher retries with backoff — selection waits for traffic instead of
+traffic waiting for selection (DESIGN.md §10).
+
+Zero-recompute scoring: each completed request carries the stage-1/stage-2
+statistics the decode loop already computed for sampling (logsumexp,
+entropy, sampled-token loss, last-layer hidden means, JL gradient sketch —
+the exact ``lm_sequence_stats`` estimators, accumulated token-by-token at
+decode time). They ride the window as ``sel_*`` columns, so the candidate
+buffer caches them for free, and :func:`serve_hooks` builds a
+``ModalityHooks`` whose features_fn/stats_fn just *read* those columns —
+no model forward. :func:`recompute_hooks` is the reference implementation
+of the same contract that re-runs the model; the equivalence test pins the
+two to the same selected ids under a deterministic policy.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import FatalStreamError, TransientStreamError
+from repro.hooks.base import ModalityHooks
+
+
+@dataclass
+class CompletedRequest:
+    """One retired request plus its decode-time selection statistics.
+
+    ``tokens`` is prompt + generated (length ``prompt_len + n_generated``).
+    The scored region is positions ``prompt_len-1 .. len(tokens)-2`` (each
+    position's label is the next token — every generated token was both a
+    sample and a label exactly once), so stats normalize over
+    ``n_generated`` positions, matching ``lm_sequence_stats``.
+    """
+    rid: int
+    domain: int
+    tokens: np.ndarray              # (P+G,) int32
+    prompt_len: int
+    stats: Dict[str, np.ndarray]    # loss/gnorm/entropy (), sketch (r²,),
+                                    # features (D,) — all fp32
+    arrival_s: float = 0.0
+    finish_s: float = 0.0
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+class RequestStream:
+    """StreamProtocol over completed requests (the serve→select seam).
+
+    Window layout (leading dim ``n``):
+      tokens (n,T) i32 zero-padded, labels (n,T) i32 (-1 outside the scored
+      region), domain (n,) i32, rid (n,) i32, and the cached decode-time
+      statistics ``sel_features`` (n,D), ``sel_loss``/``sel_gnorm``/
+      ``sel_entropy`` (n,), ``sel_sketch`` (n,r²) — the columns
+      :func:`serve_hooks` reads. Extra keys ride through the engine's
+      candidate buffer untouched and are ignored by ``model.loss_fn``.
+
+    Cursor contract: ``round`` counts delivered windows and ``seek`` assigns
+    it, so ``stream_cursor``/``seek_stream`` (crash-safe resume, PR 6) work
+    unchanged. The queue itself is consume-once: a resumed run replays the
+    *counter*, new traffic provides the data.
+
+    ``capacity`` bounds the queue; when full the oldest pending request is
+    dropped (counted in ``dropped`` — live traffic must never block on a
+    slow selector). ``close()`` wakes blocked consumers; a closed, drained
+    stream raises ``FatalStreamError`` (selection is over when traffic is).
+    """
+
+    def __init__(self, seq_len: int, feat_dim: int, sketch_dim: int = 16,
+                 *, capacity: int = 4096, timeout_s: float = 5.0):
+        self.seq_len = int(seq_len)
+        self.feat_dim = int(feat_dim)
+        self.sketch_dim = int(sketch_dim)
+        self.capacity = int(capacity)
+        self.timeout_s = float(timeout_s)
+        self.round = 0
+        self.pushed = 0
+        self.dropped = 0
+        self.delivered = 0
+        self._q: deque = deque()
+        self._closed = False
+        self._cond = threading.Condition()
+
+    # -- producer side (the serve loop) ------------------------------------
+
+    def push(self, req: CompletedRequest) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("RequestStream is closed")
+            self._q.append(req)
+            self.pushed += 1
+            if len(self._q) > self.capacity:
+                self._q.popleft()
+                self.dropped += 1
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+    # -- consumer side (Prefetcher / engine.run) ----------------------------
+
+    def next_window(self, n: int) -> Dict[str, np.ndarray]:
+        with self._cond:
+            ok = self._cond.wait_for(
+                lambda: len(self._q) >= n or self._closed,
+                timeout=self.timeout_s)
+            if len(self._q) < n:
+                if self._closed:
+                    raise FatalStreamError(
+                        f"RequestStream closed with {len(self._q)} pending "
+                        f"requests < window {n}")
+                assert not ok
+                raise TransientStreamError(
+                    f"serve backpressure: {len(self._q)} completed requests "
+                    f"< window {n} after {self.timeout_s}s")
+            reqs = [self._q.popleft() for _ in range(n)]
+            self.round += 1
+            self.delivered += n
+        return self._assemble(reqs)
+
+    def _assemble(self, reqs: List[CompletedRequest]) -> Dict[str, np.ndarray]:
+        n, T = len(reqs), self.seq_len
+        w = {
+            "tokens": np.zeros((n, T), np.int32),
+            "labels": np.full((n, T), -1, np.int32),
+            "domain": np.zeros((n,), np.int32),
+            "rid": np.zeros((n,), np.int32),
+            "sel_features": np.zeros((n, self.feat_dim), np.float32),
+            "sel_loss": np.zeros((n,), np.float32),
+            "sel_gnorm": np.zeros((n,), np.float32),
+            "sel_entropy": np.zeros((n,), np.float32),
+            "sel_sketch": np.zeros((n, self.sketch_dim ** 2), np.float32),
+        }
+        for i, r in enumerate(reqs):
+            toks = np.asarray(r.tokens, np.int32)[:T]
+            L = len(toks)
+            w["tokens"][i, :L] = toks
+            # labels[t] = tokens[t+1] on the scored region only, so a
+            # recompute over this window normalizes over the same
+            # n_generated positions the decode loop accumulated
+            lo = max(r.prompt_len - 1, 0)
+            w["labels"][i, lo:L - 1] = toks[lo + 1:L]
+            w["domain"][i] = r.domain
+            w["rid"][i] = r.rid
+            w["sel_features"][i] = r.stats["features"]
+            w["sel_loss"][i] = r.stats["loss"]
+            w["sel_gnorm"][i] = r.stats["gnorm"]
+            w["sel_entropy"][i] = r.stats["entropy"]
+            w["sel_sketch"][i] = r.stats["sketch"]
+        return w
+
+    def window_specs(self, n: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        T, D, r2 = self.seq_len, self.feat_dim, self.sketch_dim ** 2
+        return {"tokens": jax.ShapeDtypeStruct((n, T), np.int32),
+                "labels": jax.ShapeDtypeStruct((n, T), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32),
+                "rid": jax.ShapeDtypeStruct((n,), np.int32),
+                "sel_features": jax.ShapeDtypeStruct((n, D), np.float32),
+                "sel_loss": jax.ShapeDtypeStruct((n,), np.float32),
+                "sel_gnorm": jax.ShapeDtypeStruct((n,), np.float32),
+                "sel_entropy": jax.ShapeDtypeStruct((n,), np.float32),
+                "sel_sketch": jax.ShapeDtypeStruct((n, r2), np.float32)}
+
+    def seek(self, round) -> None:
+        """Restore the delivered-window counter (checkpoint resume)."""
+        self.round = int(round)
+
+    def health_counters(self) -> Dict[str, float]:
+        """Data-plane health the engine exports with its metrics."""
+        with self._cond:
+            return {"titan_serve_pushed": self.pushed,
+                    "titan_serve_dropped": self.dropped,
+                    "titan_serve_pending": len(self._q)}
+
+
+# ---------------------------------------------------------------------------
+# Hooks: cached decode-time statistics vs the recompute reference
+# ---------------------------------------------------------------------------
+
+def serve_hooks() -> ModalityHooks:
+    """Zero-recompute ModalityHooks over RequestStream windows.
+
+    features_fn/stats_fn read the ``sel_*`` columns the decode loop cached —
+    no model forward, no logits. The feature contract differs from
+    ``lm_hooks`` (which runs a shallow-block forward): serve features are
+    the mean *final* hidden over the scored positions, because that vector
+    already exists at decode time. Same (N,D) fp32 shape, same downstream
+    use; :func:`recompute_hooks` is the from-scratch reference.
+    """
+    def features_fn(params, ex):
+        return ex["sel_features"].astype(jnp.float32)
+
+    def stats_fn(params, ex):
+        return {"loss": ex["sel_loss"].astype(jnp.float32),
+                "gnorm": ex["sel_gnorm"].astype(jnp.float32),
+                "entropy": ex["sel_entropy"].astype(jnp.float32),
+                "sketch": ex["sel_sketch"].astype(jnp.float32)}
+
+    return ModalityHooks(features_fn, stats_fn, name="serve-cached")
+
+
+def recompute_hooks(model, cfg, *, impl: Optional[str] = None
+                    ) -> ModalityHooks:
+    """Reference hooks: recompute the serve feature/stat contract from the
+    request tokens with a fresh forward pass.
+
+    Stats are ``lm_sequence_stats`` over ``model.final_hidden`` (identical
+    estimator, default sketch key — the decode loop uses the same
+    ``sketch_matrices(PRNGKey(0), V, D, r)``); features are the masked mean
+    of the final hidden over label-valid positions. Used by the equivalence
+    test and as the fallback when a stream carries no ``sel_*`` columns.
+    """
+    from repro.core.importance import lm_sequence_stats
+    impl = cfg.score_impl if impl is None else impl
+
+    def _mask(ex):
+        return (ex["labels"] >= 0).astype(jnp.float32)
+
+    def features_fn(params, ex):
+        h = model.final_hidden(params, {"tokens": ex["tokens"]})
+        m = _mask(ex)
+        denom = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+        return (jnp.sum(h.astype(jnp.float32) * m[..., None], axis=1)
+                / denom)
+
+    def stats_fn(params, ex):
+        h = model.final_hidden(params, {"tokens": ex["tokens"]})
+        return lm_sequence_stats(model.cfg, params, h, ex["labels"],
+                                 sketch_dim=cfg.sketch_dim, impl=impl,
+                                 n_block=cfg.score_n_block,
+                                 v_block=cfg.score_v_block,
+                                 d_block=cfg.score_d_block)
+
+    return ModalityHooks(features_fn, stats_fn, name="serve-recompute")

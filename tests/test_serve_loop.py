@@ -1,0 +1,300 @@
+"""Continuous-batching serve loop: batching parity vs sequential decode,
+slot refill, retirement, RequestStream backpressure + cursor contract, and
+the engine.run data-plane health counters (DESIGN.md §10)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TitanConfig, get_config, replace
+from repro.core.engine import TitanEngine
+from repro.data.loader import (Prefetcher, StreamExhausted,
+                               TransientStreamError)
+from repro.data.stream import SyntheticLMStream, seek_stream, stream_cursor
+from repro.ft.elastic import StragglerGuard
+from repro.models.model import build_model
+from repro.serve import (CompletedRequest, Request, RequestStream, ServeLoop,
+                         TrafficGen, serve_hooks)
+from repro.serve.cache import init_cache
+
+
+def _model(arch="qwen1.5-32b"):
+    cfg = replace(get_config(arch + "-reduced"), param_dtype="float32")
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _ref_generate(cfg, model, params, req, max_seq):
+    """Sequential single-request greedy decode (the no-batching oracle)."""
+    toks = list(np.asarray(req.prompt))
+    lg, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(np.asarray(toks, np.int32))[None]})
+    dc = init_cache(cfg, 1, max_seq)
+    rolling = cfg.family == "hybrid"   # validity counts from the buffer END
+
+    def pad(dst, src):
+        pad_w = [(0, 0)] * src.ndim
+        for ax in range(src.ndim):
+            if dst.shape[ax] != src.shape[ax]:
+                d = dst.shape[ax] - src.shape[ax]
+                pad_w[ax] = (d, 0) if rolling else (0, d)
+        return jnp.pad(src, pad_w).astype(dst.dtype)
+    dc = jax.tree.map(pad, dc, cache)
+    y = int(jnp.argmax(lg[0]))
+    toks.append(y)
+    step = jax.jit(model.decode_step)
+    for _ in range(req.max_new_tokens - 1):
+        lg, dc = step(params, dc,
+                      {"token": jnp.asarray([y], jnp.int32),
+                       "pos": jnp.asarray([len(toks) - 1], jnp.int32)})
+        y = int(jnp.argmax(lg[0]))
+        toks.append(y)
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-32b", "recurrentgemma-2b"])
+def test_continuous_batching_matches_sequential(arch):
+    """Staggered admissions + slot refill must not perturb any request's
+    greedy completion: every row decodes exactly as a B=1 loop would."""
+    cfg, model, params = _model(arch)
+    S = 28
+    tg = TrafficGen(vocab=cfg.vocab, n_domains=4, prompt_lens=(5, 8, 11),
+                    max_new_tokens=7, seed=3)
+    reqs = tg.requests(7)
+    loop = ServeLoop(model, params, max_batch=3, max_seq=S, sketch_dim=8)
+    done = loop.run(reqs, realtime=False)
+    assert len(done) == len(reqs)
+    assert loop.active.sum() == 0
+    by_rid = {d.rid: d for d in done}
+    for req in reqs:
+        ref = _ref_generate(cfg, model, params, req, S)
+        got = list(by_rid[req.rid].tokens)
+        assert got == ref, f"rid {req.rid}: batched {got} != sequential {ref}"
+        assert by_rid[req.rid].prompt_len == len(req.prompt)
+
+
+def test_slot_refill_and_retirement():
+    """More requests than slots: the loop must refill freed slots (mean
+    occupancy > 1 slot) and retire by max_new_tokens and by max_seq."""
+    cfg, model, params = _model()
+    loop = ServeLoop(model, params, max_batch=2, max_seq=16, sketch_dim=4)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                    max_new_tokens=5) for i in range(5)]
+    # one request that can only stop at the cache-capacity wall
+    reqs.append(Request(rid=99, prompt=np.arange(6, dtype=np.int32),
+                        max_new_tokens=10))
+    done = loop.run(reqs, realtime=False)
+    assert len(done) == 6
+    by_rid = {d.rid: d for d in done}
+    for i in range(5):
+        assert len(by_rid[i].tokens) == 4 + 5
+    assert len(by_rid[99].tokens) == 16            # hit max_seq
+    assert loop.occupancy_sum / loop.ticks > 1.0   # slots actually refilled
+
+
+def test_eos_retirement():
+    """A sampled eos_id retires the request early (here: at admission,
+    when the prefill position samples eos as the first generated token)."""
+    cfg, model, params = _model()
+    probe = ServeLoop(model, params, max_batch=1, max_seq=32, sketch_dim=4)
+    req = Request(rid=0, prompt=np.arange(8, dtype=np.int32),
+                  max_new_tokens=12)
+    full = probe.run([req], realtime=False)[0]
+    assert len(full.tokens) == full.prompt_len + 12
+    eos = int(full.tokens[full.prompt_len])        # 1st generated token
+    loop = ServeLoop(model, params, max_batch=1, max_seq=32, sketch_dim=4,
+                     eos_id=eos)
+    done = loop.run([Request(rid=1, prompt=req.prompt,
+                             max_new_tokens=12)], realtime=False)[0]
+    assert len(done.tokens) == full.prompt_len + 1
+    assert int(done.tokens[-1]) == eos
+
+
+def test_admission_rejects_oversized_request():
+    cfg, model, params = _model()
+    loop = ServeLoop(model, params, max_batch=1, max_seq=16, sketch_dim=4)
+    bad = Request(rid=0, prompt=np.arange(10, dtype=np.int32),
+                  max_new_tokens=10)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        loop.run([bad], realtime=False)
+
+
+def test_open_loop_arrivals_are_seeded():
+    tg = TrafficGen(vocab=64, n_domains=2, rps=100.0, seed=7)
+    a = tg.requests(10)
+    b = tg.requests(10)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert all(x.arrival_s < y.arrival_s for x, y in zip(a, a[1:]))
+    assert [list(x.prompt) for x in a] == [list(y.prompt) for y in b]
+
+
+# ---------------------------------------------------------------------------
+# RequestStream: StreamProtocol conformance, backpressure, cursor
+# ---------------------------------------------------------------------------
+
+def _fake_done(rid, T=12, P=4, D=8, r=2):
+    toks = np.arange(P + 3, dtype=np.int32) % 50
+    return CompletedRequest(
+        rid=rid, domain=rid % 3, tokens=toks, prompt_len=P,
+        stats={"loss": np.float32(rid), "gnorm": np.float32(0.5),
+               "entropy": np.float32(1.0),
+               "sketch": np.zeros((r * r,), np.float32),
+               "features": np.zeros((D,), np.float32)})
+
+
+def test_request_stream_window_contract():
+    rs = RequestStream(seq_len=12, feat_dim=8, sketch_dim=2, timeout_s=0.05)
+    for i in range(5):
+        rs.push(_fake_done(i))
+    w = rs.next_window(4)
+    specs = rs.window_specs(4)
+    assert set(w) == set(specs)
+    for k, v in w.items():
+        assert v.shape == specs[k].shape and v.dtype == specs[k].dtype
+    # labels: next-token on the scored region [P-1, L-2], -1 elsewhere
+    assert w["labels"][0, 3] == w["tokens"][0, 4]
+    assert (w["labels"][0, :3] == -1).all()
+    assert (w["labels"][0, 6:] == -1).all()
+    assert list(w["rid"]) == [0, 1, 2, 3]
+    # backpressure: not enough completed requests within the timeout
+    with pytest.raises(TransientStreamError):
+        rs.next_window(4)
+
+
+def test_request_stream_backpressure_through_prefetcher():
+    """The Prefetcher's transient-retry path IS the serve backpressure:
+    a late producer shows up as retries, not as an error."""
+    rs = RequestStream(seq_len=12, feat_dim=8, sketch_dim=2, timeout_s=0.02)
+
+    def feed():
+        for i in range(6):
+            rs.push(_fake_done(i))
+    t = threading.Timer(0.15, feed)
+    t.start()
+    with Prefetcher(rs, 3, depth=1, rounds=2, retries=50,
+                    backoff_s=0.02, max_backoff_s=0.05) as pf:
+        w1, w2 = pf.get(), pf.get()
+        with pytest.raises(StreamExhausted):
+            pf.get()
+        assert pf.retried >= 1
+    t.join()
+    assert list(np.asarray(w1["rid"])) == [0, 1, 2]
+    assert list(np.asarray(w2["rid"])) == [3, 4, 5]
+
+
+def test_request_stream_cursor_and_capacity():
+    rs = RequestStream(seq_len=12, feat_dim=8, sketch_dim=2, timeout_s=0.01,
+                       capacity=3)
+    for i in range(5):
+        rs.push(_fake_done(i))
+    assert rs.dropped == 2 and len(rs) == 3
+    rs.next_window(3)
+    assert stream_cursor(rs) == 1
+    seek_stream(rs, 7)
+    assert rs.round == 7
+    h = rs.health_counters()
+    assert h["titan_serve_dropped"] == 2 and h["titan_serve_pushed"] == 5
+
+
+def test_request_stream_close_is_fatal():
+    from repro.data.loader import FatalStreamError
+    rs = RequestStream(seq_len=12, feat_dim=8, sketch_dim=2, timeout_s=0.01)
+    rs.push(_fake_done(0))
+    rs.close()
+    with pytest.raises(FatalStreamError):
+        rs.next_window(2)      # closed with fewer pending than requested
+
+
+# ---------------------------------------------------------------------------
+# engine.run data-plane health counters (satellite: observability)
+# ---------------------------------------------------------------------------
+
+class _FlakyWrapper:
+    """Transient fault injector ABOVE the guard: every other fetch raises,
+    so the Prefetcher's retry path (not the guard's substitution path)
+    absorbs the fault."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.calls = 0
+
+    def next_window(self, n):
+        self.calls += 1
+        if self.calls % 2 == 0:
+            raise TransientStreamError("injected hiccup")
+        return self.stream.next_window(n)
+
+    def window_specs(self, n):
+        return self.stream.window_specs(n)
+
+
+def _identity_step(s, b):
+    return s, {"loss": jnp.zeros(())}
+
+
+def test_engine_metrics_surface_data_plane_health():
+    cfg, model, params = _model()
+    guard = StragglerGuard(
+        SyntheticLMStream(vocab=cfg.vocab, seq_len=16,
+                          n_domains=cfg.n_domains, seed=0),
+        deadline_s=30.0)
+    flaky = _FlakyWrapper(guard)
+    ttn = replace(TitanConfig(), policy="ll", stream_ratio=2, buffer_ratio=2)
+    eng = TitanEngine.from_config(ttn, model, train_step_fn=_identity_step,
+                                  batch_size=2)
+    w0 = {k: jnp.asarray(v) for k, v in
+          flaky.next_window(eng.window_size).items()}
+    st = eng.init(jax.random.PRNGKey(1), params, w0)
+    seen = []
+    st, last = eng.run(st, flaky, rounds=4, prefetch=1,
+                       on_metrics=lambda r, h: seen.append((r, dict(h))))
+    guard.close()
+    assert len(seen) == 4
+    for _, h in seen:
+        # Prefetcher counters + StragglerGuard goodput, on every drain
+        assert {"titan_data_retried", "titan_data_leaked",
+                "titan_data_goodput", "titan_data_discarded",
+                "titan_data_substituted"} <= set(h)
+    # the injected transients were retried through — the counter advanced
+    assert seen[-1][1]["titan_data_retried"] >= 1
+    assert last["titan_data_retried"] >= 1
+    assert last["titan_data_leaked"] == 0
+    assert seen[-1][1]["titan_data_substituted"] == 0
+    assert 0.0 <= seen[-1][1]["titan_data_goodput"] <= 1.0
+
+
+def test_engine_metrics_health_on_final_fetch_path():
+    """metrics_every=0 (no per-round readback) still exports the counters
+    on the final metrics dict, and a RequestStream's own health_counters()
+    ride along."""
+    cfg, model, params = _model()
+    ttn = replace(TitanConfig(), policy="ll", stream_ratio=2, buffer_ratio=2,
+                  sketch_dim=4)
+    eng = TitanEngine.from_config(ttn, model, hooks=serve_hooks(),
+                                  train_step_fn=_identity_step, batch_size=2,
+                                  n_classes=cfg.n_domains)
+    rs = RequestStream(seq_len=16, feat_dim=cfg.d_model, sketch_dim=4,
+                       timeout_s=2.0)
+    for i in range(3 * eng.window_size):
+        rs.push(_fake_done(i, T=16, D=cfg.d_model, r=4))
+    w0 = {k: jnp.asarray(v) for k, v in
+          rs.next_window(eng.window_size).items()}
+    st = eng.init(jax.random.PRNGKey(1), params, w0)
+    st, last = eng.run(st, rs, rounds=2, metrics_every=0)
+    assert last["titan_data_retried"] == 0
+    assert last["titan_serve_pushed"] == 3 * eng.window_size
+    assert last["titan_serve_pending"] == 0
+
+
+def test_serve_cli_smoke(capsys):
+    from repro.launch import serve as serve_cli
+    done = serve_cli.main(["--arch", "qwen1.5-32b-reduced", "--requests",
+                           "8", "--max-batch", "4", "--max-seq", "24",
+                           "--gen-len", "6", "--prompt-lens", "6",
+                           "--batch", "2", "--stream-ratio", "2",
+                           "--no-train"])
+    out = capsys.readouterr().out
+    assert len(done) == 8
+    assert "req/s" in out and "p99" in out and "selection rounds" in out
