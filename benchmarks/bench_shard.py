@@ -1,35 +1,45 @@
 """Sharded-engine scaling benchmark: rounds/sec of the full Titan round
-(stage-1 filter, admission, stage-2 C-IS, train step) on a ``(data, 1)``
-mesh at data ∈ {1, 2, 4} forced host devices, plus the int8-vs-fp32
-data-parallel all-reduce payload per round (DESIGN.md §8).
+(stage-1 filter, admission, stage-2 selection, train step) on a
+``(data, 1)`` mesh at data ∈ {1, 2, 4} forced host devices, plus the wire
+accounting for both the gradient all-reduce (int8 vs fp32) and the
+selection collective (two-phase pool all-gather vs the ppermute merge
+tournament) — DESIGN.md §8.
 
 Every device count runs in its own subprocess because
 ``--xla_force_host_platform_device_count`` must be set before the first jax
 import. ``data_shards=1`` is the ``mesh=None`` single-device engine — the
-baseline the speedups are normalized to. Two rates per lane:
+baseline the speedups are normalized to. Lanes per child (all interleaved
+per rep in ONE process, so paired ratios see the same cgroup/throttle
+weather):
 
-- ``rounds_per_sec`` — ``engine.step`` over pre-staged sharded windows: the
-  device-side round, i.e. what the sharded data plane itself costs/buys.
-  This is the gated number: the 2-shard run must keep >= 0.9x the
-  single-device rate (the forced host "devices" split the same cores, so
-  the sharded plane can at best break even on compute here — what the gate
-  bounds is its collective + partitioning overhead).
-- ``rounds_per_sec_e2e`` — ``engine.run`` with the prefetching data plane.
-  CAVEAT: this emulates the whole fleet's window generation on ONE host
-  (``ShardedStream`` draws every shard's slice serially, ``host_window_ms``
-  records that cost), so on a 2-core box it under-reports the sharded lane
-  — production gives every data shard its own host process that draws only
-  its own slice. Recorded for visibility, not gated.
+- titan-cis, single device — the baseline.
+- titan-cis on the mesh (two-phase top-k; sampling policies cannot run the
+  tournament). ``rounds_per_sec`` / ``speedup_vs_single`` gate this lane.
+- hl, single device — baseline for the deterministic-top-k lane.
+- hl on the mesh with ``dist_topk="tournament"`` and the overlapped
+  select→train round split — the positive-scaling configuration
+  (``tournament.speedup_vs_single``).
 
-Lanes interleave per rep and speedups are medians of paired per-rep ratios
-(the bench_pipeline protocol — cancels shared-box drift). Real scaling
-needs real chips; the payload table records what the int8 compressed
-all-reduce (dist/collectives) saves on the wire either way.
+Two rates per lane: ``rounds_per_sec`` (``engine.step`` /-equivalent over
+pre-staged sharded windows — the device-side round) and
+``rounds_per_sec_e2e`` (``engine.run`` with the prefetching data plane).
+``stage_ms`` breaks the overlapped round into its segments (select
+collective vs train matmuls, timed blocked — the ceiling the overlap can
+hide) and the host plane into serial vs worker-pool window production.
+
+CAVEAT (recorded in the JSON as ``cores``): forced host devices and the
+prefetch worker pool all split the same physical cores. On a box with
+fewer cores than shards the sharded lanes can at best break even on
+compute — the speedup numbers then bound the *overhead* of the sharded
+plane, not its scaling; positive scaling needs >= one core per shard (the
+CI gates in tests/test_bench_smoke.py are conditioned on ``cores``
+accordingly). The payload tables are analytic and hold on any topology.
 
     PYTHONPATH=src python -m benchmarks.bench_shard            # full
-    PYTHONPATH=src python -m benchmarks.bench_shard --smoke    # quick
+    PYTHONPATH=src python -m benchmarks.bench_shard --smoke    # quick 1+2
+    PYTHONPATH=src python -m benchmarks.bench_shard --smoke4   # quick 1+4
 
-Writes ``BENCH_shard.json`` (schema ``bench_shard/v1``).
+Writes ``BENCH_shard.json`` (schema ``bench_shard/v2``).
 """
 from __future__ import annotations
 
@@ -38,14 +48,14 @@ import os
 import statistics
 import subprocess
 import sys
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
-# workload: HAR-style MLP + titan-cis, buffer and window sized to divide
-# over every data-axis width benchmarked. Sized so the row-parallel work
-# (window features, buffer stage-2 stats, fwd/bwd) dominates the fixed
-# per-round collective cost — the regime the sharded plane is for; at toy
-# sizes the emulated host-device collectives dominate and every ratio just
-# measures rendezvous overhead
+# workload: HAR-style MLP, buffer and window sized to divide over every
+# data-axis width benchmarked. Sized so the row-parallel work (window
+# features, buffer stage-2 stats, fwd/bwd) dominates the fixed per-round
+# collective cost — the regime the sharded plane is for; at toy sizes the
+# emulated host-device collectives dominate and every ratio just measures
+# rendezvous overhead
 IN_DIM, HIDDEN, C = 128, (1024, 512), 8
 B, SR, BR = 32, 8, 24           # window 256, buffer 768
 
@@ -54,18 +64,15 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def _child(data_shards: int, rounds: int, reps: int) -> None:
     """Runs in a subprocess with the forced device count already in
-    XLA_FLAGS. BOTH lanes — the mesh=None single-device baseline and the
-    (data_shards, 1) mesh engine — run in THIS process, strictly
-    interleaved per rep, so the paired ratios see the same cgroup/throttle
-    weather; a lane-per-process comparison on a CPU-quota'd CI box is
-    dominated by when the quota window happens to reset. Prints one JSON
-    line with median rates and paired-median speedups."""
+    XLA_FLAGS. Prints one JSON line with median rates, paired-median
+    speedups, and the per-stage breakdown."""
     import time
 
     import jax
 
     from repro.configs.base import TitanConfig
-    from repro.core.engine import TitanEngine
+    from repro.core.engine import EngineState, TitanEngine
+    from repro.data.loader import Prefetcher
     from repro.data.stream import GaussianMixtureStream, ShardedStream
     from repro.dist.sharding import data_sharding
     from repro.hooks import har_hooks
@@ -76,7 +83,24 @@ def _child(data_shards: int, rounds: int, reps: int) -> None:
     ecfg = EdgeMLPConfig(in_dim=IN_DIM, hidden=HIDDEN, n_classes=C)
     params = mlp_init(ecfg, jax.random.PRNGKey(0))
 
-    def make_lane(mesh):
+    def mk_stream():
+        return ShardedStream.make(
+            lambda shard, num_shards: GaussianMixtureStream(
+                in_dim=IN_DIM, n_classes=C, seed=1, shard=shard,
+                num_shards=num_shards), max(S, 1))
+
+    def one_round(eng, st, w):
+        """The lane's actual steady-state round: the fused step, or the
+        overlapped select→train split when the engine runs it."""
+        if not eng.overlap:
+            return eng.step(st, w)
+        sel = (st.buffer, st.policy, st.rng, st.t)
+        (buf, pol, rng, t), nb, sm = eng._select_step(st.train, sel, w)
+        ntr, tm = eng._train_step(st.train, st.next_batch)
+        return EngineState(train=ntr, policy=pol, buffer=buf, next_batch=nb,
+                           rng=rng, t=t, sel_mask=None), {**tm, **sm}
+
+    def make_lane(mesh, policy="titan-cis", **cfg_kw):
         def train(p, b):
             loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
             if mesh is not None:
@@ -84,14 +108,12 @@ def _child(data_shards: int, rounds: int, reps: int) -> None:
             return (jax.tree.map(lambda a, gg: a - 0.1 * gg, p, g),
                     {"loss": loss})
 
-        tcfg = TitanConfig(stream_ratio=SR, buffer_ratio=BR)
+        tcfg = TitanConfig(policy=policy, stream_ratio=SR, buffer_ratio=BR,
+                           **cfg_kw)
         engine = TitanEngine.from_config(
             tcfg, hooks=har_hooks(ecfg), train_step_fn=train,
             params_of=lambda s: s, batch_size=B, n_classes=C, mesh=mesh)
-        stream = ShardedStream.make(
-            lambda shard, num_shards: GaussianMixtureStream(
-                in_dim=IN_DIM, n_classes=C, seed=1, shard=shard,
-                num_shards=num_shards), max(S, 1))
+        stream = mk_stream()
         w0 = stream.next_window(engine.window_size)
         state = engine.init(jax.random.PRNGKey(1), params, w0)
         state, m = engine.run(state, stream, 3, prefetch=2,
@@ -99,18 +121,26 @@ def _child(data_shards: int, rounds: int, reps: int) -> None:
         dev = data_sharding(mesh) if mesh is not None else None
         ws = [jax.device_put(stream.next_window(engine.window_size), dev)
               for _ in range(4)]
+        # warm the overlap programs too (one_round compiles on first call)
+        state, m = one_round(engine, state, ws[0])
+        jax.block_until_ready(m["loss"])
         return {"engine": engine, "stream": stream, "state": state,
                 "ws": ws, "step": [], "e2e": []}
 
-    lanes = [make_lane(None)]
+    lanes = {"cis1": make_lane(None)}
     if S > 1:
-        lanes.append(make_lane(make_engine_mesh(S, 1)))
+        lanes["cisS"] = make_lane(make_engine_mesh(S, 1))
+        lanes["hl1"] = make_lane(None, policy="hl")
+        lanes["hlS"] = make_lane(make_engine_mesh(S, 1), policy="hl",
+                                 dist_topk="tournament")
+        assert lanes["hlS"]["engine"].tournament
     for _ in range(reps):
-        for lane in lanes:                     # interleaved: paired weather
+        for lane in lanes.values():            # interleaved: paired weather
             eng, ws = lane["engine"], lane["ws"]
             t0 = time.perf_counter()
             for i in range(rounds):
-                lane["state"], m = eng.step(lane["state"], ws[i % len(ws)])
+                lane["state"], m = one_round(eng, lane["state"],
+                                             ws[i % len(ws)])
             jax.block_until_ready(m["loss"])
             lane["step"].append(rounds / (time.perf_counter() - t0))
             t0 = time.perf_counter()
@@ -119,21 +149,70 @@ def _child(data_shards: int, rounds: int, reps: int) -> None:
             jax.block_until_ready(m["loss"])
             lane["e2e"].append(rounds / (time.perf_counter() - t0))
 
-    def paired(key):
-        r = sorted(a / b for a, b in zip(lanes[-1][key], lanes[0][key]))
+    def paired(a: str, b: str, key: str) -> float:
+        r = sorted(x / y for x, y in zip(lanes[a][key], lanes[b][key]))
         return r[len(r) // 2]
 
+    # -- per-stage breakdown -------------------------------------------------
+    stage_ms: Dict[str, float] = {}
     t0 = time.perf_counter()
     for _ in range(10):
-        lanes[-1]["stream"].next_window(lanes[-1]["engine"].window_size)
-    print(json.dumps({
+        lanes["cis1"]["stream"].next_window(B * SR)
+    stage_ms["host_serial"] = (time.perf_counter() - t0) * 100.0
+    if S > 1:
+        # the worker pool producing the same windows (includes staging)
+        t0 = time.perf_counter()
+        with Prefetcher(mk_stream(), B * SR, depth=2, workers=S) as pf:
+            for _ in range(10):
+                pf.get()
+        stage_ms["host_pool"] = (time.perf_counter() - t0) * 100.0
+        # overlapped segments timed BLOCKED, separately: what each stage
+        # costs alone, i.e. the ceiling the dispatch overlap can hide
+        eng = lanes["hlS"]["engine"]
+        st, ws = lanes["hlS"]["state"], lanes["hlS"]["ws"]
+        sel_s = tr_s = 0.0
+        iters = max(rounds // 2, 4)
+        for i in range(iters):
+            sel = (st.buffer, st.policy, st.rng, st.t)
+            t0 = time.perf_counter()
+            out = eng._select_step(st.train, sel, ws[i % len(ws)])
+            jax.block_until_ready(out)
+            t1 = time.perf_counter()
+            ntr, _tm = eng._train_step(st.train, st.next_batch)
+            jax.block_until_ready(ntr)
+            tr_s += time.perf_counter() - t1
+            sel_s += t1 - t0
+            (buf, pol, rng, t), nb, _sm = out
+            st = EngineState(train=ntr, policy=pol, buffer=buf,
+                             next_batch=nb, rng=rng, t=t, sel_mask=None)
+        lanes["hlS"]["state"] = st
+        stage_ms["select"] = sel_s / iters * 1e3
+        stage_ms["train"] = tr_s / iters * 1e3
+
+    row = {
         "data_shards": S,
-        "rounds_per_sec": statistics.median(lanes[-1]["step"]),
-        "rounds_per_sec_e2e": statistics.median(lanes[-1]["e2e"]),
-        "baseline_rounds_per_sec": statistics.median(lanes[0]["step"]),
-        "speedup_vs_single": paired("step"),
-        "speedup_vs_single_e2e": paired("e2e"),
-        "host_window_ms": (time.perf_counter() - t0) * 100.0}))
+        "rounds_per_sec": statistics.median(
+            lanes.get("cisS", lanes["cis1"])["step"]),
+        "rounds_per_sec_e2e": statistics.median(
+            lanes.get("cisS", lanes["cis1"])["e2e"]),
+        "baseline_rounds_per_sec": statistics.median(lanes["cis1"]["step"]),
+        "speedup_vs_single": (paired("cisS", "cis1", "step")
+                              if S > 1 else 1.0),
+        "speedup_vs_single_e2e": (paired("cisS", "cis1", "e2e")
+                                  if S > 1 else 1.0),
+        "stage_ms": stage_ms,
+        "host_window_ms": stage_ms["host_serial"],   # v1-compat alias
+    }
+    if S > 1:
+        row["tournament"] = {
+            "rounds_per_sec": statistics.median(lanes["hlS"]["step"]),
+            "rounds_per_sec_e2e": statistics.median(lanes["hlS"]["e2e"]),
+            "baseline_rounds_per_sec": statistics.median(
+                lanes["hl1"]["step"]),
+            "speedup_vs_single": paired("hlS", "hl1", "step"),
+            "speedup_vs_single_e2e": paired("hlS", "hl1", "e2e"),
+        }
+    print(json.dumps(row))
 
 
 def _run_child(data_shards: int, rounds: int, reps: int) -> Dict:
@@ -147,7 +226,7 @@ def _run_child(data_shards: int, rounds: int, reps: int) -> Dict:
     r = subprocess.run(
         [sys.executable, "-m", "benchmarks.bench_shard", "--child",
          str(data_shards), str(rounds), str(reps)],
-        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1200)
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800)
     if r.returncode != 0:
         raise RuntimeError(f"bench_shard child (S={data_shards}) failed:\n"
                            f"{r.stderr[-3000:]}")
@@ -172,29 +251,72 @@ def _payload() -> Dict:
             "ratio": fp32 / int8}
 
 
-def main(smoke: bool = False, json_path: str = "BENCH_shard.json") -> Dict:
-    shards = (1, 2) if smoke else (1, 2, 4)
-    rounds = 14 if smoke else 24
+def _select_payload() -> List[Dict]:
+    """Per-round, per-shard receive payload of the distributed top-k, for
+    the bench workload's candidate rows (analytic): the two-phase pool
+    all-gather ships (S-1)·k_prop rows of examples + stats + validity,
+    the tournament ships B example rows (+ score/pos) per log2(S) merge —
+    why selection traffic stops scaling with the shard count."""
+    import jax
+    import numpy as np
+
+    from repro.dist.collectives import (candidate_row_bytes,
+                                        tournament_payload_bytes,
+                                        twophase_payload_bytes)
+
+    ex = {"x": jax.ShapeDtypeStruct((1, IN_DIM), np.float32),
+          "y": jax.ShapeDtypeStruct((1,), np.int32),
+          "domain": jax.ShapeDtypeStruct((1,), np.int32)}
+    stats = {"domain": jax.ShapeDtypeStruct((1,), np.int32),
+             "loss": jax.ShapeDtypeStruct((1,), np.float32)}
+    ex_row = candidate_row_bytes(ex)
+    two_row = ex_row + candidate_row_bytes(stats) + 1   # + ok flag
+    rows = []
+    for S in (2, 4, 8, 16):
+        k_prop = min(B, B * BR // S)
+        two = twophase_payload_bytes(two_row, k_prop, S)
+        trn = tournament_payload_bytes(ex_row, B, S)
+        rows.append({"data_shards": S, "k_prop": k_prop,
+                     "two_phase_bytes": two, "tournament_bytes": trn,
+                     "ratio": two / trn})
+    return rows
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_shard.json",
+         shards: Optional[Tuple[int, ...]] = None) -> Dict:
+    if shards is None:
+        shards = (1, 2) if smoke else (1, 2, 4)
+    rounds = 12 if smoke else 24
     reps = 3 if smoke else 5
     rows: List[Dict] = [_run_child(s, rounds, reps) for s in shards]
-    payload = {"schema": "bench_shard/v1", "smoke": smoke,
+    payload = {"schema": "bench_shard/v2", "smoke": smoke,
+               "cores": os.cpu_count(),
                "workload": {"batch": B, "window": B * SR, "buffer": B * BR,
                             "in_dim": IN_DIM, "hidden": list(HIDDEN),
-                            "classes": C, "policy": "titan-cis",
+                            "classes": C,
+                            "policies": ["titan-cis", "hl"],
                             "rounds": rounds, "reps": reps},
-               "scaling": rows, "allreduce": _payload()}
+               "scaling": rows, "allreduce": _payload(),
+               "select_payload": _select_payload()}
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=1)
+    print(f"cores={payload['cores']}")
     print(f"{'data':>6} {'step r/s':>10} {'vs 1-dev':>9} "
-          f"{'e2e r/s':>9} {'vs 1-dev':>9}")
+          f"{'e2e r/s':>9} {'vs 1-dev':>9} {'trn vs 1':>9}")
     for r in rows:
+        t = r.get("tournament")
         print(f"{r['data_shards']:>6} {r['rounds_per_sec']:>10.2f} "
               f"{r['speedup_vs_single']:>8.2f}x "
               f"{r['rounds_per_sec_e2e']:>9.2f} "
-              f"{r['speedup_vs_single_e2e']:>8.2f}x")
+              f"{r['speedup_vs_single_e2e']:>8.2f}x "
+              + (f"{t['speedup_vs_single']:>8.2f}x" if t else f"{'—':>9}"))
     ar = payload["allreduce"]
     print(f"all-reduce payload/round: fp32 {ar['fp32_bytes']:,} B -> "
           f"int8 {ar['int8_bytes']:,} B ({ar['ratio']:.2f}x smaller)")
+    for sp in payload["select_payload"]:
+        print(f"select payload S={sp['data_shards']:>2}: two-phase "
+              f"{sp['two_phase_bytes']:,} B -> tournament "
+              f"{sp['tournament_bytes']:,} B ({sp['ratio']:.1f}x smaller)")
     print(f"wrote {json_path}")
     return payload
 
@@ -205,4 +327,5 @@ if __name__ == "__main__":
         _child(int(sys.argv[i + 1]), int(sys.argv[i + 2]),
                int(sys.argv[i + 3]))
     else:
-        main(smoke="--smoke" in sys.argv)
+        main(smoke="--smoke" in sys.argv or "--smoke4" in sys.argv,
+             shards=(1, 4) if "--smoke4" in sys.argv else None)

@@ -274,6 +274,26 @@ class TitanConfig:
     admit_impl: str = "auto"      # prefix-compaction kernel impl for the
                                   # scatter-admission plan:
                                   # auto|pallas|interpret|ref
+    # --- sharded selection plane (DESIGN.md §8) ---
+    dist_topk: str = "auto"       # cross-shard stage-2 top-k on a data mesh:
+                                  # "two_phase" = propose k·S candidates and
+                                  # all-gather the whole pool (any policy);
+                                  # "tournament" = log2(S) pairwise ppermute
+                                  # merges shipping only B survivors per
+                                  # round (payload flat in shard count) —
+                                  # exact for deterministic-top-k policies
+                                  # (ll/hl/ce), rejected otherwise; "auto" =
+                                  # tournament whenever the policy supports
+                                  # it and the data axis is a power of two
+    overlap_select: bool = True   # on a mesh, split the fused round into a
+                                  # selection segment dispatched BEFORE the
+                                  # train segment so the selection
+                                  # collectives overlap the train matmuls
+                                  # (§3.4 one-round delay makes the segments
+                                  # independent); value-identical to the
+                                  # fused step. Forced off by
+                                  # nonfinite_guard, whose rollback couples
+                                  # the segments
     # --- fault tolerance (DESIGN.md §9) ---
     nonfinite_guard: bool = False  # post-step NaN/inf guard: roll the train
                                   # update back to last-known-good on a

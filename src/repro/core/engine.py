@@ -47,7 +47,7 @@ from repro.core.filter import (AGE_MAX, AGE_UNSCORED, NEG, buffer_admit,
                                init_stats_cache)
 from repro.core.registry import PolicySpecs, SelectionPolicy, get_policy
 from repro.data.loader import Prefetcher
-from repro.dist.collectives import replicate_metrics
+from repro.dist.collectives import replicate_metrics, tournament_topk
 from repro.dist.sharding import data_sharding
 
 
@@ -166,11 +166,41 @@ class TitanEngine:
         else:
             self.data_shards = 1
             self._local_chunk = self.refresh_chunk
+        # --- distributed stage-2 top-k flavor (DESIGN.md §8) -------------
+        # two_phase: propose k·S, all-gather the whole pool, re-rank
+        # replicated (any policy). tournament: log2(S) pairwise ppermute
+        # merges shipping only B survivors per round — payload flat in
+        # shard count, exact for deterministic-top-k policies (the rank
+        # score + global pool position is a total order matching top_k's
+        # lowest-index tie-break).
+        mode = self.cfg.dist_topk
+        if mode not in ("auto", "two_phase", "tournament"):
+            raise ValueError(f"dist_topk must be auto|two_phase|tournament, "
+                             f"got {mode!r}")
+        pow2 = self.data_shards & (self.data_shards - 1) == 0
+        if mode == "tournament":
+            if not self.policy.deterministic_topk:
+                raise ValueError(
+                    f"dist_topk='tournament' needs a deterministic-top-k "
+                    f"policy (rank_scores contract); {self.policy.name!r} "
+                    f"is not — its selection depends on sampling or on the "
+                    f"candidate set")
+            if not pow2:
+                raise ValueError(
+                    f"dist_topk='tournament' needs a power-of-two data "
+                    f"axis, got {self.data_shards}")
+            self.tournament = mesh is not None
+        else:
+            self.tournament = (mode == "auto" and mesh is not None
+                               and self.data_shards > 1 and pow2
+                               and self.policy.deterministic_topk
+                               and not self.policy.shard_state)
         # Donating EngineState lets XLA update the candidate buffer (and the
         # train/optimizer pytrees) in place instead of allocating a fresh
         # copy in HBM every round — the state is device-resident for the
         # whole run. Aliasing rules: DESIGN.md §6.
         self.donate = bool(donate and jit)
+        self.overlap = False
         if mesh is not None:
             from jax.experimental.shard_map import shard_map
             specs = self.state_pspecs()
@@ -178,6 +208,32 @@ class TitanEngine:
                 self._shard_step, mesh=mesh,
                 in_specs=(specs, P(data_axis)), out_specs=(specs, P()),
                 check_rep=False)
+            # Overlapped round (ISSUE 8): the one-round delay makes the
+            # selection segment (stages B/C, reading the pre-update params
+            # w_t) independent of the train segment, so run() dispatches
+            # selection FIRST — its all-gather/ppermute collectives are in
+            # flight while the train matmuls execute. Value-identical to
+            # the fused step (same primitives, same rng threading). The
+            # non-finite guard couples the segments (trip quarantine +
+            # rollback) and forces the fused path.
+            self.overlap = bool(jit and not self.guard
+                                and self.cfg.overlap_select)
+            if self.overlap:
+                data = P(data_axis)
+                pol = data if self.policy.shard_state else P()
+                sel_specs = (data, pol, P(), P())   # buffer, policy, rng, t
+                sel_fn = shard_map(
+                    self._shard_select_seg, mesh=mesh,
+                    in_specs=(P(), sel_specs, data),
+                    out_specs=(sel_specs, data, P()), check_rep=False)
+                train_fn = shard_map(
+                    lambda train, batch: self._train_step_fn(train, batch),
+                    mesh=mesh, in_specs=(P(), data), out_specs=(P(), P()),
+                    check_rep=False)
+                self._select_step = jax.jit(
+                    sel_fn, donate_argnums=(1,) if self.donate else ())
+                self._train_step = jax.jit(
+                    train_fn, donate_argnums=(0, 1) if self.donate else ())
         else:
             self.step_fn = self._step
         if jit:
@@ -539,25 +595,226 @@ class TitanEngine:
                            next_batch=nb, rng=rng, t=state.t + 1,
                            sel_mask=sel_mask), metrics
 
-    def _shard_step(self, state: EngineState, window: Dict):
-        """Per-shard body of the mesh step (DESIGN.md §8), running under
-        ``shard_map`` over the data axis: ``state.buffer`` and
-        ``state.next_batch`` arrive as this shard's partition, ``window`` as
-        this shard's stream slice, everything else replicated. The caller's
-        ``train_step_fn`` owns the gradient all-reduce over the data axis
-        (``make_train_step(..., data_axis=...)`` — pmean, optionally
-        int8-compressed per dist/collectives)."""
+    def _select_stage(self, params, buffer_in, pstate_in, window, rng_in,
+                      t, row_bad):
+        """Stages B/C of the sharded round — observe, admission, buffer
+        maintenance and the cross-shard distributed top-k — shared verbatim
+        by the fused :meth:`_shard_step` and the overlapped selection
+        segment, so the two code paths cannot drift. Runs under
+        ``shard_map``; reads ``params`` (= w_t, the pre-update weights, per
+        the one-round delay) and never touches the train state. Returns
+        ``(buffer, pstate_out, nb_local, rng, sel_mask, metrics)`` with
+        ``sel_mask`` None unless the guard is on."""
         cfg = self.cfg
         ax = self.data_axis
         S = self.data_shards
         B = self.batch_size
         my = jax.lax.axis_index(ax)
         shard_state = self.policy.shard_state
-        pstate0 = state.policy
+        pstate0 = pstate_in
         if shard_state:
             # sharded-state policies stack one state per shard on a leading
             # dim; strip this shard's slice for the policy calls
-            pstate0 = jax.tree.map(lambda x: x[0], pstate0)
+            pstate0 = jax.tree.map(lambda x: x[0], pstate_in)
+
+        # (B) stage 1. Replicated policy state observes the GLOBAL window
+        # view (obs features/domains all-gathered, shard-major order) so
+        # the estimators evolve exactly as on a single device; the `window`
+        # arg itself stays this shard's slice (observe must read rows via
+        # obs — registry docstring). Sharded-state policies observe only
+        # their local slice.
+        feats = None
+        if self.policy.needs_window_features:
+            feats = self.hooks.features_fn(params, window)
+        obs_l = {"domain": window["domain"], "round": t,
+                 "features": feats}
+        if shard_state:
+            pstate = self.policy.observe(pstate0, window, obs_l)
+        else:
+            # one bundled all-gather (pytree bind -> a single collective)
+            gathered = jax.lax.all_gather(
+                {k: v for k, v in obs_l.items() if k != "round"
+                 and v is not None}, ax, tiled=True)
+            obs_g = {"round": t, "features": None, **gathered}
+            pstate = self.policy.observe(pstate0, window, obs_g)
+        # admission stays shard-local: each shard scores its own window
+        # slice and fills its own slots (divergence from global admission
+        # is bounded and documented in DESIGN.md §8)
+        scores = self.policy.admission_scores(pstate, window, obs_l)
+        if row_bad is not None:
+            scores = jnp.where(row_bad, NEG, scores)
+        buffer, examples, stats, valid, n_admitted, n_backlog = \
+            self._maintain(params, buffer_in, window, scores,
+                           self._local_chunk)
+
+        rng, k1, k2 = jax.random.split(rng_in, 3)
+        k1 = jax.random.fold_in(k1, my)     # shard-local proposal draw
+        sel_mask = None
+        if shard_state:
+            # local selection: each shard independently picks its B/S rows
+            # from its own buffer (the federated mode — no cross-client
+            # candidate exchange)
+            bl = B // S
+            idx, w, pstate = self.policy.select(k1, pstate, stats, valid, bl)
+            if cfg.weight_clip:
+                w = jnp.minimum(w, cfg.weight_clip)
+            nb_local = {k: jnp.take(v, idx, axis=0)
+                        for k, v in examples.items()}
+            nb_local["weights"] = w.astype(jnp.float32)
+            if self.guard:
+                sel_mask = (jnp.zeros(buffer["_score"].shape, bool)
+                            .at[idx].set(True))
+            if cfg.evict_selected:
+                buffer = dict(buffer)
+                buffer["_score"] = buffer["_score"].at[idx].set(NEG)
+            mean_w = jax.lax.pmean(jnp.mean(w), ax)
+        else:
+            # distributed top-k: every shard proposes its local top-k
+            # candidates; the global rank then runs either as one
+            # all-gather of the k·S pool + a replicated second select
+            # (two_phase — any policy) or as a ppermute merge tournament
+            # shipping only B survivors per round (deterministic-top-k
+            # policies; DESIGN.md §8)
+            k_prop = min(B, self.buffer_size // S)
+            idx1, _, _ = self.policy.select(k1, pstate, stats, valid, k_prop)
+            # _topk recycles picks when a shard holds < k valid rows;
+            # dedupe so each candidate enters the pool once (a surviving
+            # duplicate would displace the true B-th global candidate)
+            first = (jnp.argmax(idx1[:, None] == idx1[None, :], axis=1)
+                     == jnp.arange(k_prop))
+            ok_l = jnp.take(valid, idx1) & first
+            bl = B // S
+            if self.tournament:
+                t_stats = jax.tree.map(lambda v: jnp.take(v, idx1, axis=0),
+                                       stats)
+                pay = jax.tree.map(lambda v: jnp.take(v, idx1, axis=0),
+                                   examples)
+                # rank score + global pool position: the total order the
+                # two-phase top_k induces over a pos-major pool (ties break
+                # to the lowest pool position); invalid candidates sink to
+                # NEG exactly as under _topk's valid-mask
+                s_l = jnp.where(ok_l, self.policy.rank_scores(t_stats)
+                                .astype(jnp.float32), NEG)
+                pos_l = (my * k_prop
+                         + jnp.arange(k_prop, dtype=jnp.int32))
+                if k_prop < B:
+                    # pad each shard's entry list to B with NEG sentinels
+                    # positioned past every real pool slot, so they lose
+                    # every tie and never shadow a real candidate
+                    pad = B - k_prop
+                    s_l = jnp.concatenate(
+                        [s_l, jnp.full((pad,), NEG, jnp.float32)])
+                    pos_l = jnp.concatenate(
+                        [pos_l, S * k_prop + my * pad
+                         + jnp.arange(pad, dtype=jnp.int32)])
+                    pay = jax.tree.map(
+                        lambda v: jnp.concatenate(
+                            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)]),
+                        pay)
+                s_g, pos_g, pay = tournament_topk(ax, S, s_l, pos_l, pay, B)
+                # reproduce _topk's recycling + weighting over the survivor
+                # list: invalid survivors are replaced round-robin by the
+                # valid ones; weights zero out when nothing was valid —
+                # identical to the two-phase second select over the pool
+                okk = s_g > NEG / 2
+                n_ok = jnp.maximum(jnp.sum(okk.astype(jnp.int32)), 1)
+                rec = jnp.where(okk, jnp.arange(B), jnp.arange(B) % n_ok)
+                pos_win = jnp.take(pos_g, rec)
+                w = jnp.broadcast_to(
+                    jnp.any(okk).astype(jnp.float32), (B,))
+                if cfg.weight_clip:
+                    w = jnp.minimum(w, cfg.weight_clip)
+                rec_l = jax.lax.dynamic_slice_in_dim(rec, my * bl, bl)
+                nb_local = {k: jnp.take(v, rec_l, axis=0)
+                            for k, v in pay.items()}
+                nb_local["weights"] = jax.lax.dynamic_slice_in_dim(
+                    w, my * bl, bl).astype(jnp.float32)
+                if cfg.evict_selected or self.guard:
+                    # winner mask over this shard's proposal slots: pool
+                    # position p belongs to shard p // k_prop (padding
+                    # positions >= S*k_prop match no shard and drop out)
+                    mine = ((pos_win >= my * k_prop)
+                            & (pos_win < (my + 1) * k_prop))
+                    local_pos = jnp.where(mine, pos_win - my * k_prop, 0)
+                    won = (jnp.zeros((k_prop,), jnp.int32)
+                           .at[local_pos].max(mine.astype(jnp.int32)))
+                    ev = (jnp.zeros(buffer["_score"].shape, jnp.int32)
+                          .at[idx1].max(won))
+                    if self.guard:
+                        sel_mask = ev > 0
+                    if cfg.evict_selected:
+                        buffer = dict(buffer)
+                        buffer["_score"] = jnp.where(ev > 0, NEG,
+                                                     buffer["_score"])
+                mean_w = jnp.mean(w)
+            else:
+                taken = jax.tree.map(lambda v: jnp.take(v, idx1, axis=0),
+                                     (stats, examples))
+                # one bundled all-gather for the whole candidate pool
+                pool_stats, pool_ex, pool_ok = jax.lax.all_gather(
+                    (*taken, ok_l), ax, tiled=True)
+                idx2, w, pstate = self.policy.select(k2, pstate, pool_stats,
+                                                     pool_ok, B)
+                if cfg.weight_clip:
+                    w = jnp.minimum(w, cfg.weight_clip)
+                # each shard only materializes ITS B/S rows of the winning
+                # batch: slice the replicated idx2/w to this shard's span
+                # before gathering example rows from the pool
+                idx2_l = jax.lax.dynamic_slice_in_dim(idx2, my * bl, bl)
+                nb_local = {k: jnp.take(v, idx2_l, axis=0)
+                            for k, v in pool_ex.items()}
+                nb_local["weights"] = jax.lax.dynamic_slice_in_dim(
+                    w, my * bl, bl).astype(jnp.float32)
+                if cfg.evict_selected or self.guard:
+                    # pool position p == shard p//k_prop, local pick
+                    # idx1[p%k_prop]: slice this shard's span of the global
+                    # winner mask and scatter-max it onto the proposing
+                    # slots (idempotent for recycled duplicates)
+                    won = jnp.zeros((S * k_prop,), jnp.int32).at[idx2].set(1)
+                    mine = jax.lax.dynamic_slice_in_dim(won, my * k_prop,
+                                                        k_prop)
+                    ev = (jnp.zeros(buffer["_score"].shape, jnp.int32)
+                          .at[idx1].max(mine))
+                    if self.guard:
+                        # this shard's slots that fed the winning batch —
+                        # the union over shards covers every contributor
+                        sel_mask = ev > 0
+                    if cfg.evict_selected:
+                        buffer = dict(buffer)
+                        buffer["_score"] = jnp.where(ev > 0, NEG,
+                                                     buffer["_score"])
+                mean_w = jnp.mean(w)
+
+        metrics: Dict[str, Any] = {}
+        pm = self.policy.metrics(pstate)
+        if shard_state:
+            # per-shard diagnostics must leave the shard_map replicated
+            pm = replicate_metrics(pm, ax)
+        metrics.update(pm)
+        metrics["titan_mean_weight"] = mean_w
+        if n_admitted is not None:
+            if n_backlog is not None:
+                admitted, backlog = jax.lax.psum((n_admitted, n_backlog), ax)
+                metrics["titan_buffer_admitted"] = admitted
+                metrics["titan_stats_backlog"] = backlog
+                metrics["titan_stats_max_age"] = jax.lax.pmax(
+                    jnp.max(jnp.where(valid, buffer["_param_age"], 0)), ax)
+            else:
+                metrics["titan_buffer_admitted"] = jax.lax.psum(n_admitted,
+                                                                ax)
+        pstate_out = (jax.tree.map(lambda x: x[None], pstate) if shard_state
+                      else pstate)
+        return buffer, pstate_out, nb_local, rng, sel_mask, metrics
+
+    def _shard_step(self, state: EngineState, window: Dict):
+        """Per-shard body of the fused mesh step (DESIGN.md §8), running
+        under ``shard_map`` over the data axis: ``state.buffer`` and
+        ``state.next_batch`` arrive as this shard's partition, ``window`` as
+        this shard's stream slice, everything else replicated. The caller's
+        ``train_step_fn`` owns the gradient all-reduce over the data axis
+        (``make_train_step(..., data_axis=...)`` — pmean, optionally
+        int8-compressed per dist/collectives)."""
+        ax = self.data_axis
         params = self._params_of(state.train)   # w_t: stale for selection
 
         # (A) model update on this shard's rows of last round's batch
@@ -580,138 +837,40 @@ class TitanEngine:
             window, row_bad = _sanitize_window(window)
             n_bad = jnp.sum(row_bad.astype(jnp.int32))
 
-        # (B) stage 1. Replicated policy state observes the GLOBAL window
-        # view (obs features/domains all-gathered, shard-major order) so
-        # the estimators evolve exactly as on a single device; the `window`
-        # arg itself stays this shard's slice (observe must read rows via
-        # obs — registry docstring). Sharded-state policies observe only
-        # their local slice.
-        feats = None
-        if self.policy.needs_window_features:
-            feats = self.hooks.features_fn(params, window)
-        obs_l = {"domain": window["domain"], "round": state.t,
-                 "features": feats}
-        if shard_state:
-            pstate = self.policy.observe(pstate0, window, obs_l)
-        else:
-            # one bundled all-gather (pytree bind -> a single collective)
-            gathered = jax.lax.all_gather(
-                {k: v for k, v in obs_l.items() if k != "round"
-                 and v is not None}, ax, tiled=True)
-            obs_g = {"round": state.t, "features": None, **gathered}
-            pstate = self.policy.observe(pstate0, window, obs_g)
-        # admission stays shard-local: each shard scores its own window
-        # slice and fills its own slots (divergence from global admission
-        # is bounded and documented in DESIGN.md §8)
-        scores = self.policy.admission_scores(pstate, window, obs_l)
-        if row_bad is not None:
-            scores = jnp.where(row_bad, NEG, scores)
-        buffer, examples, stats, valid, n_admitted, n_backlog = \
-            self._maintain(params, buffer_in, window, scores,
-                           self._local_chunk)
-
-        rng, k1, k2 = jax.random.split(state.rng, 3)
-        k1 = jax.random.fold_in(k1, my)     # shard-local proposal draw
-        sel_mask = state.sel_mask
-        if shard_state:
-            # local selection: each shard independently picks its B/S rows
-            # from its own buffer (the federated mode — no cross-client
-            # candidate exchange)
-            bl = B // S
-            idx, w, pstate = self.policy.select(k1, pstate, stats, valid, bl)
-            if cfg.weight_clip:
-                w = jnp.minimum(w, cfg.weight_clip)
-            nb_local = {k: jnp.take(v, idx, axis=0)
-                        for k, v in examples.items()}
-            nb_local["weights"] = w.astype(jnp.float32)
-            if self.guard:
-                sel_mask = (jnp.zeros(buffer["_score"].shape, bool)
-                            .at[idx].set(True))
-            if cfg.evict_selected:
-                buffer = dict(buffer)
-                buffer["_score"] = buffer["_score"].at[idx].set(NEG)
-            mean_w = jax.lax.pmean(jnp.mean(w), ax)
-        else:
-            # distributed top-k: every shard proposes its local top-k
-            # candidates, the k·S pool is all-gathered (scores + rows) and
-            # ranked globally by a replicated second select — exact for
-            # deterministic top-k policies (DESIGN.md §8)
-            k_prop = min(B, self.buffer_size // S)
-            idx1, _, _ = self.policy.select(k1, pstate, stats, valid, k_prop)
-            # _topk recycles picks when a shard holds < k valid rows;
-            # dedupe so each candidate enters the pool once (a surviving
-            # duplicate would displace the true B-th global candidate)
-            first = (jnp.argmax(idx1[:, None] == idx1[None, :], axis=1)
-                     == jnp.arange(k_prop))
-            ok_l = jnp.take(valid, idx1) & first
-            taken = jax.tree.map(lambda v: jnp.take(v, idx1, axis=0),
-                                 (stats, examples))
-            # one bundled all-gather for the whole candidate pool
-            pool_stats, pool_ex, pool_ok = jax.lax.all_gather(
-                (*taken, ok_l), ax, tiled=True)
-            idx2, w, pstate = self.policy.select(k2, pstate, pool_stats,
-                                                 pool_ok, B)
-            if cfg.weight_clip:
-                w = jnp.minimum(w, cfg.weight_clip)
-            # each shard only materializes ITS B/S rows of the winning
-            # batch: slice the replicated idx2/w to this shard's span
-            # before gathering example rows from the pool
-            bl = B // S
-            idx2_l = jax.lax.dynamic_slice_in_dim(idx2, my * bl, bl)
-            nb_local = {k: jnp.take(v, idx2_l, axis=0)
-                        for k, v in pool_ex.items()}
-            nb_local["weights"] = jax.lax.dynamic_slice_in_dim(
-                w, my * bl, bl).astype(jnp.float32)
-            if cfg.evict_selected or self.guard:
-                # pool position p == shard p//k_prop, local pick idx1[p%k_prop]:
-                # slice this shard's span of the global winner mask and
-                # scatter-max it onto the proposing slots (idempotent for
-                # recycled duplicates)
-                won = jnp.zeros((S * k_prop,), jnp.int32).at[idx2].set(1)
-                mine = jax.lax.dynamic_slice_in_dim(won, my * k_prop, k_prop)
-                ev = (jnp.zeros(buffer["_score"].shape, jnp.int32)
-                      .at[idx1].max(mine))
-                if self.guard:
-                    # this shard's slots that fed the winning batch — the
-                    # union over shards covers every contributing slot
-                    sel_mask = ev > 0
-                if cfg.evict_selected:
-                    buffer = dict(buffer)
-                    buffer["_score"] = jnp.where(ev > 0, NEG,
-                                                 buffer["_score"])
-            mean_w = jnp.mean(w)
+        buffer, pstate_out, nb_local, rng, sel_mask_new, smet = \
+            self._select_stage(params, buffer_in, state.policy, window,
+                               state.rng, state.t, row_bad)
+        sel_mask = sel_mask_new if self.guard else state.sel_mask
 
         metrics = dict(metrics)
-        pm = self.policy.metrics(pstate)
-        if shard_state:
-            # per-shard diagnostics must leave the shard_map replicated
-            pm = replicate_metrics(pm, ax)
-        metrics.update(pm)
-        metrics["titan_mean_weight"] = mean_w
-        if n_admitted is not None:
-            if n_backlog is not None:
-                admitted, backlog = jax.lax.psum((n_admitted, n_backlog), ax)
-                metrics["titan_buffer_admitted"] = admitted
-                metrics["titan_stats_backlog"] = backlog
-                metrics["titan_stats_max_age"] = jax.lax.pmax(
-                    jnp.max(jnp.where(valid, buffer["_param_age"], 0)), ax)
-            else:
-                metrics["titan_buffer_admitted"] = jax.lax.psum(n_admitted,
-                                                                ax)
+        metrics.update(smet)
         if self.guard:
             q, b = jax.lax.psum((q_slots, n_bad), ax)
             metrics["titan_guard_trips"] = (trip | (b > 0)).astype(jnp.int32)
             metrics["titan_quarantined"] = q + b
-        pstate_out = (jax.tree.map(lambda x: x[None], pstate) if shard_state
-                      else pstate)
         return EngineState(train=new_train, policy=pstate_out, buffer=buffer,
                            next_batch=nb_local, rng=rng,
                            t=state.t + 1, sel_mask=sel_mask), metrics
 
+    def _shard_select_seg(self, train, sel, window: Dict):
+        """Selection segment of the overlapped round (guard off): stages
+        B/C only, reading — never consuming — the pre-update train state.
+        run() dispatches this program BEFORE the train segment, so its
+        collectives overlap the train matmuls; per-device in-order
+        execution guarantees the param reads complete before the train
+        segment's donation rewrites them. ``sel`` is the (buffer, policy,
+        rng, t) tuple of donated selection state."""
+        buffer_in, pstate_in, rng_in, t = sel
+        params = self._params_of(train)         # w_t: stale for selection
+        buffer, pstate_out, nb_local, rng, _, smet = self._select_stage(
+            params, buffer_in, pstate_in, window, rng_in, t, None)
+        return (buffer, pstate_out, rng, t + 1), nb_local, smet
+
     # -- driver -------------------------------------------------------------
 
     def run(self, state: EngineState, stream, rounds: int, *,
-            prefetch: int = 2, metrics_every: int = 1,
+            prefetch: int = 2, prefetch_workers: Optional[int] = None,
+            metrics_every: int = 1,
             on_metrics: Optional[Callable[[int, Dict], None]] = None,
             on_round: Optional[Callable[[int, EngineState, Dict], None]] = None,
             window_size: Optional[int] = None, start_round: int = 0,
@@ -724,7 +883,10 @@ class TitanEngine:
         The stream is consumed through a :class:`~repro.data.loader.Prefetcher`
         (``prefetch`` = parked-window depth; 0 = synchronous, bit-identical to
         a hand-rolled per-round loop), so host window generation and
-        host→device transfer overlap device compute. Steps are dispatched
+        host→device transfer overlap device compute. ``prefetch_workers``
+        forwards to the Prefetcher's per-shard worker pool (None = auto:
+        pool iff the stream is a ShardedStream and ``prefetch > 0``;
+        0 forces the single-thread producer). Steps are dispatched
         ahead of metric readback: each round's metrics land in a bounded
         host-side queue and are fetched (``jax.device_get``) only every
         ``metrics_every`` rounds — the device never waits on a scalar for
@@ -831,8 +993,11 @@ class TitanEngine:
             h: Dict[str, Any] = {}
             pf = plane["pf"]
             if pf is not None:
-                h["titan_data_retried"] = int(pf.retried)
-                h["titan_data_leaked"] = int(pf.leaked)
+                dc = pf.data_counters()
+                for k in ("titan_data_workers", "titan_data_produced",
+                          "titan_data_retried", "titan_data_leaked"):
+                    dc[k] = int(dc[k])
+                h.update(dc)
             s, seen = stream, set()
             while s is not None and id(s) not in seen:
                 seen.add(id(s))
@@ -858,13 +1023,32 @@ class TitanEngine:
                 if on_metrics is not None:
                     on_metrics(r, host)
 
+        def one_round(st: EngineState, window):
+            if not self.overlap:
+                return self.step(st, window)
+            # Overlapped round (DESIGN.md §8): the selection segment only
+            # needs w_t (the pre-update params) and the incoming window, so
+            # it is dispatched FIRST — its all-gather/ppermute collectives
+            # are in flight while the train segment's matmuls run. Per-device
+            # in-order execution makes the split safe with donation: the
+            # select program's param reads complete before the train
+            # program's donated update can rewrite them. Value-identical to
+            # the fused step (same primitives, same rng threading).
+            sel = (st.buffer, st.policy, st.rng, st.t)
+            (buffer, pstate, rng, t), nb, smet = self._select_step(
+                st.train, sel, window)
+            new_train, tmet = self._train_step(st.train, st.next_batch)
+            return EngineState(train=new_train, policy=pstate, buffer=buffer,
+                               next_batch=nb, rng=rng, t=t,
+                               sel_mask=None), {**tmet, **smet}
+
         saved_at = done
         with Prefetcher(stream, n, depth=prefetch, rounds=rounds - done,
-                        device=device) as pf:
+                        device=device, workers=prefetch_workers) as pf:
             plane["pf"] = pf
             for i in range(done, rounds):
                 r = start_round + i
-                state, metrics = self.step(state, pf.get())
+                state, metrics = one_round(state, pf.get())
                 if metrics_every:
                     pending.append((r, metrics))
                     if len(pending) >= metrics_every:

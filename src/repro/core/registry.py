@@ -84,6 +84,18 @@ class SelectionPolicy:
                      ``window`` (none of the built-ins do) would update the
                      "replicated" state from per-shard data — read rows via
                      ``obs`` or set ``shard_state=True``.
+      deterministic_topk  stage-2 is a pure rank-by-score: ``select`` is
+                     equivalent to ``_topk(rank_scores(stats), valid, b)``
+                     (deterministic given stats — the rng is unused). The
+                     mesh engine may then run the distributed top-k as a
+                     log2(S)-round ppermute tournament shipping only B
+                     survivors per round instead of all-gathering the whole
+                     k·S pool (DESIGN.md §8); exact because rank score plus
+                     global pool position is a total order matching
+                     ``jax.lax.top_k``'s lowest-index tie-break. Policies
+                     whose rank depends on the candidate *set* (ocs set
+                     moments, camel's greedy coreset) or on sampling
+                     (rs/is/titan-cis) must leave this False.
     """
     name: str = "?"
     unit_weights: bool = True
@@ -91,6 +103,7 @@ class SelectionPolicy:
     needs_features: bool = False
     needs_window_features: bool = False
     shard_state: bool = False
+    deterministic_topk: bool = False
     stat_keys: Tuple[str, ...] = ("loss", "gnorm", "entropy", "sketch")
 
     def __init__(self, cfg: Optional[TitanConfig] = None):
@@ -115,6 +128,15 @@ class SelectionPolicy:
     def select(self, rng, state, stats, valid, batch: int):
         raise NotImplementedError
 
+    def rank_scores(self, stats):
+        """Per-candidate rank score for ``deterministic_topk`` policies:
+        ``select`` must equal ``_topk(rank_scores(stats), valid, batch)``.
+        The mesh tournament merges candidates by this score alone, so any
+        divergence from ``select`` breaks the exactness contract."""
+        raise NotImplementedError(
+            f"policy {self.name!r} has no rank_scores (deterministic_topk="
+            f"{self.deterministic_topk})")
+
     def metrics(self, state) -> Dict:
         return {}
 
@@ -126,13 +148,16 @@ class FunctionPolicy(SelectionPolicy):
     def __init__(self, cfg: Optional[TitanConfig], fn: Callable, name: str, *,
                  unit_weights: bool = True, needs_stats: bool = True,
                  needs_features: bool = False,
-                 stat_keys: Optional[Tuple[str, ...]] = None):
+                 stat_keys: Optional[Tuple[str, ...]] = None,
+                 rank_fn: Optional[Callable] = None):
         super().__init__(cfg)
         self._fn = fn
         self.name = name
         self.unit_weights = unit_weights
         self.needs_stats = needs_stats
         self.needs_features = needs_features
+        self._rank_fn = rank_fn
+        self.deterministic_topk = rank_fn is not None
         if stat_keys is not None:
             self.stat_keys = stat_keys
         elif not needs_stats:
@@ -148,6 +173,11 @@ class FunctionPolicy(SelectionPolicy):
     def select(self, rng, state, stats, valid, batch: int):
         idx, w = self._fn(rng, stats, valid, batch, **self._kwargs)
         return idx, w, state
+
+    def rank_scores(self, stats):
+        if self._rank_fn is None:
+            return super().rank_scores(stats)
+        return self._rank_fn(stats)
 
 
 @jax.tree_util.register_dataclass
@@ -239,9 +269,12 @@ register_policy("titan-cis", TitanCISPolicy)
 _BASELINE_FLAGS: Dict[str, Dict] = {
     "rs": dict(needs_stats=False),
     "is": dict(unit_weights=False, stat_keys=("gnorm",)),
-    "ll": dict(stat_keys=("loss",)),
-    "hl": dict(stat_keys=("loss",)),
-    "ce": dict(stat_keys=("entropy",)),
+    # ll/hl/ce rank candidates by one per-row stat — select() IS
+    # _topk(rank, valid, b) — so the mesh engine may run their distributed
+    # top-k as the ppermute tournament (rank_fn = the _topk score)
+    "ll": dict(stat_keys=("loss",), rank_fn=lambda s: -s["loss"]),
+    "hl": dict(stat_keys=("loss",), rank_fn=lambda s: s["loss"]),
+    "ce": dict(stat_keys=("entropy",), rank_fn=lambda s: s["entropy"]),
     # ocs/camel read only feature vectors — no fine-grained scoring pass
     "ocs": dict(needs_stats=False, needs_features=True),
     "camel": dict(needs_stats=False, needs_features=True),

@@ -4,33 +4,48 @@ The paper's pipelined co-execution (§3.4) demands that data handling never
 stalls training. On the host side that means the expensive parts of a round
 — drawing the next stream window (tokenization / sensor featurization /
 shard IO) and staging it onto the device — must overlap the previous
-round's compute. :class:`Prefetcher` does exactly that: a single daemon
-thread draws windows from a :class:`~repro.data.stream.StreamProtocol` in
-deterministic round order, ``jax.device_put``s them, and parks up to
-``depth`` device-resident windows in a bounded queue. The consumer
-(``TitanEngine.run`` or any hand-rolled loop) pops ready windows without
-touching the stream.
+round's compute. :class:`Prefetcher` does exactly that, with two producer
+topologies behind one consumer contract:
+
+- **Serial** (the default for unsharded streams): a single daemon thread
+  draws whole windows from a :class:`~repro.data.stream.StreamProtocol` in
+  deterministic round order, ``jax.device_put``s them, and parks up to
+  ``depth`` device-resident windows in a bounded queue.
+- **Worker pool** (automatic for a ``ShardedStream`` with more than one
+  member, or forced with ``workers=S``): one producer thread per member
+  stream draws that shard's ``n/S`` rows into its own bounded queue; an
+  assembler thread pops exactly one slice per shard in shard order,
+  concatenates shard-major — bit-identical to
+  ``ShardedStream.next_window`` — stages the full window, and parks it.
+  Member draws overlap each other, so ``host_window_ms`` stays flat in
+  shard count instead of growing linearly with one serial producer.
 
 Guarantees:
 
-- **Deterministic round order.** One worker thread consumes the stream
-  sequentially, so round r's window is bit-identical to what a synchronous
-  loop would have drawn — prefetching never reorders or skips rounds
-  (stateful streams like drift replay stay correct).
-- **Bounded lookahead.** The queue holds at most ``depth`` windows, so the
-  stream never runs unboundedly ahead of training (host memory stays flat;
-  ``depth+1`` windows exist at most: ``depth`` parked + 1 in flight).
+- **Deterministic round order.** Each stream (or member stream) is consumed
+  sequentially by exactly one thread, and the assembler reassembles slices
+  shard-major in worker order, so round r's window is bit-identical to what
+  a synchronous loop would have drawn — prefetching never reorders or skips
+  rounds (stateful streams like drift replay stay correct).
+- **Bounded lookahead.** Every queue holds at most ``depth`` windows
+  (serial: ``depth`` parked + 1 in flight; pool: per-member slices and
+  assembled windows are each bounded by ``depth``), so the stream never
+  runs unboundedly ahead of training and host memory stays flat.
 - **Degrading, not dying.** Transient stream failures (see the exception
   taxonomy below) are retried with exponential backoff + deterministic
   jitter, up to ``retries`` attempts per window; windows with the wrong
   leading dimension ("short windows" from a degraded producer) count as
-  transient. Only a fatal error — or retry exhaustion — surfaces to the
-  consumer, and the worker thread always shuts down cleanly on the way out.
-- **Clean shutdown.** ``close()`` (or the context manager) wakes a blocked
-  worker (including one parked in a retry backoff), drains the queue while
-  joining so a worker stalled on a full queue can never deadlock the join,
-  and is idempotent. Worker exceptions surface on the consumer's next
-  ``get()`` instead of dying silently.
+  transient. On the pool, retry is *per member*: a transient fault on one
+  shard replays only that shard's round, while the serial path's
+  whole-window retry would re-draw members that had already advanced and
+  assemble a mixed-round window. Only a fatal error — or retry exhaustion
+  — surfaces to the consumer.
+- **Clean shutdown.** ``close()`` (or the context manager) wakes every
+  blocked thread (including workers parked in a retry backoff), drains all
+  per-worker queues *and* the output queue while joining so a producer
+  stalled on a full queue can never deadlock the join, and is idempotent.
+  Worker exceptions surface on the consumer's next ``get()`` instead of
+  dying silently.
 - **Sync fallback.** ``depth=0`` is a synchronous passthrough (no thread),
   byte-identical behavior for parity tests and debugging.
 
@@ -52,6 +67,7 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
+import numpy as np
 
 
 class StreamError(Exception):
@@ -102,9 +118,9 @@ class Prefetcher:
     Args:
       stream: a ``StreamProtocol`` (``next_window(n)`` in round order).
       n: window size passed to every ``next_window`` call.
-      depth: parked-window capacity; 0 = synchronous passthrough.
-      rounds: optional production cap — the worker stops after producing
-        this many windows and ``get()`` raises ``StreamExhausted``.
+      depth: parked-window capacity per queue; 0 = synchronous passthrough.
+      rounds: optional production cap — producers stop after this many
+        windows and ``get()`` raises ``StreamExhausted``.
       device: optional target for ``jax.device_put``: a Device, or any
         ``jax.sharding.Sharding`` — e.g. ``dist.sharding.data_sharding
         (mesh)`` to stage each window's rows straight into their per-shard
@@ -115,16 +131,23 @@ class Prefetcher:
         errors (see module taxonomy) are never retried.
       backoff_s: initial retry delay; doubles per attempt up to
         ``max_backoff_s``, plus up to ``jitter`` fraction of deterministic
-        seeded jitter.
-      validate: check every window's leading dimension against ``n`` and
-        classify short windows as transient (retryable) faults.
+        seeded jitter (per-worker decorrelated on the pool).
+      validate: check every window's (or member slice's) leading dimension
+        and classify short windows as transient (retryable) faults.
+      workers: producer topology. ``None`` (default) auto-selects: a stream
+        exposing >1 member ``.streams`` whose window divides evenly gets
+        one producer per member; everything else runs the serial path.
+        ``0`` forces the serial path even for sharded streams. Any other
+        value must equal the member count and forces the pool (useful to
+        exercise the pool at S=1).
     """
 
     def __init__(self, stream, n: int, *, depth: int = 2,
                  rounds: Optional[int] = None, device=None,
                  retries: int = 3, backoff_s: float = 0.05,
                  max_backoff_s: float = 2.0, jitter: float = 0.5,
-                 seed: int = 0, validate: bool = True):
+                 seed: int = 0, validate: bool = True,
+                 workers: Optional[int] = None):
         if depth < 0:
             raise ValueError(f"depth must be >= 0, got {depth}")
         if retries < 0:
@@ -141,64 +164,128 @@ class Prefetcher:
         self.seed = seed
         self.validate = validate
         self.retried = 0          # transient fetch attempts that were retried
-        self.leaked = False       # close() could not join the worker in time
-        self._produced = 0
+        self.leaked = False       # close() could not join every thread in time
+        self._rlock = threading.Lock()
+        self._produced = 0        # full windows staged (assembled, on the pool)
         self._exhausted = False
         self._closed = False
         self._error: Optional[BaseException] = None
         self._thread: Optional[threading.Thread] = None
+        self._threads: tuple = ()
         self._stop = threading.Event()
+        # -- data-plane perf counters (engine health metrics) --
+        self._t0 = time.monotonic()
+        self._gets = 0
+        self._wait_s = 0.0
+        self._occ_sum = 0.0
+        self._occ_n = 0
+
+        members = tuple(getattr(stream, "streams", ()) or ())
+        if workers is None:
+            pool = depth > 0 and len(members) > 1 and self.n % len(members) == 0
+        elif int(workers) == 0:
+            pool = False
+        else:
+            if not members:
+                raise ValueError("workers > 0 needs a stream with member "
+                                 "shards (a .streams tuple)")
+            if int(workers) != len(members):
+                raise ValueError(f"workers={workers} but the stream has "
+                                 f"{len(members)} member shards")
+            if self.n % len(members):
+                raise ValueError(f"window size {self.n} must divide over "
+                                 f"{len(members)} workers")
+            if depth == 0:
+                raise ValueError("the worker pool needs depth >= 1")
+            pool = True
+        self._members = members if pool else ()
+        self.workers = len(self._members)
+        self._wqs: tuple = ()
+        self._w_produced = [0] * self.workers
+
         if depth > 0:
             self._q: queue.Queue = queue.Queue(maxsize=depth)
-            self._thread = threading.Thread(
-                target=self._worker, name="titan-prefetch", daemon=True)
-            self._thread.start()
+            if pool:
+                self._wqs = tuple(queue.Queue(maxsize=depth)
+                                  for _ in self._members)
+                ths = [threading.Thread(
+                    target=self._pool_worker, args=(i,),
+                    name=f"titan-prefetch-w{i}", daemon=True)
+                    for i in range(self.workers)]
+                ths.append(threading.Thread(
+                    target=self._assembler, name="titan-prefetch",
+                    daemon=True))
+                self._threads = tuple(ths)
+                self._thread = ths[-1]
+                for t in ths:
+                    t.start()
+            else:
+                self._thread = threading.Thread(
+                    target=self._worker, name="titan-prefetch", daemon=True)
+                self._threads = (self._thread,)
+                self._thread.start()
 
     # -- worker side --------------------------------------------------------
 
     def _stage(self, window: Dict[str, Any]) -> Dict[str, jax.Array]:
         return {k: jax.device_put(v, self.device) for k, v in window.items()}
 
-    def _check(self, window: Dict[str, Any]):
+    def _check(self, window: Dict[str, Any], n: Optional[int] = None):
         if not self.validate:
             return
+        n = self.n if n is None else n
         for k, v in window.items():
-            rows = getattr(v, "shape", (self.n,))[:1]
-            if rows and rows[0] != self.n:
+            rows = getattr(v, "shape", (n,))[:1]
+            if rows and rows[0] != n:
                 raise TransientStreamError(
                     f"short window: {k!r} has {rows[0]} rows, round needs "
-                    f"{self.n}")
+                    f"{n}")
 
-    def _fetch(self) -> Optional[Dict[str, Any]]:
-        """One window, with bounded transient-retry. None = shut down
-        mid-backoff (close() was called)."""
+    def _fetch(self, stream=None, n: Optional[int] = None,
+               seed: Optional[int] = None) -> Optional[Dict[str, Any]]:
+        """One window (or member slice), with bounded transient-retry.
+        None = shut down mid-backoff (close() was called)."""
+        stream = self.stream if stream is None else stream
+        n = self.n if n is None else n
+        seed = self.seed if seed is None else seed
         attempt = 0
         while True:
             try:
-                window = self.stream.next_window(self.n)
-                self._check(window)
+                window = stream.next_window(n)
+                self._check(window, n)
                 return window
             except Exception as e:
                 if not is_transient(e) or attempt >= self.retries:
                     raise
                 delay = min(self.backoff_s * (2 ** attempt),
                             self.max_backoff_s)
-                delay *= 1.0 + self.jitter * _jitter_frac(self.seed, attempt)
-                self.retried += 1
+                delay *= 1.0 + self.jitter * _jitter_frac(seed, attempt)
+                with self._rlock:
+                    self.retried += 1
                 attempt += 1
                 # stop-aware sleep: close() must never wait out a backoff
                 if self._stop.wait(delay):
                     return None
 
-    def _offer(self, item) -> bool:
+    def _offer(self, item, q: Optional[queue.Queue] = None) -> bool:
         """Blocking put that stays responsive to close(). False = shut down."""
+        q = self._q if q is None else q
         while not self._stop.is_set():
             try:
-                self._q.put(item, timeout=0.05)
+                q.put(item, timeout=0.05)
                 return True
             except queue.Full:
                 continue
         return False
+
+    def _take(self, q: queue.Queue):
+        """Blocking get that stays responsive to close(). None = shut down."""
+        while not self._stop.is_set():
+            try:
+                return q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+        return None
 
     def _worker(self):
         try:
@@ -214,6 +301,56 @@ class Prefetcher:
                 if not self._offer(("ok", window)):
                     return
         except BaseException as e:  # surface on the consumer side
+            self._offer(("err", e))
+
+    def _pool_worker(self, i: int):
+        """Producer for member shard ``i``: draws that shard's slice of
+        every round into its own bounded queue, with per-member
+        retry/backoff (decorrelated jitter seed per worker)."""
+        from repro.data.stream import mix_seed
+        member = self._members[i]
+        q = self._wqs[i]
+        per = self.n // self.workers
+        seed = mix_seed(self.seed, i)
+        try:
+            while not self._stop.is_set():
+                if self.rounds is not None and self._w_produced[i] >= self.rounds:
+                    return
+                window = self._fetch(member, per, seed)
+                if window is None:
+                    return
+                self._w_produced[i] += 1
+                if not self._offer(("ok", window), q):
+                    return
+        except BaseException as e:
+            self._offer(("err", e), q)
+
+    def _assembler(self):
+        """Pops one slice per worker in shard order, reassembles the full
+        window shard-major (bit-identical to ``ShardedStream.next_window``),
+        stages it, and parks it on the output queue."""
+        try:
+            while not self._stop.is_set():
+                if self.rounds is not None and self._produced >= self.rounds:
+                    self._offer(_DONE)
+                    return
+                slices = []
+                for q in self._wqs:
+                    item = self._take(q)
+                    if item is None:
+                        return
+                    tag, val = item
+                    if tag == "err":
+                        self._offer(("err", val))
+                        return
+                    slices.append(val)
+                window = {k: np.concatenate([s[k] for s in slices], axis=0)
+                          for k in slices[0]}
+                window = self._stage(window)
+                self._produced += 1
+                if not self._offer(("ok", window)):
+                    return
+        except BaseException as e:
             self._offer(("err", e))
 
     # -- consumer side ------------------------------------------------------
@@ -237,7 +374,14 @@ class Prefetcher:
                 raise RuntimeError("Prefetcher is closed")
             self._produced += 1
             return self._stage(window)
+        if self.depth:  # occupancy sampled at consume time
+            qs = self._wqs or (self._q,)
+            self._occ_sum += sum(q.qsize() for q in qs) / (len(qs) * self.depth)
+            self._occ_n += 1
+        t0 = time.monotonic()
         item = self._q.get()
+        self._wait_s += time.monotonic() - t0
+        self._gets += 1
         if item is _DONE:
             self._exhausted = True
             self.close()
@@ -249,34 +393,58 @@ class Prefetcher:
             raise val
         return val
 
-    def close(self, timeout: float = 5.0):
-        """Stop the worker and join it. Idempotent; safe mid-stream. The
-        prefetcher is unusable afterwards (get() raises).
+    def data_counters(self) -> Dict[str, float]:
+        """Host data-plane health/perf counters, exported by the engine as
+        ``titan_data_*`` metrics: producer topology, produced-windows
+        throughput, mean consumer ``get()`` wait, and mean queue occupancy
+        (fraction of parked capacity in use, averaged over worker queues on
+        the pool) — the triage trio for "is the host feeding the device".
+        """
+        dt = max(time.monotonic() - self._t0, 1e-9)
+        return {
+            "titan_data_workers": float(self.workers),
+            "titan_data_produced": float(self._produced),
+            "titan_data_produced_per_sec": self._produced / dt,
+            "titan_data_get_wait_ms": 1e3 * self._wait_s / max(self._gets, 1),
+            "titan_data_queue_frac": self._occ_sum / max(self._occ_n, 1),
+            "titan_data_retried": float(self.retried),
+            "titan_data_leaked": float(self.leaked),
+        }
 
-        The queue is drained *while* joining, not just once up front: a
-        worker stalled in ``_offer`` on a full queue can refill the slot we
-        just freed before noticing the stop flag, and a one-shot drain
-        followed by a blocking join would then deadlock. If the worker is
-        wedged inside the stream itself (a hung ``next_window``) the join
-        times out and ``leaked`` is set — the daemon thread dies with the
-        process instead of hanging shutdown."""
+    def close(self, timeout: float = 5.0):
+        """Stop every producer and join them. Idempotent; safe mid-stream.
+        The prefetcher is unusable afterwards (get() raises).
+
+        Every queue — per-worker queues and the output queue — is drained
+        *while* joining, not just once up front: a producer stalled in
+        ``_offer`` on a full queue can refill the slot we just freed before
+        noticing the stop flag, and a one-shot drain followed by a blocking
+        join would then deadlock. This holds per worker on the pool: each
+        member producer can be independently wedged in a put. If a thread
+        is wedged inside the stream itself (a hung ``next_window``) the
+        join times out and ``leaked`` is set — the daemon thread dies with
+        the process instead of hanging shutdown."""
         self._closed = True
-        thread = self._thread
-        if thread is None:
+        threads = [t for t in self._threads if t is not None]
+        if not threads:
             return
         self._stop.set()
         deadline = time.monotonic() + timeout
-        while thread.is_alive():
-            try:  # unblock a worker stuck in put()
-                while True:
-                    self._q.get_nowait()
-            except queue.Empty:
-                pass
-            thread.join(timeout=0.05)
+        queues = (self._q, *self._wqs) if self.depth else ()
+        while any(t.is_alive() for t in threads):
+            for q in queues:  # unblock producers stuck in put()
+                try:
+                    while True:
+                        q.get_nowait()
+                except queue.Empty:
+                    pass
+            for t in threads:
+                t.join(timeout=0.05 / len(threads))
             if time.monotonic() > deadline:
                 break
-        self.leaked = thread.is_alive()
+        self.leaked = any(t.is_alive() for t in threads)
         self._thread = None
+        self._threads = ()
 
     def __enter__(self) -> "Prefetcher":
         return self

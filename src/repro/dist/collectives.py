@@ -58,6 +58,79 @@ def allreduce_payload_bytes(grads, compression: str = "none") -> int:
     return total
 
 
+def tournament_topk(axis: str, n_shards: int, scores, pos, payload, k: int):
+    """Exact distributed top-k as a recursive-doubling (butterfly) merge
+    tournament over ``jax.lax.ppermute`` — the mesh engine's alternative to
+    all-gathering the whole k·S candidate pool (DESIGN.md §8).
+
+    Runs inside ``shard_map`` over ``axis`` (width ``n_shards``, must be a
+    power of two). Each shard enters with its local candidates: ``scores``
+    (N,), ``pos`` (N,) — the *global pool position* of each candidate, the
+    tie-break key — and ``payload``, a pytree of per-candidate rows (stats,
+    example fields) with leading dim N. Every merge round ships the current
+    k survivors to the butterfly partner (``i ^ 2^j``) and keeps the exact
+    top-k of the union under the total order (score desc, pos asc) — the
+    same order ``jax.lax.top_k`` induces over a pool laid out pos-major
+    (ties break to the lowest index, i.e. the lowest pool position). Since
+    pos is globally unique the order is total, so top-k composes over
+    pairwise unions and after log2(S) rounds every shard holds the same,
+    exact global top-k, in final rank order.
+
+    Per-shard wire payload: k rows × log2(S) rounds, vs (S-1)·k_prop rows
+    for the one-shot all-gather — selection traffic stops scaling with the
+    shard count (see ``tournament_payload_bytes``).
+
+    Returns ``(scores (k,), pos (k,), payload[k])`` — identical
+    (replicated) on every shard.
+    """
+    if n_shards & (n_shards - 1):
+        raise ValueError(f"tournament_topk needs a power-of-two axis, "
+                         f"got {n_shards}")
+
+    def order_topk(s, p, pl):
+        # lexsort: primary = score descending, ties = pool position
+        # ascending (== jax.lax.top_k over a pos-major pool)
+        o = jnp.lexsort((p, -s))[:k]
+        return (s[o], p[o],
+                jax.tree.map(lambda x: jnp.take(x, o, axis=0), pl))
+
+    scores, pos, payload = order_topk(scores, pos, payload)
+    for j in range(n_shards.bit_length() - 1):
+        perm = [(i, i ^ (1 << j)) for i in range(n_shards)]
+        o_s, o_p, o_pl = jax.lax.ppermute((scores, pos, payload), axis, perm)
+        scores, pos, payload = order_topk(
+            jnp.concatenate([scores, o_s]), jnp.concatenate([pos, o_p]),
+            jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                         payload, o_pl))
+    return scores, pos, payload
+
+
+def candidate_row_bytes(payload) -> int:
+    """Wire bytes of ONE candidate row of ``payload`` (a pytree of arrays
+    or ShapeDtypeStructs with leading candidate dim): the per-candidate
+    cost both distributed top-k variants pay per shipped candidate."""
+    total = 0
+    for leaf in jax.tree.leaves(payload):
+        n = int(math.prod(leaf.shape[1:])) if len(leaf.shape) > 1 else 1
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def twophase_payload_bytes(row_bytes: int, k_prop: int, n_shards: int) -> int:
+    """Per-shard receive payload of the two-phase top-k's pool all-gather:
+    (S-1)·k_prop candidate rows — linear in shard count."""
+    return (n_shards - 1) * k_prop * row_bytes
+
+
+def tournament_payload_bytes(row_bytes: int, batch: int,
+                             n_shards: int) -> int:
+    """Per-shard receive payload of the ppermute tournament: B survivor
+    rows (plus the fp32 score and int32 position riding each row) per
+    merge, log2(S) merges — flat in shard count."""
+    rounds = max(n_shards.bit_length() - 1, 0)
+    return rounds * batch * (row_bytes + 8)
+
+
 def make_compressed_allreduce(mesh, axis: str):
     """All-reduce-mean over `axis` with int8 payload compression.
 

@@ -14,10 +14,15 @@ distributed top-k selection, gradient all-reduce — DESIGN.md §8; int8
 all-reduce compression via ``--grad-compress int8``).
 
 The round loop is ``engine.run()``: stream windows are prefetched on a
-background thread (``--prefetch`` buffered windows, 0 = synchronous),
+background thread (``--prefetch`` buffered windows, 0 = synchronous; with a
+sharded stream the prefetcher runs one producer per shard —
+``--prefetch-workers`` forces the count, 0 forces the serial producer),
 EngineState stays device-resident via buffer donation, and metrics are
 drained asynchronously every ``--log-every`` rounds instead of serializing
-dispatch with a per-round fetch.
+dispatch with a per-round fetch. On a mesh, ``--dist-topk tournament``
+swaps the two-phase all-gather selection for the log2(S) ppermute
+tournament and ``--no-overlap-select`` forces the fused (non-overlapped)
+round (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -90,6 +95,20 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--prefetch", type=int, default=2,
                     help="background-prefetched stream windows (0 = sync)")
+    ap.add_argument("--prefetch-workers", type=int, default=None,
+                    help="host data-plane producer threads: one per stream "
+                         "shard (must equal the shard count), 0 forces the "
+                         "serial producer, default auto-detects")
+    ap.add_argument("--dist-topk", default="auto",
+                    choices=["auto", "two_phase", "tournament"],
+                    help="distributed top-k collective on the mesh: "
+                         "tournament needs a deterministic-top-k policy and "
+                         "a power-of-two shard count (DESIGN.md §8)")
+    ap.add_argument("--overlap-select", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="dispatch the selection collective before the "
+                         "train step so the two overlap "
+                         "(--no-overlap-select forces the fused round)")
     args = ap.parse_args(argv)
 
     if args.policy == "list":
@@ -138,10 +157,19 @@ def main(argv=None):
                 vocab=cfg.vocab, seq_len=args.seq, n_domains=cfg.n_domains,
                 seed=args.seed, shard=shard, num_shards=num_shards),
             data_shards)
+        # guard each member individually: the outer object keeps the
+        # ``.streams`` tuple the Prefetcher pool detects (one producer
+        # thread per shard), and a straggling shard only stalls its own
+        # worker instead of serializing the whole window
+        member_guards = tuple(StragglerGuard(s, deadline_s=5.0)
+                              for s in stream.streams)
+        guard = ShardedStream(member_guards)
+        goodput = lambda: min(g.goodput for g in member_guards)  # noqa: E731
     else:
         stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=args.seq,
                                    n_domains=cfg.n_domains, seed=args.seed)
-    guard = StragglerGuard(stream, deadline_s=5.0)
+        guard = StragglerGuard(stream, deadline_s=5.0)
+        goodput = lambda: guard.goodput  # noqa: E731
 
     state = init_train_state(model, jax.random.PRNGKey(args.seed))
     start_step = 0
@@ -180,7 +208,7 @@ def main(argv=None):
             eb = dict(to_batch(eval_window),
                       weights=jnp.ones((args.batch,), jnp.float32))
             print(f"  eval loss {float(eval_fn(train_state.params, eb)):.4f} "
-                  f"goodput {guard.goodput:.3f}")
+                  f"goodput {goodput():.3f}")
         if mgr is not None and (step + 1) % args.ckpt_every == 0:
             # snapshots to host before the next step donates the state
             mgr.save(step + 1, train_state, extra={"arch": args.arch})
@@ -190,7 +218,9 @@ def main(argv=None):
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
                           score_seq_len=min(args.seq, 1024), sketch_dim=8,
-                          policy=policy, nonfinite_guard=args.guard)
+                          policy=policy, nonfinite_guard=args.guard,
+                          dist_topk=args.dist_topk,
+                          overlap_select=args.overlap_select)
         engine = TitanEngine.from_config(
             ttn, model, train_step_fn=train_step,
             params_of=lambda s: s.params, batch_size=args.batch, mesh=mesh)
@@ -199,7 +229,9 @@ def main(argv=None):
         print(f"[engine] policy={engine.policy.name} "
               f"window={engine.window_size} buffer={engine.buffer_size} "
               f"prefetch={args.prefetch} donate={engine.donate} "
-              f"guard={engine.guard} mesh={args.mesh or 'none'}")
+              f"guard={engine.guard} mesh={args.mesh or 'none'} "
+              f"topk={'tournament' if engine.tournament else 'two_phase'} "
+              f"overlap={engine.overlap}")
         cursor0 = stream_cursor(guard)
         init_host = (jax.tree.map(np.asarray, estate)
                      if args.max_restarts > 0 else None)
@@ -208,6 +240,7 @@ def main(argv=None):
             try:
                 estate, _ = engine.run(
                     estate, guard, rounds, prefetch=args.prefetch,
+                    prefetch_workers=args.prefetch_workers,
                     metrics_every=args.log_every, on_metrics=log_metrics,
                     on_round=lambda step, st, m: eval_and_ckpt(step,
                                                                st.train),

@@ -128,26 +128,70 @@ def test_bench_shard_smoke_writes_json(tmp_path):
     payload = bench_shard.main(smoke=True, json_path=path)
     with open(path) as f:
         ondisk = json.load(f)
-    assert ondisk["schema"] == payload["schema"] == "bench_shard/v1"
+    assert ondisk["schema"] == payload["schema"] == "bench_shard/v2"
+    assert payload["cores"] >= 1
     shards = {r["data_shards"] for r in payload["scaling"]}
     assert {1, 2} <= shards
     for r in payload["scaling"]:
         assert {"data_shards", "rounds_per_sec", "rounds_per_sec_e2e",
                 "speedup_vs_single", "speedup_vs_single_e2e",
-                "host_window_ms"} <= set(r)
+                "stage_ms", "host_window_ms"} <= set(r)
         assert r["rounds_per_sec"] > 0 and r["rounds_per_sec_e2e"] > 0
+        assert r["stage_ms"]["host_serial"] > 0
     two = next(r for r in payload["scaling"] if r["data_shards"] == 2)
-    # CI gate (ISSUE 5): the 2-device forced-host run must keep >= 0.9x the
-    # single-device device-side rounds/sec. That acceptance number is
-    # recorded by the committed BENCH_shard.json (0.93x on the full run);
-    # the smoke gate carries the same noise slack as the pipeline/buffer
-    # gates (shared 2-core CI runners) — the lanes run interleaved in one
-    # process with paired-median ratios, so a sub-0.8 reading means the
-    # sharded plane itself regressed, not box weather
-    assert two["speedup_vs_single"] >= 0.8, two
+    # CI gate (ISSUE 8, raised from the PR-5 0.9x): with the overlapped
+    # selection collective and the tournament top-k the 2-device run must
+    # BEAT the single device — but only where that is physically possible.
+    # Forced host devices split real cores, so the >= 1.05x gate applies
+    # when the box has >= 2 cores per shard (+ noise slack as in the
+    # pipeline/buffer gates); on smaller boxes the run bounds the sharded
+    # plane's *overhead* instead (the PR-5 floor: interleaved lanes with
+    # paired-median ratios, so sub-0.8 means the plane itself regressed).
+    if payload["cores"] >= 4:
+        assert two["speedup_vs_single"] >= 1.05, two
+    else:
+        assert two["speedup_vs_single"] >= 0.8, two
+    t = two["tournament"]
+    assert t["rounds_per_sec"] > 0
+    assert t["speedup_vs_single"] > 0
+    # the overlapped segments were actually timed
+    assert two["stage_ms"]["select"] > 0 and two["stage_ms"]["train"] > 0
+    assert two["stage_ms"]["host_pool"] > 0
     ar = payload["allreduce"]
     assert ar["int8_bytes"] < ar["fp32_bytes"]
     assert 3.0 <= ar["ratio"] <= 4.5, ar
+    # selection-collective payload accounting: tournament flat, two-phase
+    # linear — the ratio must grow with the shard count
+    sp = {r["data_shards"]: r for r in payload["select_payload"]}
+    assert sp[16]["ratio"] > sp[2]["ratio"]
+    for r in sp.values():
+        assert r["tournament_bytes"] < r["two_phase_bytes"]
+
+
+def test_bench_shard_4dev_tournament_gate(tmp_path):
+    """ISSUE 8 CI lane: 4 forced-host shards with the tournament on. The
+    >= 1.3x smoke gate applies where the box can physically scale (>= 2
+    cores per shard); below that the lane still proves the 4-way plane
+    holds its overhead floor and records honest numbers + the payload
+    tables."""
+    from benchmarks import bench_shard
+
+    path = _json_path(tmp_path, "BENCH_shard4.json")
+    payload = bench_shard.main(smoke=True, json_path=path, shards=(1, 4))
+    four = next(r for r in payload["scaling"] if r["data_shards"] == 4)
+    t = four["tournament"]
+    assert t["rounds_per_sec"] > 0 and t["speedup_vs_single"] > 0
+    if payload["cores"] >= 8:
+        assert t["speedup_vs_single"] >= 1.3, four
+        assert four["speedup_vs_single"] >= 1.0, four
+    else:
+        # overhead floor (see the 2-device gate rationale)
+        assert four["speedup_vs_single"] >= 0.6, four
+    # host plane: the pool must not catastrophically regress the serial
+    # producer even when both share one core
+    assert four["stage_ms"]["host_pool"] > 0
+    assert (four["stage_ms"]["host_pool"]
+            <= 3.0 * four["stage_ms"]["host_serial"] + 5.0), four
 
 
 def test_bench_faults_smoke_writes_json(tmp_path):

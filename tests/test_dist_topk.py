@@ -1,0 +1,288 @@
+"""Distributed top-k flavors (DESIGN.md §8): the ppermute merge tournament
+must be *exact* against the two-phase all-gather pool for deterministic
+top-k policies, and the payload accounting must show why it exists — B
+survivors x log2(S) merges instead of a k_prop·S pool all-gather.
+
+Single-device tests cover the rank-score contract, mode validation and the
+payload math; ``multidevice`` tests (the CI ``mesh`` job) run the real
+thing in lockstep against two_phase and the fused-vs-overlapped round
+split."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TitanConfig
+from repro.core.baselines import _topk
+from repro.core.engine import TitanEngine
+from repro.core.registry import get_policy
+from repro.data.stream import ShardedStream, mixed_rng
+from repro.dist.collectives import (candidate_row_bytes,
+                                    tournament_payload_bytes,
+                                    tournament_topk, twophase_payload_bytes)
+from repro.hooks import har_hooks
+from repro.launch.mesh import make_engine_mesh
+from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+C, IN, B, W = 4, 12, 8, 16
+
+
+def _require(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+
+
+class IdStream:
+    """Per-shard gaussian stream with a globally unique, exactly
+    representable id channel in x[:, 0] (see tests/test_shard.py)."""
+
+    def __init__(self, seed, shard=0, num_shards=1, window=W):
+        self.seed, self.shard, self.num_shards = seed, shard, num_shards
+        self.window = window
+        base = np.random.RandomState(seed)
+        self.centers = base.randn(C, IN) * 2.0
+        self.round = 0
+
+    def next_window(self, n):
+        rs = mixed_rng(self.seed, self.shard, self.round)
+        ids = self.round * self.window + self.shard * n + np.arange(n)
+        self.round += 1
+        y = rs.randint(0, C, n)
+        x = (self.centers[y] + rs.randn(n, IN)).astype(np.float32)
+        x[:, 0] = ids / 4096.0
+        return {"x": x, "y": y.astype(np.int32),
+                "domain": y.astype(np.int32)}
+
+    def window_specs(self, n):
+        return {"x": jax.ShapeDtypeStruct((n, IN), np.float32),
+                "y": jax.ShapeDtypeStruct((n,), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32)}
+
+
+def ids_of(x):
+    return np.round(np.asarray(x)[:, 0] * 4096).astype(int)
+
+
+def _setup(seed=0):
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(24, 12), n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    return ecfg, params, har_hooks(ecfg)
+
+
+def _make_train(ecfg, axis=None, lr=0.2):
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        if axis:
+            g, loss = jax.lax.pmean((g, loss), axis)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+
+    return train
+
+
+def _engine(mesh, *, rounds, hooks, ecfg, batch=B, **cfg_kw):
+    M = W * (rounds + 2)
+    tcfg = TitanConfig(policy="hl", stream_ratio=W // B, buffer_decay=1.0,
+                       evict_selected=True, **cfg_kw)
+    return TitanEngine.from_config(
+        tcfg, hooks=hooks,
+        train_step_fn=_make_train(ecfg, "data" if mesh is not None else None),
+        params_of=lambda s: s, batch_size=batch, n_classes=C, buffer_size=M,
+        mesh=mesh)
+
+
+def _run(engine, stream, rounds, params, seed=2):
+    w0 = stream.next_window(W)
+    st = engine.init(jax.random.PRNGKey(seed), params, w0)
+    sel = []
+    st, m = engine.run(st, stream, rounds, prefetch=0, metrics_every=1,
+                       window_size=W,
+                       on_round=lambda r, s, _m: sel.append(
+                           ids_of(s.next_batch["x"]).tolist()))
+    return st, m, sel
+
+
+def _mk_stream(S, seed=7):
+    return ShardedStream.make(
+        lambda shard, num_shards: IdStream(seed, shard, num_shards), S)
+
+
+# -- payload accounting ------------------------------------------------------
+
+
+def test_payload_math_flat_vs_linear_in_shards():
+    """The reason the tournament exists: two-phase selection traffic grows
+    linearly with the shard count, the tournament's only logarithmically."""
+    pay = {"x": jax.ShapeDtypeStruct((B, IN), np.float32),
+           "y": jax.ShapeDtypeStruct((B,), np.int32)}
+    rb = candidate_row_bytes(pay)
+    assert rb == IN * 4 + 4
+    assert twophase_payload_bytes(rb, B, 2) == B * rb
+    two = [twophase_payload_bytes(rb, B, S) for S in (2, 4, 8, 16)]
+    trn = [tournament_payload_bytes(rb, B, S) for S in (2, 4, 8, 16)]
+    assert two[-1] / two[0] == 15.0          # (16-1)/(2-1): linear
+    assert trn[-1] / trn[0] == 4.0           # log2(16)/log2(2): flat-ish
+    assert tournament_payload_bytes(rb, B, 1) == 0
+    # scalar payload (no leading-dim leaves beyond 1-D): one itemsize/row
+    assert candidate_row_bytes({"s": jax.ShapeDtypeStruct((B,),
+                                                          np.float32)}) == 4
+
+
+# -- the rank-score contract -------------------------------------------------
+
+
+def test_rank_scores_reproduce_select_for_deterministic_policies():
+    """deterministic_topk contract (registry docstring): select() must equal
+    _topk(rank_scores(stats), valid, batch) — the tournament merges by the
+    rank score alone, so any divergence breaks exactness."""
+    rs = np.random.RandomState(3)
+    n = 24
+    stats = {"loss": jnp.asarray(rs.randint(0, 5, n) / 4.0,
+                                 jnp.float32),       # ties on purpose
+             "entropy": jnp.asarray(rs.rand(n), jnp.float32),
+             "domain": jnp.zeros((n,), jnp.int32)}
+    valid = jnp.asarray(rs.rand(n) > 0.3)
+    rng = jax.random.PRNGKey(0)
+    for name in ("ll", "hl", "ce"):
+        pol = get_policy(name, TitanConfig())
+        assert pol.deterministic_topk
+        idx, w, _ = pol.select(rng, (), stats, valid, 6)
+        ridx, rw = _topk(pol.rank_scores(stats), valid, 6)
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx), name)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(rw), name)
+    for name in ("rs", "is", "titan-cis"):
+        pol = get_policy(name, TitanConfig())
+        assert not pol.deterministic_topk
+        with pytest.raises(NotImplementedError, match="rank_scores"):
+            pol.rank_scores(stats)
+
+
+# -- mode resolution ---------------------------------------------------------
+
+
+def test_dist_topk_mode_validation():
+    ecfg, params, hooks = _setup()
+    with pytest.raises(ValueError, match="dist_topk"):
+        _engine(None, rounds=2, hooks=hooks, ecfg=ecfg, dist_topk="bogus")
+    with pytest.raises(ValueError, match="deterministic"):
+        TitanEngine.from_config(
+            TitanConfig(policy="rs", dist_topk="tournament"), hooks=hooks,
+            train_step_fn=_make_train(ecfg), batch_size=B, n_classes=C)
+    # explicit tournament without a mesh validates but stays single-device
+    e = _engine(None, rounds=2, hooks=hooks, ecfg=ecfg,
+                dist_topk="tournament")
+    assert not e.tournament and not e.overlap
+
+
+def test_non_power_of_two_axis_raises():
+    from repro.dist.collectives import tournament_topk as tt
+    with pytest.raises(ValueError, match="power-of-two"):
+        tt("data", 3, jnp.zeros((4,)), jnp.arange(4), {}, 2)
+
+
+def test_tournament_at_data1_matches_single_device():
+    """dist_topk="tournament" on a 1-way mesh degenerates to a local
+    order_topk — still id-for-id with the mesh=None engine."""
+    ecfg, params, hooks = _setup()
+    rounds = 4
+    et = _engine(make_engine_mesh(1, 1), rounds=rounds, hooks=hooks,
+                 ecfg=ecfg, dist_topk="tournament")
+    assert et.tournament
+    e1 = _engine(None, rounds=rounds, hooks=hooks, ecfg=ecfg)
+    _, mt, selt = _run(et, _mk_stream(1), rounds, params)
+    _, m1, sel1 = _run(e1, _mk_stream(1), rounds, params)
+    assert selt == sel1
+    np.testing.assert_allclose(float(mt["loss"]), float(m1["loss"]),
+                               rtol=1e-6)
+
+
+# -- multidevice: the real merge tournament ---------------------------------
+
+
+@pytest.mark.multidevice
+def test_auto_mode_engages_tournament_only_when_exact():
+    _require(2)
+    ecfg, params, hooks = _setup()
+    mesh = make_engine_mesh(2, 1)
+    e_hl = _engine(mesh, rounds=2, hooks=hooks, ecfg=ecfg)
+    assert e_hl.tournament and e_hl.overlap          # defaults: auto + split
+    e_cis = TitanEngine.from_config(
+        TitanConfig(stream_ratio=2), hooks=hooks,
+        train_step_fn=_make_train(ecfg, "data"), params_of=lambda s: s,
+        batch_size=B, n_classes=C, buffer_size=32, mesh=mesh)
+    assert not e_cis.tournament                       # sampling policy
+    e_off = _engine(mesh, rounds=2, hooks=hooks, ecfg=ecfg,
+                    dist_topk="two_phase", overlap_select=False)
+    assert not e_off.tournament and not e_off.overlap
+
+
+@pytest.mark.multidevice
+def test_tournament_topk_unit_exact_with_ties():
+    """tournament_topk under shard_map == jax.lax.top_k over the gathered
+    pool, payload rows riding along — with heavy score ties, so the
+    lowest-pool-position tie-break is actually exercised."""
+    _require(4)
+    S, N, k = 4, 6, 5
+    mesh = make_engine_mesh(4, 1)
+    rs = np.random.RandomState(0)
+    scores = rs.randint(0, 4, S * N).astype(np.float32)
+    pos = np.arange(S * N, dtype=np.int32)
+    rows = (np.arange(S * N, dtype=np.int32) * 10)
+    from jax.experimental.shard_map import shard_map
+    f = shard_map(lambda s, p, pl: tournament_topk("data", S, s, p, pl, k),
+                  mesh=mesh, in_specs=(P("data"), P("data"), P("data")),
+                  out_specs=(P(), P(), P()), check_rep=False)
+    s_g, p_g, pl_g = f(jnp.asarray(scores), jnp.asarray(pos),
+                       {"row": jnp.asarray(rows)})
+    order = np.lexsort((pos, -scores))[:k]
+    np.testing.assert_array_equal(np.asarray(p_g), pos[order])
+    np.testing.assert_array_equal(np.asarray(s_g), scores[order])
+    np.testing.assert_array_equal(np.asarray(pl_g["row"]), rows[order])
+    # the reference order IS top_k's (ties break to the lowest index)
+    _, ti = jax.lax.top_k(jnp.asarray(scores), k)
+    np.testing.assert_array_equal(np.asarray(ti), pos[order])
+
+
+@pytest.mark.multidevice
+def test_tournament_matches_two_phase_lockstep():
+    """Acceptance: dist_topk="tournament" vs "two_phase" on a 4-way mesh,
+    same streams — identical selected ids (order included) every round and
+    bit-identical training trajectories (same rows in the same slots feed
+    the same pmean)."""
+    _require(4)
+    ecfg, params, hooks = _setup()
+    rounds = 6
+    e_t = _engine(make_engine_mesh(4, 1), rounds=rounds, hooks=hooks,
+                  ecfg=ecfg, dist_topk="tournament", overlap_select=False)
+    e_2 = _engine(make_engine_mesh(4, 1), rounds=rounds, hooks=hooks,
+                  ecfg=ecfg, dist_topk="two_phase", overlap_select=False)
+    assert e_t.tournament and not e_2.tournament
+    st_t, m_t, sel_t = _run(e_t, _mk_stream(4), rounds, params)
+    st_2, m_2, sel_2 = _run(e_2, _mk_stream(4), rounds, params)
+    assert sel_t == sel_2, "tournament selection diverged from two-phase"
+    assert float(m_t["loss"]) == float(m_2["loss"])
+    for a, b in zip(jax.tree.leaves(st_2.train), jax.tree.leaves(st_t.train)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.multidevice
+def test_overlapped_round_matches_fused_step():
+    """Acceptance: the split select-then-train dispatch (overlap_select) is
+    value-identical to the fused round — same selected ids, same loss, same
+    final train state."""
+    _require(4)
+    ecfg, params, hooks = _setup()
+    rounds = 6
+    for dist in ("two_phase", "tournament"):
+        e_ov = _engine(make_engine_mesh(4, 1), rounds=rounds, hooks=hooks,
+                       ecfg=ecfg, dist_topk=dist, overlap_select=True)
+        e_fu = _engine(make_engine_mesh(4, 1), rounds=rounds, hooks=hooks,
+                       ecfg=ecfg, dist_topk=dist, overlap_select=False)
+        assert e_ov.overlap and not e_fu.overlap
+        st_o, m_o, sel_o = _run(e_ov, _mk_stream(4), rounds, params)
+        st_f, m_f, sel_f = _run(e_fu, _mk_stream(4), rounds, params)
+        assert sel_o == sel_f, f"overlap diverged from fused ({dist})"
+        assert float(m_o["loss"]) == float(m_f["loss"])
+        for a, b in zip(jax.tree.leaves(st_f.train),
+                        jax.tree.leaves(st_o.train)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -227,3 +227,143 @@ def test_prefetcher_close_interrupts_retry_backoff():
     pf.close()
     assert time.monotonic() - t0 < 2.0, "close() waited out the backoff"
     assert not pf.leaked
+
+
+# -- per-shard worker pool ---------------------------------------------------
+
+
+class FakeSharded:
+    """Minimal .streams holder so the pool can run over arbitrary member
+    stubs (ShardedStream requires the full StreamProtocol)."""
+
+    def __init__(self, members):
+        self.streams = tuple(members)
+
+    def next_window(self, n):  # the serial reference path
+        per = n // len(self.streams)
+        sl = [s.next_window(per) for s in self.streams]
+        return {k: np.concatenate([s[k] for s in sl]) for k in sl[0]}
+
+
+def test_pool_reassembles_bit_identical_shard_major():
+    """One producer per member, reassembled shard-major: windows identical
+    to the serial ShardedStream concatenation, in round order."""
+    from repro.data.stream import ShardedStream
+
+    def mk():
+        return ShardedStream.make(
+            lambda shard, num_shards: GaussianMixtureStream(
+                in_dim=6, n_classes=3, seed=9, shard=shard,
+                num_shards=num_shards), 4)
+
+    ref = mk()
+    with Prefetcher(mk(), 8, depth=2, workers=4) as pf:
+        assert pf.workers == 4
+        for _ in range(5):
+            want, got = ref.next_window(8), pf.get()
+            for k in want:
+                np.testing.assert_array_equal(np.asarray(got[k]), want[k])
+
+
+def test_pool_auto_detection_and_forced_workers_validation():
+    s = FakeSharded([Flaky({}), Flaky({})])
+    with Prefetcher(s, 8, depth=1) as pf:          # auto: 2 members -> pool
+        assert pf.workers == 2
+    with Prefetcher(s, 8, depth=1, workers=0) as pf:  # forced serial
+        assert pf.workers == 0
+    lone = SyntheticLMStream(vocab=100, seq_len=8, seed=1)
+    with Prefetcher(lone, 8, depth=1) as pf:       # unsharded -> serial
+        assert pf.workers == 0
+    with pytest.raises(ValueError, match="member shards"):
+        Prefetcher(lone, 8, depth=1, workers=2)
+    with pytest.raises(ValueError, match="2 member"):
+        Prefetcher(s, 8, depth=1, workers=3)
+    with pytest.raises(ValueError, match="divide"):
+        Prefetcher(FakeSharded([Flaky({})] * 3), 8, depth=1, workers=3)
+    with pytest.raises(ValueError, match="depth"):
+        Prefetcher(s, 8, depth=0, workers=2)
+
+
+def test_pool_per_member_retry_replays_only_the_faulted_shard():
+    """A transient fault on one member must not advance (or re-draw) its
+    siblings: per-member retry keeps every round single-round."""
+    from repro.data.loader import TransientStreamError
+    flaky = Flaky({1: TransientStreamError("blip"),
+                   2: TimeoutError("socket")})
+    steady = Flaky({})
+    with Prefetcher(FakeSharded([steady, flaky]), 4, depth=2, retries=3,
+                    backoff_s=0.001) as pf:
+        for r in range(4):
+            w = pf.get()
+            np.testing.assert_array_equal(np.asarray(w["x"])[:, 0],
+                                          np.full(4, r))
+    assert pf.retried == 2
+
+
+def test_pool_worker_error_surfaces_on_get():
+    bad = Flaky({1: ValueError("member shard corrupted")})
+    pf = Prefetcher(FakeSharded([Flaky({}), bad]), 4, depth=2)
+    pf.get()
+    with pytest.raises(ValueError, match="member shard corrupted"):
+        pf.get()
+    assert pf._thread is None   # closed itself after surfacing the error
+
+
+def test_pool_close_drains_every_worker_queue_while_joining():
+    """Pool extension of the shutdown-race regression: with the consumer
+    never reading, every member producer AND the assembler are stalled on
+    full queues; close() must drain all of them while joining and leak
+    nothing."""
+    from repro.data.stream import ShardedStream
+    s = ShardedStream.make(
+        lambda shard, num_shards: GaussianMixtureStream(
+            in_dim=6, n_classes=3, seed=4, shard=shard,
+            num_shards=num_shards), 4)
+    pf = Prefetcher(s, 8, depth=1)
+    assert pf.workers == 4
+    deadline = time.monotonic() + 5.0
+    while any(q.qsize() < 1 for q in pf._wqs) and time.monotonic() < deadline:
+        time.sleep(0.01)   # every worker queue full; producers stalled
+    threads = pf._threads
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 2.0, "close() stalled on the pool"
+    assert not any(t.is_alive() for t in threads)
+    assert not pf.leaked
+    with pytest.raises(RuntimeError, match="closed"):
+        pf.get()
+
+
+def test_pool_close_interrupts_backoff_in_every_worker():
+    """The stop event must wake ALL members parked in retry backoff, not
+    just one: close() is bounded by the join timeout, not the backoff."""
+    from repro.data.loader import TransientStreamError
+    members = [Flaky({i: TransientStreamError("down") for i in range(100)})
+               for _ in range(3)]
+    pf = Prefetcher(FakeSharded(members), 6, depth=1, retries=50,
+                    backoff_s=30.0)
+    deadline = time.monotonic() + 5.0
+    while any(m.calls == 0 for m in members) and time.monotonic() < deadline:
+        time.sleep(0.01)   # all three workers parked in their first backoff
+    t0 = time.monotonic()
+    pf.close()
+    assert time.monotonic() - t0 < 2.0, "close() waited out a backoff"
+    assert not pf.leaked
+
+
+def test_pool_rounds_cap_and_data_counters():
+    from repro.data.stream import ShardedStream
+    s = ShardedStream.make(
+        lambda shard, num_shards: GaussianMixtureStream(
+            in_dim=6, n_classes=3, seed=2, shard=shard,
+            num_shards=num_shards), 2)
+    with Prefetcher(s, 8, depth=2, rounds=3) as pf:
+        assert len(list(pf)) == 3
+        with pytest.raises(StreamExhausted):
+            pf.get()
+        c = pf.data_counters()
+    assert c["titan_data_workers"] == 2
+    assert c["titan_data_produced"] == 3
+    assert c["titan_data_produced_per_sec"] > 0
+    assert c["titan_data_get_wait_ms"] >= 0
+    assert 0.0 <= c["titan_data_queue_frac"] <= 1.0

@@ -1,0 +1,140 @@
+"""The multi-worker host data plane must be invisible to training.
+
+engine.run is required to be bit-identical — selected ids AND loss — whether
+windows come from the serial producer (``prefetch_workers=0``), the
+per-shard worker pool, or the pool with transient faults injected on every
+member stream (the pool's per-member retry replays exactly the faulted
+shard's round without advancing its siblings; DESIGN.md §9). Runs on one
+device (no ``multidevice`` marker) so the tier-1 suite covers it; the CI
+``mesh`` job repeats it under forced host devices."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import TitanConfig
+from repro.core.engine import TitanEngine
+from repro.data.stream import ShardedStream, mixed_rng
+from repro.ft.faults import FaultyStream
+from repro.hooks import har_hooks
+from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+C, IN, B, W = 4, 12, 8, 16
+ROUNDS = 5
+
+DATA_KEYS = ("titan_data_workers", "titan_data_produced",
+             "titan_data_produced_per_sec", "titan_data_get_wait_ms",
+             "titan_data_queue_frac", "titan_data_retried",
+             "titan_data_leaked")
+
+
+class IdStream:
+    """Per-shard gaussian stream with a globally unique, exactly
+    representable id channel in x[:, 0] (see tests/test_shard.py)."""
+
+    def __init__(self, seed, shard=0, num_shards=1, window=W):
+        self.seed, self.shard, self.num_shards = seed, shard, num_shards
+        self.window = window
+        base = np.random.RandomState(seed)
+        self.centers = base.randn(C, IN) * 2.0
+        self.round = 0
+
+    def next_window(self, n):
+        rs = mixed_rng(self.seed, self.shard, self.round)
+        ids = self.round * self.window + self.shard * n + np.arange(n)
+        self.round += 1
+        y = rs.randint(0, C, n)
+        x = (self.centers[y] + rs.randn(n, IN)).astype(np.float32)
+        x[:, 0] = ids / 4096.0
+        return {"x": x, "y": y.astype(np.int32),
+                "domain": y.astype(np.int32)}
+
+    def window_specs(self, n):
+        return {"x": jax.ShapeDtypeStruct((n, IN), np.float32),
+                "y": jax.ShapeDtypeStruct((n,), np.int32),
+                "domain": jax.ShapeDtypeStruct((n,), np.int32)}
+
+
+def ids_of(x):
+    return np.round(np.asarray(x)[:, 0] * 4096).astype(int)
+
+
+def _mk_stream(S, faults=False):
+    def fac(shard, num_shards):
+        s = IdStream(7, shard, num_shards)
+        if faults:
+            # "transient" raises BEFORE the member advances, so the retry
+            # replays the same round bit-for-bit ("short"/"nan" would not)
+            return FaultyStream(s, seed=31 + shard,
+                                schedule={1: "transient", 3: "transient"})
+        return s
+    return ShardedStream.make(fac, S)
+
+
+def _run_lane(S, workers, faults=False, prefetch=2):
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(24, 12), n_classes=C)
+    params = mlp_init(ecfg, jax.random.PRNGKey(0))
+    hooks = har_hooks(ecfg)
+
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        return jax.tree.map(lambda a, gg: a - 0.2 * gg, p, g), {"loss": loss}
+
+    tcfg = TitanConfig(policy="hl", stream_ratio=W // B, buffer_decay=1.0,
+                       evict_selected=True)
+    engine = TitanEngine.from_config(
+        tcfg, hooks=hooks, train_step_fn=train, params_of=lambda s: s,
+        batch_size=B, n_classes=C, buffer_size=W * (ROUNDS + 2))
+    stream = _mk_stream(S, faults)
+    st = engine.init(jax.random.PRNGKey(2), params, stream.next_window(W))
+    sel = []
+    st, m = engine.run(st, stream, ROUNDS, prefetch=prefetch,
+                       prefetch_workers=workers, metrics_every=1,
+                       window_size=W,
+                       on_round=lambda r, s, _m: sel.append(
+                           ids_of(s.next_batch["x"]).tolist()))
+    return sel, float(m["loss"]), m
+
+
+@pytest.mark.parametrize("S", [1, 2, 4])
+def test_pool_engine_run_bit_identical_to_serial(S):
+    """Acceptance: selected ids + loss identical across serial producer,
+    forced S-worker pool, and the pool under per-member transient faults."""
+    ref_sel, ref_loss, _ = _run_lane(S, workers=0)
+    pool_sel, pool_loss, pm = _run_lane(S, workers=S)
+    assert pool_sel == ref_sel, f"pool selection diverged at S={S}"
+    assert pool_loss == ref_loss
+    assert pm["titan_data_workers"] == S and pm["titan_data_retried"] == 0
+
+    flt_sel, flt_loss, fm = _run_lane(S, workers=S, faults=True)
+    assert flt_sel == ref_sel, f"faulted pool diverged at S={S}"
+    assert flt_loss == ref_loss
+    # the schedule fired twice per member and every fault was retried
+    assert fm["titan_data_retried"] == 2 * S
+
+
+def test_auto_selects_pool_for_sharded_streams():
+    """prefetch_workers=None auto-detects: pool for a multi-member
+    ShardedStream, serial for S=1 — both still bit-identical."""
+    ref_sel, ref_loss, _ = _run_lane(2, workers=0)
+    auto_sel, auto_loss, am = _run_lane(2, workers=None)
+    assert (auto_sel, auto_loss) == (ref_sel, ref_loss)
+    assert am["titan_data_workers"] == 2
+    _, _, m1 = _run_lane(1, workers=None)
+    assert m1["titan_data_workers"] == 0        # serial path
+
+
+def test_engine_exports_data_plane_counters():
+    """Satellite: the titan_data_* host counters ride the health-metric
+    path — present in run() metrics, and advancing."""
+    _, _, m = _run_lane(2, workers=2)
+    for k in DATA_KEYS:
+        assert k in m, k
+    assert m["titan_data_produced"] == ROUNDS
+    assert m["titan_data_produced_per_sec"] > 0
+    assert m["titan_data_get_wait_ms"] >= 0
+    assert 0.0 <= m["titan_data_queue_frac"] <= 1.0
+    assert m["titan_data_leaked"] == 0
+    # ints after the engine's cast (back-compat with PR 6/7 consumers)
+    for k in ("titan_data_workers", "titan_data_produced",
+              "titan_data_retried", "titan_data_leaked"):
+        assert isinstance(m[k], int), k
