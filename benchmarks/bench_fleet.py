@@ -1,0 +1,113 @@
+"""Fleet benchmark: federated rounds at N ≫ devices under churn
+(DESIGN.md §11) — the promotion of bench_fig10's 50-client loop onto the
+:class:`repro.fleet.FleetOrchestrator`.
+
+Three lanes over the same non-IID client fleet (titan-cis local
+selection):
+
+- ``fp32``  — churn-free, uncompressed FedAvg: the accuracy/bytes
+  baseline.
+- ``int8``  — churn-free, int8-compressed deltas. Gated: bytes/round must
+  be ≤ 0.3× the fp32 lane and final accuracy within 1% absolute of it
+  (compression must be a wire win, never a quality regression).
+- ``churn`` — int8 plus seeded chaos: ≥10% per-client-round crash/drop
+  (rejoin 50%), per-client straggler deadlines, and (full mode, ≥4
+  devices) a mid-run 4→2→4 elastic reshard. Gated: final accuracy within
+  1% absolute of the churn-free int8 lane — robustness means churn costs
+  wire retries and wall-clock, not model quality.
+
+Also records clients/sec (completed sessions per wall second — the fleet
+throughput number), late/crashed session counts, and restart cleanliness.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet            # full: 100 clients
+    PYTHONPATH=src python -m benchmarks.bench_fleet --smoke    # CI-sized
+
+Writes ``BENCH_fleet.json`` (schema ``bench_fleet/v1``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Dict
+
+# gates (mirrored by tests/test_bench_smoke.py)
+INT8_BYTES_MAX_RATIO = 0.3
+ACC_DELTA_MAX = 0.01
+
+
+def _lanes(smoke: bool) -> Dict[str, Dict]:
+    import jax
+
+    from repro.launch.fleet import churn_faults, run_fleet
+
+    if smoke:
+        size = dict(clients=12, cohort=4, rounds=8, local_iters=2, seed=0)
+        churn, deadline = 0.12, None
+        devices_schedule = None
+    else:
+        size = dict(clients=100, cohort=8, rounds=24, local_iters=3, seed=0)
+        churn, deadline = 0.12, 20.0
+        # one mid-run 4 -> 2 -> 4 elastic reshard when the process has the
+        # devices for it (the CI fleet lane forces 4 host devices)
+        devices_schedule = ({8: 2, 16: 4} if jax.device_count() >= 4
+                            else None)
+    start_devices = 4 if (not smoke and jax.device_count() >= 4) else 1
+
+    lanes: Dict[str, Dict] = {}
+    for name, kw in (
+            ("fp32", dict(compress="none")),
+            ("int8", dict(compress="int8")),
+            ("churn", dict(compress="int8", churn=churn,
+                           deadline_s=deadline, devices=start_devices,
+                           devices_schedule=devices_schedule,
+                           faults=None))):
+        t0 = time.perf_counter()
+        out = run_fleet("titan-cis", drift=0.01, **size, **kw)
+        out.pop("global_train")
+        out["bench_wall_s"] = time.perf_counter() - t0
+        # record the reshard evidence from the FULL run before truncating
+        out["devices_seen"] = sorted({r["devices"] for r in out["history"]})
+        out["history"] = out["history"][-4:]    # tail only: keep JSON small
+        lanes[name] = out
+    return lanes
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_fleet.json") -> Dict:
+    lanes = _lanes(smoke)
+    bytes_ratio = (lanes["int8"]["bytes_round"]
+                   / max(lanes["fp32"]["bytes_round_fp32"], 1))
+    acc_delta_int8 = abs(lanes["int8"]["final_acc"]
+                         - lanes["fp32"]["final_acc"])
+    acc_delta_churn = abs(lanes["churn"]["final_acc"]
+                          - lanes["int8"]["final_acc"])
+    payload = {
+        "schema": "bench_fleet/v1", "smoke": smoke,
+        "gates": {"int8_bytes_max_ratio": INT8_BYTES_MAX_RATIO,
+                  "acc_delta_max": ACC_DELTA_MAX},
+        "int8_bytes_ratio": bytes_ratio,
+        "acc_delta_int8_vs_fp32": acc_delta_int8,
+        "acc_delta_churn_vs_churnfree": acc_delta_churn,
+        "clients_per_sec": lanes["int8"]["clients_per_sec"],
+        "devices_seen": lanes["churn"]["devices_seen"],
+        "lanes": {k: {kk: vv for kk, vv in v.items() if kk != "accs"}
+                  for k, v in lanes.items()},
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print("# fleet benchmark (federated rounds under churn)")
+    for k, v in lanes.items():
+        print(f"{k:6s} acc {v['final_acc']:.3f} | "
+              f"{v['clients_per_sec']:6.2f} clients/s | "
+              f"{v['bytes_round'] / 1e3:8.1f} kB/round | "
+              f"late {v['late']} crashed {v['crashed_sessions']}")
+    print(f"int8/fp32 bytes ratio {bytes_ratio:.3f} "
+          f"(gate <= {INT8_BYTES_MAX_RATIO}) | "
+          f"acc delta int8 {acc_delta_int8:.4f}, "
+          f"churn {acc_delta_churn:.4f} (gate <= {ACC_DELTA_MAX})")
+    print(f"wrote {json_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

@@ -12,8 +12,8 @@ def main() -> None:
     from benchmarks import (bench_buffer, bench_faults, bench_fig2,
                             bench_fig5a, bench_fig5b, bench_fig5c, bench_fig6,
                             bench_fig8, bench_fig9, bench_fig10, bench_fig11,
-                            bench_kernels, bench_policies, bench_serve,
-                            bench_shard, bench_table1)
+                            bench_fleet, bench_kernels, bench_policies,
+                            bench_serve, bench_shard, bench_table1)
     csv = []
 
     def run(name, fn):
@@ -118,6 +118,15 @@ def main() -> None:
                 f"{cached['req_per_sec']:.1f}"))
     csv.append(("serve_reuse_savings_x", dt,
                 f"{out['flops']['reuse_savings_x']:.0f}"))
+
+    print("=" * 70)
+    name, dt, out = run("fleet", bench_fleet.main)  # writes BENCH_fleet.json
+    csv.append(("fleet_int8_bytes_ratio", dt,
+                f"{out['int8_bytes_ratio']:.3f}"))
+    csv.append(("fleet_acc_delta_churn", dt,
+                f"{out['acc_delta_churn_vs_churnfree']:.4f}"))
+    csv.append(("fleet_clients_per_sec", dt,
+                f"{out['clients_per_sec']:.2f}"))
 
     print("=" * 70)
     print("name,us_per_call,derived")

@@ -2,38 +2,31 @@
 
     python examples/federated.py [--rounds 40]     # runs from any directory
 
-50 clients with non-IID local streams (each missing one class); every round a
-random 20% train 3 local iterations — each client's local loop is one
-``engine.run()`` call over its own stream (policy "titan-cis") — and FedAvg
-aggregates. Compare against random local selection.
+A fleet of 50 clients with non-IID local streams (Dirichlet class mix, one
+class missing per client); every round a seeded cohort of 10 trains 3 local
+iterations — each client's local loop is one ``engine.run()`` over its own
+stream (policy "titan-cis"), suspended/resumed through per-client
+checkpoints by the :class:`repro.fleet.FleetOrchestrator` — and
+int8-compressed FedAvg aggregates. Compared against random local selection
+("rs") on the same fleet.
 """
 import os
 import sys
 
-_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
-sys.path.insert(0, os.path.join(_ROOT, "src"))
-sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
 
 import argparse
 
-from benchmarks.bench_fig10 import run
+from repro.launch.fleet import main as fleet_main
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=30)
     args = ap.parse_args()
-    t = run("titan", rounds=args.rounds)
-    r = run("rs", rounds=args.rounds)
-    print(f"\n{'round':>5s} {'titan':>7s} {'rs':>7s}")
-    for i, (a, b) in enumerate(zip(t["accs"], r["accs"])):
-        if (i + 1) % 5 == 0:
-            print(f"{i+1:5d} {a:7.3f} {b:7.3f}")
-    target = r["final_acc"]
-    reach = next((i + 1 for i, a in enumerate(t["accs"]) if a >= target),
-                 None)
-    print(f"\nfinal: titan {t['final_acc']:.3f} vs rs {r['final_acc']:.3f}; "
-          f"titan reached rs-final at round {reach}/{args.rounds}")
+    fleet_main(["--compare", "--clients", "50", "--cohort", "10",
+                "--rounds", str(args.rounds)])
 
 
 if __name__ == "__main__":

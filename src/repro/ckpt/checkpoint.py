@@ -138,7 +138,15 @@ class CheckpointManager:
     :class:`CheckpointError` (then clears it — the manager stays usable,
     e.g. to retry onto a fixed directory). ``_gc`` tolerates concurrent
     deletion: two restarted supervisors pruning the same directory, or an
-    operator rm-ing old steps mid-run, must not kill the writer."""
+    operator rm-ing old steps mid-run, must not kill the writer.
+
+    Multi-tenant scoping (the federated fleet path): ``save``/``latest``
+    take an optional ``client=`` name that namespaces the checkpoints under
+    ``<dir>/<client>/`` with **isolated** keep-last-k pruning — one
+    client's ``_gc`` only ever lists and deletes its own subdirectory, so
+    a chatty client can never prune a sibling's history. Client names must
+    be single path components and must not collide with the ``step_*``
+    entries of the root scope."""
 
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory
@@ -146,6 +154,17 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+
+    def _scope(self, client: Optional[str]) -> str:
+        if client is None:
+            return self.dir
+        client = str(client)
+        if (not client or os.sep in client or (os.altsep or "/") in client
+                or client in (".", "..") or client.startswith("step_")):
+            raise ValueError(
+                f"client {client!r} must be a single path component that "
+                f"does not shadow root-scope step_* checkpoints")
+        return os.path.join(self.dir, client)
 
     def _raise_pending(self):
         if self._error is not None:
@@ -160,14 +179,15 @@ class CheckpointManager:
             self._thread = None
         self._raise_pending()
 
-    def save(self, step: int, tree, *, extra=None):
+    def save(self, step: int, tree, *, extra=None, client: Optional[str] = None):
+        directory = self._scope(client)
         host = jax.tree.map(lambda x: np.asarray(x), tree)  # snapshot now
         self.wait()  # re-raises a recorded background failure
 
         def _do():
             try:
-                save_checkpoint(self.dir, step, host, extra=extra)
-                self._gc()
+                save_checkpoint(directory, step, host, extra=extra)
+                self._gc(directory)
             except BaseException as e:  # surface on the next wait()/save()
                 self._error = e
 
@@ -178,17 +198,29 @@ class CheckpointManager:
             _do()
             self._raise_pending()
 
-    def _gc(self):
+    def _gc(self, directory: Optional[str] = None):
+        # scoped: prunes exactly ONE directory's step_* entries. A client
+        # subdirectory never matches the step_ prefix (enforced by _scope),
+        # so root-scope GC cannot descend into — or delete — a tenant.
+        d = self.dir if directory is None else directory
         try:
-            cands = sorted(d for d in os.listdir(self.dir)
-                           if d.startswith("step_") and not d.endswith(".tmp"))
+            cands = sorted(c for c in os.listdir(d)
+                           if c.startswith("step_") and not c.endswith(".tmp"))
         except OSError:
             return  # directory vanished under us: nothing left to prune
-        for d in cands[:-self.keep] if self.keep else []:
+        for c in cands[:-self.keep] if self.keep else []:
             # ignore_errors also covers an entry deleted between listdir
             # and rmtree by a concurrent gc/operator
-            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+            shutil.rmtree(os.path.join(d, c), ignore_errors=True)
 
-    def latest(self):
+    def latest(self, client: Optional[str] = None):
         self.wait()
-        return find_latest(self.dir)
+        return find_latest(self._scope(client))
+
+    def clients(self):
+        """Existing client scopes (subdirectories holding checkpoints)."""
+        if not os.path.isdir(self.dir):
+            return []
+        return sorted(c for c in os.listdir(self.dir)
+                      if not c.startswith("step_")
+                      and os.path.isdir(os.path.join(self.dir, c)))

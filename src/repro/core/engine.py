@@ -31,6 +31,7 @@ to the pre-mesh code path.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
@@ -66,6 +67,28 @@ class EngineState:
                         # quarantine set if this round's update trips the
                         # guard (None when the guard is off: zero-leaf
                         # subtree, bit-identical state structure)
+
+
+# One-shot process-level notice for the overlap_select × nonfinite_guard
+# interaction: the guard's rollback couples the selection and train segments,
+# so a guarded engine must run the fused round. Falling back *silently* is
+# how a perf configuration quietly stops doing what its flag says — warn
+# once per process and record the effective mode in run() metrics
+# (``titan_overlap_active``).
+_overlap_guard_warned = False
+
+
+def _warn_overlap_guard_once():
+    global _overlap_guard_warned
+    if not _overlap_guard_warned:
+        _overlap_guard_warned = True
+        warnings.warn(
+            "overlap_select=True has no effect while nonfinite_guard=True: "
+            "the guard's quarantine/rollback couples the selection and train "
+            "segments, so the engine runs the fused round "
+            "(titan_overlap_active=0 in run() metrics). Disable the guard "
+            "to overlap selection with training.",
+            RuntimeWarning, stacklevel=3)
 
 
 def _default_params_of(s):
@@ -218,6 +241,8 @@ class TitanEngine:
             # rollback) and forces the fused path.
             self.overlap = bool(jit and not self.guard
                                 and self.cfg.overlap_select)
+            if jit and self.guard and self.cfg.overlap_select:
+                _warn_overlap_guard_once()
             if self.overlap:
                 data = P(data_axis)
                 pol = data if self.policy.shard_state else P()
@@ -990,7 +1015,10 @@ class TitanEngine:
             the stream is (or wraps) a StragglerGuard — its goodput and
             late-discard counters, and any ``health_counters()`` the stream
             itself exports (e.g. a serving RequestStream's queue depth)."""
-            h: Dict[str, Any] = {}
+            # effective round mode: 1 = overlapped select/train segments,
+            # 0 = fused round (single device, jit=False, or the non-finite
+            # guard forcing the coupled program — see _warn_overlap_guard_once)
+            h: Dict[str, Any] = {"titan_overlap_active": int(self.overlap)}
             pf = plane["pf"]
             if pf is not None:
                 dc = pf.data_counters()

@@ -280,6 +280,39 @@ class GaussianMixtureStream:
         return x.astype(np.float32), y.astype(np.int32)
 
 
+def non_iid_client_streams(n_clients: int, *, in_dim: int, n_classes: int,
+                           seed: int = 0, alpha: float = 0.5,
+                           missing_classes: int = 1,
+                           drift_per_round: float = 0.0,
+                           class_noise: Optional[np.ndarray] = None):
+    """Per-client federated streams (paper Appendix B, fleet edition).
+
+    Client ``c`` gets a :class:`GaussianMixtureStream` sharing the global
+    class centers (same ``seed``) but with its own Dirichlet(``alpha``)
+    class mix and ``missing_classes`` classes zeroed out — the standard
+    non-IID federated split — plus an *independent* drift trajectory:
+    the client id rides the ``shard`` field, so both the per-round sample
+    generators and the drift increments key on ``(seed, client, round)``
+    and no two clients ever correlate. Deterministic in ``(seed, c)``
+    alone — independent of construction order or fleet size — so a
+    crash-resumed orchestrator can rebuild any client's stream and
+    ``seek`` it to its checkpoint cursor exactly.
+    """
+    streams = []
+    for c in range(n_clients):
+        rs = mixed_rng(seed, 4242, c)
+        w = rs.dirichlet(np.ones(n_classes) * alpha)
+        for _ in range(max(0, int(missing_classes))):
+            w[rs.randint(0, n_classes)] = 0.0
+        s = w.sum()
+        w = np.ones(n_classes) / n_classes if s <= 0 else w / s
+        streams.append(GaussianMixtureStream(
+            in_dim=in_dim, n_classes=n_classes, seed=seed, shard=c,
+            num_shards=n_clients, class_noise=class_noise,
+            class_weights=w, drift_per_round=drift_per_round))
+    return streams
+
+
 @dataclass
 class ShardedStream:
     """Data-parallel stream: one ``StreamProtocol`` per data shard, windows

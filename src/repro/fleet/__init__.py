@@ -1,0 +1,12 @@
+"""Elastic federated fleet: N ≫ devices simulated clients time-multiplexed
+over the mesh with crash-safe rounds, straggler-bounded aggregation, and
+checkpoint-backed suspend/resume (DESIGN.md §11)."""
+from repro.fleet.orchestrator import (ClientLate, FleetConfig,
+                                      FleetOrchestrator, FleetStragglerGuard,
+                                      client_init_key, client_scope, fedavg,
+                                      seeded_cohort)
+
+__all__ = [
+    "ClientLate", "FleetConfig", "FleetOrchestrator", "FleetStragglerGuard",
+    "client_init_key", "client_scope", "fedavg", "seeded_cohort",
+]

@@ -1,0 +1,555 @@
+"""Churn-tolerant federated fleet orchestrator (DESIGN.md §11).
+
+The paper's on-device premise only matters at fleet scale: hundreds of
+clients, each with its own non-IID drifting stream and its own candidate
+buffer, of which only a small cohort checks in per round. This module
+time-multiplexes N ≫ devices simulated clients over one
+:class:`~repro.core.engine.TitanEngine` — each client's local training
+session is a plain ``engine.run`` over its private stream, suspended to a
+per-client checkpoint scope between rounds so only the active cohort's
+``EngineState``s are ever resident (disk is the state of record).
+
+Robustness is by construction, not by luck:
+
+- **Seeded partial participation** — each round's cohort draws from
+  ``mixed_rng(seed, round)`` over the currently-alive clients, so a
+  crash-resumed fleet (alive set persisted in the fleet checkpoint) replays
+  identical cohorts.
+- **Straggler-bounded aggregation** — every session runs under a
+  :class:`FleetStragglerGuard` deadline; a late client is *excluded* from
+  the round's FedAvg (never stalls it) while its session finishes on a
+  background worker and its checkpoints stand for the next time it is
+  scheduled.
+- **Crash-safe rounds at two levels** — locally, ``engine.run`` checkpoints
+  every local iteration, so a client that dies mid-session resumes
+  bit-identically; globally, the orchestrator checkpoints the aggregated
+  parameters + round + alive registry each round under the manager's
+  ``fleet`` scope.
+- **Elastic reshard under churn** — a ``devices_schedule`` rebuilds the
+  engine on a new data-axis width mid-run; resident cohort states re-mesh
+  through :func:`~repro.ft.elastic.reshard_engine_state`, suspended states
+  re-mesh transparently on restore (``restore_checkpoint(shardings=)``).
+- **Compressed aggregation** — :func:`fedavg` averages client deltas with
+  optional symmetric int8 quantization (``dist/collectives``), and the
+  per-round wire bytes are accounted against the fp32 baseline.
+
+With no faults, no deadline, and a fixed mesh the orchestrator is
+bit-identical per round to a sequential per-client ``engine.run`` reference
+(``tests/test_fleet.py`` proves it); every fault knob degrades that ideal
+loop in a seeded, replayable way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import (MANIFEST, CheckpointManager, find_latest,
+                                   restore_checkpoint)
+from repro.data.stream import mix_seed, mixed_rng, seek_stream
+from repro.dist.collectives import (allreduce_payload_bytes,
+                                    quantize_dequantize_int8)
+from repro.ft.elastic import reshard_engine_state
+from repro.ft.faults import FaultyClient
+
+FLEET_SCOPE = "fleet"       # CheckpointManager scope of the global round state
+_COHORT_STREAM = 9001       # substream tag for participation draws
+
+
+def client_scope(cid: int) -> str:
+    """Stable per-client checkpoint scope / thread label."""
+    return f"c{int(cid):04d}"
+
+
+def client_init_key(seed: int, cid: int):
+    """The PRNG key client ``cid`` initializes its engine state with —
+    shared with the sequential reference loop so bit-identity is testable."""
+    return jax.random.PRNGKey(mix_seed(seed, 1337, cid) & 0x7FFFFFFFFFFFFFFF)
+
+
+def seeded_cohort(seed: int, rnd: int, avail: Sequence[int],
+                  k: int) -> List[int]:
+    """Deterministic partial participation: ``min(k, |avail|)`` client ids
+    drawn without replacement from the sorted available set, keyed on
+    ``(seed, round)`` only — independent of call order and of fleet
+    restarts, so a resumed orchestrator replays the identical cohort."""
+    avail = sorted(int(c) for c in avail)
+    k = min(int(k), len(avail))
+    if k <= 0:
+        return []
+    rs = mixed_rng(seed, _COHORT_STREAM, rnd)
+    idx = rs.choice(len(avail), size=k, replace=False)
+    return [avail[i] for i in sorted(idx)]
+
+
+def fedavg(global_train, client_trains, compress: str = "none"):
+    """One FedAvg step: ``global += mean(client - global)`` over the
+    on-time cohort, with optional symmetric per-tensor int8
+    quantize/dequantize of each client delta (the compression a real
+    uplink would apply). Non-floating leaves (step counters) never ride
+    the average — they are taken from the first client. Returns
+    ``(new_global, per_client_payload_bytes)``."""
+    if compress not in ("none", "int8"):
+        raise ValueError(f"compress must be none|int8, got {compress!r}")
+    if not client_trains:
+        return global_train, 0
+
+    def agg(g, *cs):
+        if not jnp.issubdtype(jnp.asarray(g).dtype, jnp.inexact):
+            return cs[0]
+        deltas = [c - g for c in cs]
+        if compress == "int8":
+            deltas = [quantize_dequantize_int8(d) for d in deltas]
+        return g + jnp.mean(jnp.stack(deltas), axis=0)
+
+    new = jax.tree.map(agg, global_train, *client_trains)
+    return new, int(allreduce_payload_bytes(global_train, compress))
+
+
+class ClientLate(RuntimeError):
+    """A client session missed its round deadline and was excluded from
+    the aggregate (its background session keeps running; its checkpoints
+    stand)."""
+
+
+class FleetStragglerGuard:
+    """Per-session deadline runner with late-client *exclusion*.
+
+    ``ft.elastic.StragglerGuard`` substitutes the previous window so
+    *training* never stalls — the wrong semantics for a federated round,
+    where a slow client's update must simply not be waited for. Here each
+    session runs on a daemon worker; if it misses ``deadline_s`` the
+    caller gets :class:`ClientLate` (exclude-and-continue) while the
+    session runs to completion in the background — its checkpoints remain
+    the client's state of record, and :meth:`busy` lets the scheduler skip
+    the client until the straggling session finishes (one session per
+    client at a time, so no two writers ever share a checkpoint scope).
+    ``deadline_s=None`` runs synchronously with no threads at all."""
+
+    def __init__(self, deadline_s: Optional[float] = None):
+        self.deadline_s = deadline_s
+        self.late = 0
+        self.completed = 0
+        self.leaked = False
+        self._threads: Dict[str, threading.Thread] = {}
+
+    def busy(self, label: str) -> bool:
+        t = self._threads.get(label)
+        return t is not None and t.is_alive()
+
+    def run(self, fn: Callable[[], Any], label: str = ""):
+        if self.deadline_s is None:
+            out = fn()
+            self.completed += 1
+            return out
+        box: Dict[str, Any] = {}
+        done = threading.Event()
+
+        def work():
+            try:
+                box["v"] = ("ok", fn())
+            except BaseException as e:     # delivered to the caller below
+                box["v"] = ("err", e)
+            finally:
+                done.set()
+
+        t = threading.Thread(target=work, name=f"fleet-{label}", daemon=True)
+        self._threads[label] = t
+        t.start()
+        if not done.wait(self.deadline_s):
+            self.late += 1
+            raise ClientLate(
+                f"client session {label or '?'} missed the "
+                f"{self.deadline_s}s deadline; excluded from this round")
+        t.join()
+        tag, v = box["v"]
+        if tag == "err":
+            raise v
+        self.completed += 1
+        return v
+
+    def close(self, timeout: float = 30.0) -> bool:
+        """Join every worker ever spawned (stragglers included — fault
+        hangs are finite by FaultyStream's contract). Sets ``leaked`` if
+        one survives the timeout. Returns True on a clean join."""
+        leaked = False
+        for t in self._threads.values():
+            t.join(timeout=timeout)
+            leaked = leaked or t.is_alive()
+        self.leaked = leaked
+        self._threads.clear()
+        return not leaked
+
+
+@dataclass
+class FleetConfig:
+    """Knobs of one fleet run. ``resident`` bounds how many suspended
+    client ``EngineState``s stay cached on device between rounds (default:
+    one cohort's worth — everything else lives only in its checkpoint
+    scope, which is what makes N ≫ devices feasible: resident memory is
+    O(cohort), not O(clients); DESIGN.md §11 has the arithmetic)."""
+    n_clients: int
+    cohort: int
+    local_iters: int = 3
+    window_size: Optional[int] = None     # None → engine.window_size
+    seed: int = 0
+    compress: str = "int8"                # FedAvg delta compression
+    deadline_s: Optional[float] = None    # None → no straggler guard
+    checkpoint_keep: int = 2
+    resident: Optional[int] = None        # None → cohort
+    prefetch: int = 0                     # per-session Prefetcher depth
+
+    def __post_init__(self):
+        if self.n_clients < 1:
+            raise ValueError("n_clients must be >= 1")
+        if not 1 <= self.cohort <= self.n_clients:
+            raise ValueError(f"cohort {self.cohort} outside "
+                             f"[1, {self.n_clients}]")
+        if self.local_iters < 1:
+            raise ValueError("local_iters must be >= 1")
+
+
+@dataclass
+class _Client:
+    cid: int
+    stream: Any
+    alive: bool = True
+    sessions: int = 0
+
+
+class FleetOrchestrator:
+    """Drives a fleet of simulated clients through federated rounds.
+
+    ``make_engine(devices)`` builds the shared TitanEngine for a data-axis
+    width (1 → no mesh); ``make_stream(cid)`` builds client ``cid``'s
+    private stream (must be deterministic in ``cid`` so a resumed fleet
+    can rebuild and ``seek`` it). ``faults`` maps client id →
+    :class:`~repro.ft.faults.FaultyClient`; ``devices_schedule`` maps
+    fleet round → data-axis width (elastic reshard); ``cohort_schedule``
+    maps fleet round → explicit cohort (tests/oracles — seeded
+    participation otherwise).
+
+    The constructor auto-resumes from the newest fleet-scope checkpoint in
+    ``checkpoint_dir`` (pass ``auto_resume=False`` for a cold start over
+    an existing directory)."""
+
+    def __init__(self, make_engine: Callable[[int], Any],
+                 make_stream: Callable[[int], Any],
+                 global_train, cfg: FleetConfig, checkpoint_dir: str, *,
+                 faults: Optional[Dict[int, FaultyClient]] = None,
+                 devices_schedule: Optional[Dict[int, int]] = None,
+                 cohort_schedule: Optional[Dict[int, Sequence[int]]] = None,
+                 devices: int = 1, auto_resume: bool = True):
+        self.cfg = cfg
+        self.make_engine = make_engine
+        self.devices = int(devices)
+        self.engine = make_engine(self.devices)
+        self.global_train = jax.tree.map(jnp.array, global_train)
+        self.dir = checkpoint_dir
+        self.mgr = CheckpointManager(checkpoint_dir, keep=cfg.checkpoint_keep)
+        self.clients = [_Client(c, make_stream(c))
+                        for c in range(cfg.n_clients)]
+        self.faults = dict(faults or {})
+        self.devices_schedule = dict(devices_schedule or {})
+        self.cohort_schedule = ({int(r): list(cs) for r, cs in
+                                 cohort_schedule.items()}
+                                if cohort_schedule else {})
+        self.guard = FleetStragglerGuard(cfg.deadline_s)
+        self.round = 0
+        self.history: List[Dict[str, Any]] = []
+        self.crashed_sessions = 0
+        self._resident: "OrderedDict[int, Dict[str, Any]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._template = None
+        self._engine_gen = 0
+        if auto_resume:
+            self._resume_fleet()
+
+    # -- fleet-level crash safety -------------------------------------------
+
+    def _resume_fleet(self):
+        path = self.mgr.latest(client=FLEET_SCOPE)
+        if path is None:
+            return
+        tpl = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                           {"global": self.global_train})
+        tree, manifest = restore_checkpoint(path, tpl)
+        self.global_train = tree["global"]
+        extra = manifest.get("extra", {})
+        self.round = int(extra.get("round", 0))
+        for cid, alive in extra.get("alive", {}).items():
+            self.clients[int(cid)].alive = bool(alive)
+
+    def _save_fleet(self, rnd: int):
+        self.mgr.save(rnd, {"global": self.global_train}, client=FLEET_SCOPE,
+                      extra={"round": rnd,
+                             "alive": {str(c.cid): bool(c.alive)
+                                       for c in self.clients},
+                             "devices": self.devices})
+
+    # -- suspend/resume -----------------------------------------------------
+
+    def _client_dir(self, cid: int) -> str:
+        return os.path.join(self.dir, "clients", client_scope(cid))
+
+    def _prime(self):
+        """``engine.init`` is what binds the selection policy to its
+        feature specs; an engine that has never init-ed cannot run a
+        resident/restored client session (those skip init). Called on
+        construction-adjacent template build and after every reshard.
+        Returns the throwaway init state (used for template extraction)."""
+        n = self.cfg.window_size or self.engine.window_size
+        specs = self.clients[0].stream.window_specs(n)
+        w0 = {k: np.zeros(s.shape, s.dtype) for k, s in specs.items()}
+        return self.engine.init(jax.random.PRNGKey(0), self.global_train, w0)
+
+    def _state_template(self):
+        """Abstract EngineState skeleton (shapes/dtypes — mesh-independent),
+        the restore target for suspended clients. Built once from a zeroed
+        window so a cold-resumed orchestrator needs no live session first."""
+        if self._template is None:
+            self._template = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                self._prime())
+        return self._template
+
+    def _materialize(self, cid: int, cached, engine, ckpt_path: str):
+        """Client state for a new session: the resident cache if the entry
+        matches the current engine generation (re-meshed via
+        reshard_engine_state when it does not — the elastic-churn path for
+        live cohort states), else a restore from the client's checkpoint
+        scope under the current engine's shardings."""
+        if cached is not None:
+            st = cached["state"]
+            if cached["gen"] == self._engine_gen:
+                return st
+            if engine.mesh is not None:
+                return reshard_engine_state(st, engine)
+            return jax.device_put(st)
+        tpl = self._state_template()
+        shardings = (engine.state_shardings(tpl)
+                     if engine.mesh is not None else None)
+        st, _ = restore_checkpoint(ckpt_path, tpl, shardings=shardings)
+        return st
+
+    def client_state(self, cid: int):
+        """Restore (or fetch resident) client ``cid``'s latest suspended
+        EngineState — eval/debug/test seam; returns None if the client has
+        never completed a local round."""
+        with self._lock:
+            cached = self._resident.get(cid)
+        path = find_latest(self._client_dir(cid))
+        if cached is not None and cached["gen"] == self._engine_gen:
+            return cached["state"]
+        if path is None:
+            return None
+        return self._materialize(cid, None, self.engine, path)
+
+    # -- elastic reshard ----------------------------------------------------
+
+    def _resize(self, devices: int):
+        if int(devices) == self.devices:
+            return
+        self.engine = self.make_engine(int(devices))
+        self.devices = int(devices)
+        self._engine_gen += 1
+        self._prime()
+        with self._lock:
+            for ent in self._resident.values():
+                # re-mesh the live cohort in place; suspended clients
+                # re-mesh lazily on restore (shardings= of the new engine)
+                if self.engine.mesh is not None:
+                    ent["state"] = reshard_engine_state(ent["state"],
+                                                        self.engine)
+                else:
+                    ent["state"] = jax.device_put(ent["state"])
+                ent["gen"] = self._engine_gen
+        # the aggregate itself must follow the mesh: FedAvg subtracts each
+        # client delta against it, and mixed device sets refuse to jit
+        if self.engine.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self.global_train = jax.device_put(
+                self.global_train,
+                NamedSharding(self.engine.mesh, PartitionSpec()))
+        else:
+            self.global_train = jax.device_put(self.global_train)
+
+    # -- one client session -------------------------------------------------
+
+    def _session(self, cid: int, fault_kind: Optional[str]):
+        """One local training session for client ``cid``: materialize its
+        state (fresh init / resident / checkpoint restore — resuming a
+        crashed session bit-identically), run ``local_iters`` engine
+        rounds with per-round checkpoints in the client's scope, park the
+        result back in the resident cache. Runs on a guard worker when a
+        deadline is set; disk stays the state of record either way."""
+        engine = self.engine        # pin: a mid-run resize must not swap
+        gen = self._engine_gen      # the engine under a running session
+        client = self.clients[cid]
+        cdir = self._client_dir(cid)
+        li = self.cfg.local_iters
+        n = self.cfg.window_size or engine.window_size
+        fc = self.faults.get(cid)
+
+        def wrap(s):
+            return fc.wrap(s, fault_kind) if fc is not None else s
+
+        with self._lock:
+            cached = self._resident.pop(cid, None)
+        latest = find_latest(cdir)
+        if latest is None:
+            # first-ever session: engine.init consumes the stream's round-0
+            # window and copies the global params (donation-safe)
+            seek_stream(client.stream, 0)
+            fs = wrap(client.stream)
+            w0 = fs.next_window(n)
+            state = engine.init(client_init_key(self.cfg.seed, cid),
+                                self.global_train, w0)
+            start, resume = 0, False
+        else:
+            with open(os.path.join(latest, MANIFEST)) as f:
+                manifest = json.load(f)
+            step = int(manifest["step"])
+            extra = manifest.get("extra", {})
+            rounds_done = int(extra.get("rounds_done", li))
+            state = self._materialize(cid, cached, engine, latest)
+            if rounds_done >= li:
+                # previous session completed: fresh session seeded with the
+                # CURRENT global params (copied — engine.run donates), the
+                # stream seeked to exactly where the client left off
+                state = dataclasses.replace(
+                    state,
+                    train=jax.tree.map(jnp.array, self.global_train))
+                seek_stream(client.stream, extra["stream_cursor"])
+                start, resume = step, False
+            else:
+                # crashed mid-session: keep the checkpointed mid-session
+                # train state (NOT the new global — the round it was serving
+                # predates this aggregate) and let engine.run's auto_resume
+                # restore + seek + replay the remaining local rounds
+                start, resume = step - rounds_done, True
+            fs = wrap(client.stream)
+        state, metrics = engine.run(
+            state, fs, li, prefetch=self.cfg.prefetch, metrics_every=0,
+            window_size=n, start_round=start, checkpoint_dir=cdir,
+            checkpoint_every=1, auto_resume=resume,
+            checkpoint_keep=self.cfg.checkpoint_keep)
+        cap = self.cfg.resident or self.cfg.cohort
+        with self._lock:
+            self._resident[cid] = {"state": state, "gen": gen}
+            while len(self._resident) > cap:
+                self._resident.popitem(last=False)   # LRU: back to disk-only
+        client.sessions += 1
+        return state, metrics
+
+    # -- one fleet round ----------------------------------------------------
+
+    def _fleet_round(self, rnd: int) -> Dict[str, Any]:
+        t0 = time.perf_counter()
+        if rnd in self.devices_schedule:
+            self._resize(self.devices_schedule[rnd])
+        # fault arrivals for this round: availability faults act on the
+        # scheduler, session faults (crash/hang) ride into the data plane
+        session_faults: Dict[int, str] = {}
+        for cid, fc in self.faults.items():
+            c = self.clients[cid]
+            kind = fc.fault_for(rnd, alive=c.alive)
+            if kind == "drop":
+                c.alive = False
+            elif kind == "rejoin":
+                c.alive = True
+            elif kind in ("crash", "hang"):
+                session_faults[cid] = kind
+        avail = [c.cid for c in self.clients
+                 if c.alive and not self.guard.busy(client_scope(c.cid))]
+        if rnd in self.cohort_schedule:
+            picked = [c for c in self.cohort_schedule[rnd] if c in avail]
+        else:
+            picked = seeded_cohort(self.cfg.seed, rnd, avail,
+                                   self.cfg.cohort)
+        updates, sess_metrics = [], []
+        late, failed = [], []
+        for cid in picked:
+            try:
+                st, m = self.guard.run(
+                    lambda cid=cid: self._session(cid,
+                                                  session_faults.get(cid)),
+                    label=client_scope(cid))
+                updates.append(st.train)
+                if m:
+                    sess_metrics.append(m)
+            except ClientLate:
+                late.append(cid)
+            except Exception:
+                # session died (injected fatal, poisoned source, ...): its
+                # per-local-round checkpoints stand, so the next time the
+                # cohort draw lands on it the session resumes exactly where
+                # it crashed — count it and move on, never stall the round
+                self.crashed_sessions += 1
+                failed.append(cid)
+        bytes_round = bytes_round_fp32 = 0
+        if updates:
+            self.global_train, per_client = fedavg(
+                self.global_train, updates, self.cfg.compress)
+            bytes_round = per_client * len(updates)
+            bytes_round_fp32 = (allreduce_payload_bytes(self.global_train,
+                                                        "none")
+                                * len(updates))
+        rec: Dict[str, Any] = {
+            "round": rnd, "cohort": list(picked),
+            "on_time": len(updates), "late": late, "failed": failed,
+            "alive": sum(c.alive for c in self.clients),
+            "devices": self.devices,
+            "bytes_round": int(bytes_round),
+            "bytes_round_fp32": int(bytes_round_fp32),
+            "resident": len(self._resident),
+            "wall_s": 0.0,
+        }
+        if sess_metrics:
+            losses = [float(m["loss"]) for m in sess_metrics if "loss" in m]
+            if losses:
+                rec["loss"] = float(np.mean(losses))
+            rec["titan_overlap_active"] = int(max(
+                int(m.get("titan_overlap_active", 0)) for m in sess_metrics))
+            rec["data_retried"] = int(sum(
+                int(m.get("titan_data_retried", 0)) for m in sess_metrics))
+        self._save_fleet(rnd + 1)
+        self.round = rnd + 1
+        rec["wall_s"] = time.perf_counter() - t0
+        return rec
+
+    def run(self, rounds: int,
+            on_round: Optional[Callable[[int, Any, Dict], None]] = None):
+        """Run fleet rounds ``self.round .. rounds`` (resume-aware: a
+        restored orchestrator only runs the remainder). ``on_round(rnd,
+        global_train, record)`` fires after each round's aggregate.
+        Returns ``(global_train, history)``."""
+        while self.round < int(rounds):
+            rec = self._fleet_round(self.round)
+            self.history.append(rec)
+            if on_round is not None:
+                on_round(rec["round"], self.global_train, rec)
+        return self.global_train, self.history
+
+    def close(self, timeout: float = 30.0) -> bool:
+        """Join straggler workers and flush the fleet checkpoint writer.
+        Returns True when nothing leaked."""
+        ok = self.guard.close(timeout=timeout)
+        self.mgr.wait()
+        return ok
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

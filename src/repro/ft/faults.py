@@ -138,3 +138,102 @@ class FaultyStream:
         The attempt counter keeps running — fault injection is a property
         of the *harness timeline*, not of the stream position."""
         seek_stream(self.stream, cursor)
+
+
+CLIENT_KINDS = ("crash", "hang", "drop", "rejoin")
+
+
+class FaultyClient:
+    """Fleet-level fault schedule for one simulated federated client.
+
+    Where :class:`FaultyStream` injects faults per *fetch attempt* inside a
+    single local training session, ``FaultyClient`` decides what happens to
+    a client at each *fleet round* — the failure modes a real device fleet
+    produces between check-ins:
+
+    ``crash``    the client's local session dies mid-run (a ``fatal``
+                 stream fault after ``crash_after`` fetches — late enough
+                 that at least one per-local-round checkpoint exists, so
+                 the next session resumes exactly where it died).
+    ``hang``     the session wedges for ``hang_s`` before its first fetch —
+                 paired with an orchestrator deadline this exercises
+                 straggler exclusion.
+    ``drop``     the device goes offline: removed from the available set
+                 until a ``rejoin`` fires.
+    ``rejoin``   a dropped device comes back (only meaningful while
+                 offline; rate-mode draws it automatically).
+
+    ``schedule`` maps fleet round → kind for exact choreography; ``*_rate``
+    draws per round from ``mixed_rng(seed, client_id, round)`` — the same
+    splitmix64 keying as every stream, so a chaos fleet replays
+    bit-for-bit from its seed. Counters mirror FaultyStream's: a chaos run
+    must be able to prove its faults actually fired.
+    """
+
+    def __init__(self, client_id: int, *, seed: int = 0,
+                 schedule: Optional[Dict[int, str]] = None,
+                 crash_rate: float = 0.0, hang_rate: float = 0.0,
+                 drop_rate: float = 0.0, rejoin_rate: float = 0.5,
+                 crash_after: int = 2, hang_s: float = 0.2):
+        self.client_id = int(client_id)
+        self.seed = int(seed)
+        self.schedule = dict(schedule or {})
+        for r, kind in self.schedule.items():
+            if kind not in CLIENT_KINDS:
+                raise ValueError(f"schedule[{r}]: unknown client fault "
+                                 f"{kind!r} (kinds: {CLIENT_KINDS})")
+        self.rates = {"crash": crash_rate, "hang": hang_rate,
+                      "drop": drop_rate}
+        total = sum(self.rates.values())
+        if total > 1.0:
+            raise ValueError(f"client fault rates sum to {total} > 1")
+        if not 0.0 <= rejoin_rate <= 1.0:
+            raise ValueError(f"rejoin_rate {rejoin_rate} outside [0, 1]")
+        self.rejoin_rate = rejoin_rate
+        self.crash_after = int(crash_after)
+        self.hang_s = float(hang_s)
+        self.crashed = 0
+        self.hung = 0
+        self.dropped = 0
+        self.rejoined = 0
+
+    def fault_for(self, rnd: int, *, alive: bool = True) -> Optional[str]:
+        """The fault (if any) this client suffers at fleet round ``rnd``.
+        Deterministic in (seed, client_id, rnd) — independent of cohort
+        membership or call order, so a crash-resumed orchestrator replays
+        the identical fault timeline."""
+        kind = self.schedule.get(int(rnd))
+        if kind is None:
+            u = mixed_rng(self.seed, self.client_id, int(rnd)).rand()
+            if not alive:
+                kind = "rejoin" if u < self.rejoin_rate else None
+            else:
+                edge = 0.0
+                for k in ("crash", "hang", "drop"):
+                    edge += self.rates[k]
+                    if u < edge:
+                        kind = k
+                        break
+        if kind == "rejoin" and alive:
+            return None     # already online: nothing to rejoin
+        if kind in ("crash", "hang", "drop") and not alive:
+            return None     # offline devices cannot crash or straggle
+        if kind is not None:
+            attr = {"crash": "crashed", "hang": "hung",
+                    "drop": "dropped", "rejoin": "rejoined"}[kind]
+            setattr(self, attr, getattr(self, attr) + 1)
+        return kind
+
+    def wrap(self, stream, kind: Optional[str]):
+        """Wrap a session stream so ``kind`` actually fires inside the
+        local run: ``crash`` → fatal at fetch attempt ``crash_after``
+        (mid-session, past the first checkpoint), ``hang`` → sleep before
+        the first fetch. Other kinds act at the scheduler, not the data
+        plane, and pass the stream through untouched."""
+        if kind == "crash":
+            return FaultyStream(stream, seed=self.seed,
+                                schedule={self.crash_after: "fatal"})
+        if kind == "hang":
+            return FaultyStream(stream, seed=self.seed,
+                                schedule={0: "hang"}, hang_s=self.hang_s)
+        return stream

@@ -1,0 +1,255 @@
+"""Federated fleet driver (paper Appendix B at fleet scale).
+
+    PYTHONPATH=src python -m repro.launch.fleet --clients 100 --cohort 8 \
+        --rounds 30 --churn 0.1 --deadline 15 --compress int8 \
+        --ckpt-dir /tmp/fleet1
+
+Drives a :class:`~repro.fleet.FleetOrchestrator` over N non-IID drifting
+client streams: seeded partial participation (``--cohort`` per round),
+per-client local Titan selection (any registry policy), int8-compressed
+FedAvg, per-client straggler deadlines (``--deadline``), seeded churn
+(``--churn`` = per-client-round crash/drop probability, dropped clients
+rejoin stochastically), elastic device reshard mid-run (``--reshard
+"10:2,20:4"``), and fleet-level crash safety — a killed run re-launched
+with the same ``--ckpt-dir`` resumes at the exact round it died
+(``--max-restarts`` supervises that loop in-process).
+
+``--compare`` runs the same fleet twice (titan-cis vs rs local selection)
+and prints the accuracy trajectory side by side — the Fig. 10 comparison,
+now under fleet semantics. ``examples/federated.py`` routes here.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TitanConfig
+from repro.core.engine import TitanEngine
+from repro.data.stream import GaussianMixtureStream, non_iid_client_streams
+from repro.fleet import FleetConfig, FleetOrchestrator
+from repro.ft.faults import FaultyClient
+from repro.hooks import har_hooks
+from repro.models.edge import (EdgeMLPConfig, mlp_accuracy, mlp_init,
+                               mlp_loss)
+
+# fleet task geometry: divisible over 1/2/4-way data meshes so one client
+# stream survives any reshard in the 4→2→4 churn schedule
+C, IN, B, W, M = 6, 40, 8, 48, 16
+
+
+def _make_train(ecfg, axis: Optional[str] = None, lr: float = 0.08):
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        if axis:
+            g, loss = jax.lax.pmean((g, loss), axis)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+    return train
+
+
+def churn_faults(n_clients: int, churn: float, *, seed: int = 0,
+                 rejoin_rate: float = 0.5,
+                 hang_schedule: Optional[Dict[int, Dict[int, str]]] = None,
+                 hang_s: float = 0.2) -> Dict[int, FaultyClient]:
+    """Seeded fleet-wide churn: every client crashes or drops with
+    probability ``churn`` per fleet round (half each), dropped clients
+    rejoin with ``rejoin_rate``. ``hang_schedule`` maps client id → an
+    explicit ``{round: kind}`` FaultyClient schedule layered on top (for
+    choreographed stragglers)."""
+    faults = {}
+    if churn <= 0 and not hang_schedule:
+        return faults
+    for cid in range(n_clients):
+        sched = (hang_schedule or {}).get(cid)
+        faults[cid] = FaultyClient(
+            cid, seed=seed, schedule=sched,
+            crash_rate=churn / 2, drop_rate=churn / 2,
+            rejoin_rate=rejoin_rate, hang_s=hang_s)
+    return faults
+
+
+def run_fleet(policy: str = "titan-cis", *, clients: int = 20,
+              cohort: int = 4, rounds: int = 10, local_iters: int = 3,
+              seed: int = 0, compress: str = "int8", churn: float = 0.0,
+              deadline_s: Optional[float] = None, devices: int = 1,
+              devices_schedule: Optional[Dict[int, int]] = None,
+              faults: Optional[Dict[int, FaultyClient]] = None,
+              ckpt_dir: Optional[str] = None, drift: float = 0.0,
+              max_restarts: int = 0, eval_n: int = 2000,
+              warm_deadline: bool = True, verbose: bool = False) -> Dict:
+    """One fleet run end-to-end; returns the accuracy trajectory plus the
+    fleet health/throughput record (the programmatic seam shared by the
+    CLI, ``examples/federated.py`` and ``benchmarks/bench_fleet.py``)."""
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(64, 32), n_classes=C)
+    noise = np.linspace(0.3, 2.0, C)
+    base = GaussianMixtureStream(in_dim=IN, n_classes=C, seed=seed,
+                                 class_noise=noise)
+    xt, yt = base.test_set(eval_n)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    streams = non_iid_client_streams(clients, in_dim=IN, n_classes=C,
+                                     seed=seed, class_noise=noise,
+                                     drift_per_round=drift)
+    global0 = mlp_init(ecfg, jax.random.PRNGKey(seed))
+    tcfg = TitanConfig(policy=policy, stream_ratio=W // B)
+
+    def make_engine(d: int) -> TitanEngine:
+        mesh = None
+        if d > 1:
+            from repro.launch.mesh import make_engine_mesh
+            mesh = make_engine_mesh(d, 1)
+        return TitanEngine.from_config(
+            tcfg, hooks=har_hooks(ecfg),
+            train_step_fn=_make_train(ecfg, "data" if mesh else None),
+            params_of=lambda s: s, batch_size=B, n_classes=C,
+            buffer_size=M, mesh=mesh)
+
+    if faults is None:
+        faults = churn_faults(clients, churn, seed=seed)
+    cfg = FleetConfig(n_clients=clients, cohort=cohort,
+                      local_iters=local_iters, window_size=W, seed=seed,
+                      compress=compress, deadline_s=deadline_s)
+    tmp = None
+    if ckpt_dir is None:
+        tmp = ckpt_dir = tempfile.mkdtemp(prefix="titan-fleet-")
+    accs, t0 = [], time.perf_counter()
+
+    def on_round(rnd, global_train, rec):
+        rec["acc"] = float(mlp_accuracy(ecfg, global_train, xt, yt))
+        accs.append(rec["acc"])
+        if verbose:
+            print(f"round {rnd:3d} acc {rec['acc']:.3f} "
+                  f"on_time {rec['on_time']}/{len(rec['cohort'])} "
+                  f"alive {rec['alive']} dev {rec['devices']} "
+                  f"kB {rec['bytes_round'] / 1e3:.1f}", flush=True)
+
+    attempts = 0
+    try:
+        while True:
+            orch = FleetOrchestrator(
+                make_engine, lambda cid: streams[cid], global0, cfg,
+                ckpt_dir, faults=faults,
+                devices_schedule=devices_schedule, devices=devices)
+            if warm_deadline and cfg.deadline_s is not None \
+                    and orch.round == 0:
+                # first sessions pay jit compile; run round 0 undeadlined
+                # so cold-start cost never reads as a straggler storm
+                orch.guard.deadline_s = None
+                if rounds > 0:
+                    orch.run(1, on_round=on_round)
+                orch.guard.deadline_s = cfg.deadline_s
+            try:
+                global_train, history = orch.run(rounds, on_round=on_round)
+                break
+            except Exception:
+                orch.close()
+                attempts += 1
+                if attempts > max_restarts:
+                    raise
+        clean = orch.close()
+        if not accs:
+            # fully-resumed run (no rounds left): report the restored model
+            accs.append(float(mlp_accuracy(ecfg, global_train, xt, yt)))
+        wall = time.perf_counter() - t0
+        sessions = sum(r["on_time"] for r in orch.history)
+        return {
+            "policy": policy, "accs": accs,
+            "final_acc": accs[-1] if accs else float("nan"),
+            "history": orch.history, "wall_s": wall,
+            "clients_per_sec": sessions / max(wall, 1e-9),
+            "sessions": sessions,
+            "late": orch.guard.late,
+            "crashed_sessions": orch.crashed_sessions,
+            "bytes_round": int(np.mean(
+                [r["bytes_round"] for r in orch.history if r["on_time"]]
+                or [0])),
+            "bytes_round_fp32": int(np.mean(
+                [r["bytes_round_fp32"] for r in orch.history if r["on_time"]]
+                or [0])),
+            "restarts": attempts, "clean_shutdown": bool(clean),
+            "global_train": global_train,
+        }
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _parse_reshard(spec: str) -> Dict[int, int]:
+    """``"10:2,20:4"`` → ``{10: 2, 20: 4}`` (fleet round → device width)."""
+    out = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        rnd, _, width = part.partition(":")
+        out[int(rnd)] = int(width)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=100,
+                    help="fleet size (N >> devices; suspended to disk)")
+    ap.add_argument("--cohort", type=int, default=8,
+                    help="clients scheduled per fleet round")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--local-iters", type=int, default=3)
+    ap.add_argument("--policy", default="titan-cis")
+    ap.add_argument("--compress", default="int8", choices=["none", "int8"])
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="per-client-round crash/drop probability")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-client session deadline in seconds; late "
+                         "clients are excluded from the round aggregate")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-axis width (forced host devices on CPU)")
+    ap.add_argument("--reshard", default="",
+                    help='elastic device schedule, e.g. "10:2,20:4"')
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="fleet-level restart budget (resumes from the "
+                         "fleet checkpoint in --ckpt-dir)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="fleet checkpoint root (empty: fresh temp dir)")
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="per-round client distribution drift")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare", action="store_true",
+                    help="run titan-cis vs rs and print both trajectories")
+    args = ap.parse_args(argv)
+
+    kw = dict(clients=args.clients, cohort=args.cohort, rounds=args.rounds,
+              local_iters=args.local_iters, seed=args.seed,
+              compress=args.compress, churn=args.churn,
+              deadline_s=args.deadline, devices=args.devices,
+              devices_schedule=_parse_reshard(args.reshard) or None,
+              drift=args.drift, max_restarts=args.max_restarts,
+              verbose=not args.compare)
+
+    if args.compare:
+        t = run_fleet("titan-cis", ckpt_dir=None, **kw)
+        r = run_fleet("rs", ckpt_dir=None, **kw)
+        print(f"\n{'round':>5s} {'titan':>7s} {'rs':>7s}")
+        for i, (a, b) in enumerate(zip(t["accs"], r["accs"])):
+            if (i + 1) % 5 == 0:
+                print(f"{i + 1:5d} {a:7.3f} {b:7.3f}")
+        reach = next((i + 1 for i, a in enumerate(t["accs"])
+                      if a >= r["final_acc"]), None)
+        print(f"\nfinal: titan {t['final_acc']:.3f} vs "
+              f"rs {r['final_acc']:.3f}; titan reached rs-final at round "
+              f"{reach}/{args.rounds}")
+        return {"titan": t, "rs": r}
+
+    out = run_fleet(args.policy, ckpt_dir=args.ckpt_dir or None, **kw)
+    print(f"fleet done: {args.clients} clients, cohort {args.cohort}, "
+          f"{args.rounds} rounds | final acc {out['final_acc']:.3f} | "
+          f"{out['clients_per_sec']:.2f} clients/s | "
+          f"late {out['late']} crashed {out['crashed_sessions']} | "
+          f"{out['bytes_round'] / 1e3:.1f} kB/round "
+          f"(fp32 {out['bytes_round_fp32'] / 1e3:.1f})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -120,3 +120,34 @@ def test_restore_shape_mismatch_raises(tmp_path):
         assert False, "expected ValueError"
     except ValueError:
         pass
+
+
+def test_client_scoped_saves_and_isolated_gc(tmp_path):
+    """Fleet regression: keep-k pruning in one client's scope must never
+    delete a sibling client's checkpoints, and the root scope stays
+    disjoint from every client subdirectory."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    t = _tree()
+    mgr.save(1, t, client="c0001")
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t, client="c0000")      # interleaved, prunes c0000 only
+    assert sorted(os.listdir(tmp_path / "c0000")) == \
+        ["step_0000000003", "step_0000000004"]
+    assert os.listdir(tmp_path / "c0001") == ["step_0000000001"]
+    assert mgr.latest(client="c0001").endswith("step_0000000001")
+    assert mgr.latest(client="c0000").endswith("step_0000000004")
+    # root-scope saves gc the root only; client dirs are not step_* entries
+    for s in (1, 2, 3):
+        mgr.save(s, t)
+    root_steps = sorted(e for e in os.listdir(tmp_path)
+                        if e.startswith("step_"))
+    assert root_steps == ["step_0000000002", "step_0000000003"]
+    assert sorted(mgr.clients()) == ["c0000", "c0001"]
+    assert sorted(os.listdir(tmp_path / "c0000")) == \
+        ["step_0000000003", "step_0000000004"]   # untouched by root gc
+    # scope names that could escape or collide with step dirs are rejected
+    for bad in ("", ".", "..", "a/b", "step_0000000001"):
+        with pytest.raises(ValueError):
+            mgr.save(9, t, client=bad)
+    with pytest.raises(ValueError):
+        mgr.latest(client="../x")

@@ -1,0 +1,393 @@
+"""Seeded fleet chaos suite (DESIGN.md §11).
+
+The contracts under test, in escalating order of violence:
+
+- with no faults, no deadline and a fixed mesh, the FleetOrchestrator is
+  **bit-identical per round** to a sequential per-client ``engine.run``
+  reference (suspend/resume through per-client checkpoints adds nothing);
+- a client crashing mid-local-round resumes from its own checkpoint with
+  identical selected ids;
+- a hung client is excluded from the round and the aggregate matches the
+  cohort-minus-one oracle bit-for-bit;
+- 4→2→4 device churn mid-run completes with finite loss, resharded
+  resident states, and no leaked threads;
+- a killed fleet resumes from its fleet-scope checkpoint bit-identically;
+- the ``overlap_select`` × ``nonfinite_guard`` interaction warns once and
+  reports the effective mode in engine metrics (``titan_overlap_active``).
+"""
+import dataclasses
+import threading
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.configs.base import TitanConfig
+from repro.core.engine import TitanEngine
+from repro.data.stream import non_iid_client_streams
+from repro.dist.collectives import allreduce_payload_bytes
+from repro.fleet import (ClientLate, FleetConfig, FleetOrchestrator,
+                         FleetStragglerGuard, client_init_key, fedavg,
+                         seeded_cohort)
+from repro.ft.faults import FaultyClient
+from repro.hooks import har_hooks
+from repro.models.edge import EdgeMLPConfig, mlp_init, mlp_loss
+
+C, IN, B, W, M = 4, 16, 8, 32, 16
+SEED = 5
+
+
+def _require(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+
+
+def _setup(seed=SEED):
+    ecfg = EdgeMLPConfig(in_dim=IN, hidden=(24, 12), n_classes=C)
+    return ecfg, mlp_init(ecfg, jax.random.PRNGKey(seed))
+
+
+def _make_train(ecfg, axis=None, lr=0.1):
+    def train(p, b):
+        loss, g = jax.value_and_grad(lambda q: mlp_loss(ecfg, q, b))(p)
+        if axis:
+            g, loss = jax.lax.pmean((g, loss), axis)
+        return jax.tree.map(lambda a, gg: a - lr * gg, p, g), {"loss": loss}
+    return train
+
+
+def _engine(ecfg, mesh=None, **kw):
+    tcfg = TitanConfig(stream_ratio=W // B, **kw)
+    return TitanEngine.from_config(
+        tcfg, hooks=har_hooks(ecfg),
+        train_step_fn=_make_train(ecfg, "data" if mesh is not None else None),
+        params_of=lambda s: s, batch_size=B, n_classes=C,
+        buffer_size=M, mesh=mesh)
+
+
+def _streams(n, seed=SEED):
+    # drift makes every client stream stateful beyond its round counter —
+    # the hard case for suspend/resume (cursor seek must replay increments)
+    return non_iid_client_streams(n, in_dim=IN, n_classes=C, seed=seed,
+                                  drift_per_round=0.02)
+
+
+def _cfg(n, cohort, li=2, **kw):
+    return FleetConfig(n_clients=n, cohort=cohort, local_iters=li,
+                       window_size=W, seed=SEED, **kw)
+
+
+def _states_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _join_threads(n0, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while threading.active_count() > n0 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    return threading.active_count() <= n0
+
+
+# -- pure-host units --------------------------------------------------------
+
+def test_seeded_cohort_deterministic():
+    avail = [9, 3, 5, 0, 7]
+    a = seeded_cohort(SEED, 4, avail, 3)
+    assert a == seeded_cohort(SEED, 4, list(reversed(avail)), 3)
+    assert len(a) == 3 and set(a) <= set(avail)
+    assert a != seeded_cohort(SEED, 5, avail, 3) or \
+        seeded_cohort(SEED, 6, avail, 3) != a   # rounds decorrelate
+    assert seeded_cohort(SEED, 0, [4], 3) == [4]        # k > avail
+    assert seeded_cohort(SEED, 0, [], 3) == []
+
+
+def test_fedavg_int8_payload_and_identity():
+    g = {"w": jnp.arange(8.0), "b": jnp.ones(3), "t": jnp.int32(7)}
+    out, nbytes = fedavg(g, [g], "none")
+    assert _states_equal(out, g)            # zero delta -> unchanged
+    assert nbytes == (8 + 3) * 4
+    out8, nbytes8 = fedavg(g, [g, g], "int8")
+    assert _states_equal(out8, g)
+    assert nbytes8 == (8 + 4) + (3 + 4)     # 1 B/elem + fp32 scale/tensor
+    assert nbytes8 <= 0.3 * nbytes + 8
+    same, zero = fedavg(g, [], "int8")
+    assert same is g and zero == 0
+    with pytest.raises(ValueError):
+        fedavg(g, [g], "fp8")
+
+
+def test_faulty_client_schedule_rates_and_gating():
+    with pytest.raises(ValueError):
+        FaultyClient(0, schedule={2: "explode"})
+    with pytest.raises(ValueError):
+        FaultyClient(0, crash_rate=0.7, drop_rate=0.6)
+    fc = FaultyClient(3, seed=SEED, schedule={1: "crash", 2: "rejoin",
+                                              4: "drop"})
+    assert fc.fault_for(1) == "crash"
+    assert fc.fault_for(2) is None          # alive: nothing to rejoin
+    assert fc.fault_for(4, alive=False) is None   # offline cannot drop
+    assert fc.fault_for(2, alive=False) == "rejoin"
+    # rate mode is deterministic in (seed, client, round)
+    fr = FaultyClient(3, seed=SEED, crash_rate=0.5)
+    draws = [fr.fault_for(r) for r in range(20)]
+    fr2 = FaultyClient(3, seed=SEED, crash_rate=0.5)
+    assert draws == [fr2.fault_for(r) for r in range(20)]
+    assert "crash" in draws and None in draws
+    assert fr.crashed == draws.count("crash")
+
+
+def test_straggler_guard_deadline_exclusion_and_join():
+    n0 = threading.active_count()
+    guard = FleetStragglerGuard(deadline_s=0.15)
+    release = threading.Event()
+
+    def slow():
+        release.wait(5.0)
+        return "done"
+
+    with pytest.raises(ClientLate):
+        guard.run(slow, label="c01")
+    assert guard.late == 1 and guard.busy("c01")
+    assert guard.run(lambda: 42, label="c02") == 42   # round continues
+    release.set()
+    assert guard.close() and not guard.leaked
+    assert _join_threads(n0)
+    err = RuntimeError("boom")
+
+    def dies():
+        raise err
+
+    with pytest.raises(RuntimeError, match="boom"):
+        guard.run(dies, label="c03")
+    guard.close()
+
+
+# -- orchestrator contracts -------------------------------------------------
+
+def test_orchestrator_bit_identical_to_sequential_reference(tmp_path):
+    """No faults, no deadline, fixed (absent) mesh: the fleet — including
+    its per-client checkpoint suspend/resume between sessions — must be
+    bit-identical per round to the plain sequential federated loop."""
+    ROUNDS, NC, K, LI = 4, 6, 3, 2
+    ecfg, params = _setup()
+    engine = _engine(ecfg)
+    streams = _streams(NC)
+    orch = FleetOrchestrator(lambda d: engine, lambda c: streams[c], params,
+                             _cfg(NC, K, LI, compress="int8"),
+                             str(tmp_path / "fleet"))
+    globs = []
+    orch.run(ROUNDS,
+             on_round=lambda r, gt, rec: globs.append(
+                 jax.tree.map(np.asarray, gt)))
+    assert orch.close()
+
+    streams2 = _streams(NC)
+    gp = jax.tree.map(jnp.array, params)
+    states, ref = {}, []
+    for r in range(ROUNDS):
+        ups = []
+        for cid in seeded_cohort(SEED, r, range(NC), K):
+            s = streams2[cid]
+            if cid not in states:
+                es = engine.init(client_init_key(SEED, cid), gp,
+                                 s.next_window(W))
+            else:
+                es = dataclasses.replace(
+                    states[cid], train=jax.tree.map(jnp.array, gp))
+            es, _ = engine.run(es, s, LI, prefetch=0, metrics_every=0,
+                               window_size=W)
+            states[cid] = es
+            ups.append(es.train)
+        gp, _ = fedavg(gp, ups, "int8")
+        ref.append(jax.tree.map(np.asarray, gp))
+    for r in range(ROUNDS):
+        assert _states_equal(globs[r], ref[r]), f"round {r} diverged"
+    # suspended client states match too — identical selected ids included
+    for cid, es in states.items():
+        got = orch.client_state(cid)
+        assert got is not None and _states_equal(got, es)
+
+
+def test_client_crash_mid_session_resumes_identical_ids(tmp_path):
+    """A client whose session dies mid-local-round (fatal after the first
+    local checkpoint) resumes from its own checkpoint scope next time it
+    is scheduled and lands on exactly the state — same selected ids, same
+    buffer — the uncrashed reference run produces."""
+    NC, LI = 3, 2
+    ecfg, params = _setup()
+    engine = _engine(ecfg)
+    sched = {0: [0, 1, 2], 1: [0, 1, 2], 2: [0]}
+    # crash_after=1: non-init session fetches at attempts 0,1 — the fatal
+    # fires on local round 1's fetch, after local round 0's checkpoint
+    faults = {0: FaultyClient(0, schedule={1: "crash"}, crash_after=1)}
+    streams = _streams(NC)
+    orch = FleetOrchestrator(lambda d: engine, lambda c: streams[c], params,
+                             _cfg(NC, 3, LI), str(tmp_path / "a"),
+                             faults=faults, cohort_schedule=sched)
+    orch.run(3)
+    assert orch.close()
+    assert orch.history[1]["failed"] == [0]
+    assert orch.history[1]["on_time"] == 2      # round never stalled
+    assert orch.history[2]["on_time"] == 1
+    assert faults[0].crashed == 1
+    assert orch.crashed_sessions == 1
+
+    streams2 = _streams(NC)
+    ref = FleetOrchestrator(lambda d: engine, lambda c: streams2[c], params,
+                            _cfg(NC, 3, LI), str(tmp_path / "b"),
+                            cohort_schedule={0: sched[0], 1: sched[1]})
+    ref.run(2)
+    assert ref.close()
+    got, want = orch.client_state(0), ref.client_state(0)
+    assert _states_equal(got, want)
+    assert np.array_equal(np.asarray(got.next_batch["y"]),
+                          np.asarray(want.next_batch["y"]))
+
+
+def test_hung_client_excluded_matches_cohort_minus_one_oracle(tmp_path):
+    """A session that hangs past the deadline is excluded from the round's
+    FedAvg — the aggregate must equal, bit-for-bit, an oracle round whose
+    cohort never contained the hung client. The straggler finishes in the
+    background and every thread joins."""
+    NC, LI = 3, 2
+    n0 = threading.active_count()
+    ecfg, params = _setup()
+    engine = _engine(ecfg)
+    streams = _streams(NC)
+    faults = {1: FaultyClient(1, schedule={1: "hang"}, hang_s=2.5)}
+    cfg = _cfg(NC, 3, LI, deadline_s=0.75)
+    orch = FleetOrchestrator(lambda d: engine, lambda c: streams[c], params,
+                             cfg, str(tmp_path / "a"), faults=faults,
+                             cohort_schedule={0: [0, 1, 2], 1: [0, 1, 2]})
+    orch.guard.deadline_s = None    # warm round: compile must not be "late"
+    orch.run(1)
+    orch.guard.deadline_s = cfg.deadline_s
+    orch.run(2)
+    assert orch.history[1]["late"] == [1]
+    assert orch.history[1]["on_time"] == 2
+    assert orch.guard.late == 1
+
+    streams2 = _streams(NC)
+    oracle = FleetOrchestrator(lambda d: engine, lambda c: streams2[c],
+                               params, _cfg(NC, 3, LI),
+                               str(tmp_path / "b"),
+                               cohort_schedule={0: [0, 1, 2], 1: [0, 2]})
+    oracle.run(2)
+    assert oracle.close()
+    assert _states_equal(jax.tree.map(np.asarray, orch.global_train),
+                         jax.tree.map(np.asarray, oracle.global_train))
+    assert orch.close() and not orch.guard.leaked
+    assert _join_threads(n0)
+
+
+def test_fleet_crash_safe_resume_bit_identical(tmp_path):
+    """Kill the orchestrator between rounds, rebuild it cold (new streams,
+    new process-equivalent) on the same checkpoint root: it resumes at the
+    recorded round with the recorded alive set and finishes bit-identically
+    to the uninterrupted fleet."""
+    ROUNDS, NC, K = 5, 5, 2
+    ecfg, params = _setup()
+    engine = _engine(ecfg)
+    streams = _streams(NC)
+    full = FleetOrchestrator(lambda d: engine, lambda c: streams[c], params,
+                             _cfg(NC, K), str(tmp_path / "a"))
+    full.run(ROUNDS)
+    assert full.close()
+
+    streams_b = _streams(NC)
+    first = FleetOrchestrator(lambda d: engine, lambda c: streams_b[c],
+                              params, _cfg(NC, K), str(tmp_path / "b"))
+    first.run(2)
+    assert first.close()
+    streams_c = _streams(NC)     # cold restart: nothing shared in memory
+    resumed = FleetOrchestrator(lambda d: engine, lambda c: streams_c[c],
+                                params, _cfg(NC, K), str(tmp_path / "b"))
+    assert resumed.round == 2
+    resumed.run(ROUNDS)
+    assert resumed.close()
+    assert len(resumed.history) == ROUNDS - 2
+    assert _states_equal(jax.tree.map(np.asarray, full.global_train),
+                         jax.tree.map(np.asarray, resumed.global_train))
+
+
+@pytest.mark.multidevice
+def test_device_churn_4_2_4_completes_finite_no_leaks(tmp_path):
+    """Elastic reshard mid-run: the fleet starts on a 4-way data mesh,
+    shrinks to 2, grows back to 4 — resident cohort states re-mesh through
+    reshard_engine_state, suspended ones through restore shardings. The
+    run completes with finite loss and no leaked threads. (Admission is
+    shard-local, so cross-topology bit-identity is out of scope — the
+    fixed-mesh reference contract is the test above.)"""
+    _require(4)
+    from repro.launch.mesh import make_engine_mesh
+    n0 = threading.active_count()
+    ecfg, params = _setup()
+    engines = {}
+
+    def make_engine(d):
+        if d not in engines:
+            mesh = make_engine_mesh(d, 1) if d > 1 else None
+            engines[d] = _engine(ecfg, mesh=mesh)
+        return engines[d]
+
+    NC = 4
+    streams = _streams(NC)
+    orch = FleetOrchestrator(make_engine, lambda c: streams[c], params,
+                             _cfg(NC, 2, compress="int8"),
+                             str(tmp_path / "fleet"),
+                             devices_schedule={1: 2, 3: 4}, devices=4)
+    gt, hist = orch.run(4)
+    assert [r["devices"] for r in hist] == [4, 2, 2, 4]
+    assert all(r["on_time"] == len(r["cohort"]) for r in hist)
+    assert all(np.isfinite(r["loss"]) for r in hist if "loss" in r)
+    assert all(np.all(np.isfinite(np.asarray(x)))
+               for x in jax.tree.leaves(gt))
+    # the resident cohort really lives on the final 4-way mesh
+    for ent in orch._resident.values():
+        assert len(ent["state"].buffer["_score"].sharding.device_set) == 4
+    assert orch.close()
+    assert _join_threads(n0)
+
+
+# -- overlap_select x nonfinite_guard (satellite) ---------------------------
+
+def test_overlap_guard_warns_once_and_reports_mode(tmp_path):
+    from repro.launch.mesh import make_engine_mesh
+    mesh = make_engine_mesh(1, 1)   # any width: the interaction is mesh-only
+    ecfg, params = _setup()
+    engine_mod._overlap_guard_warned = False
+    with pytest.warns(RuntimeWarning, match="overlap_select"):
+        guarded = _engine(ecfg, mesh=mesh, nonfinite_guard=True,
+                          overlap_select=True)
+    assert guarded.overlap is False     # guard forces the fused round
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # one-shot: second build is silent
+        _engine(ecfg, mesh=mesh, nonfinite_guard=True, overlap_select=True)
+
+    stream = _streams(1)[0]
+    st = guarded.init(jax.random.PRNGKey(0), params, stream.next_window(W))
+    _, m = guarded.run(st, stream, 2, prefetch=0, metrics_every=0,
+                       window_size=W)
+    assert m["titan_overlap_active"] == 0
+
+    plain = _engine(ecfg, mesh=mesh, overlap_select=True)
+    stream2 = _streams(1, seed=SEED + 1)[0]
+    st2 = plain.init(jax.random.PRNGKey(0), params, stream2.next_window(W))
+    _, m2 = plain.run(st2, stream2, 2, prefetch=0, metrics_every=0,
+                      window_size=W)
+    assert plain.overlap is True
+    assert m2["titan_overlap_active"] == 1
+
+    single = _engine(ecfg)              # no mesh: fused, no warning
+    stream3 = _streams(1, seed=SEED + 2)[0]
+    st3 = single.init(jax.random.PRNGKey(0), params, stream3.next_window(W))
+    _, m3 = single.run(st3, stream3, 1, prefetch=0, metrics_every=0,
+                       window_size=W)
+    assert m3["titan_overlap_active"] == 0
