@@ -1,0 +1,259 @@
+"""Vocab-sharded tensor-parallel scoring benchmark (DESIGN.md §12): the
+model mesh axis on a multi-billion-parameter-scale vocab.
+
+The measured lane steps a ``*-tp-probe`` config — the REAL production vocab
+(qwen2-72b: 152_064 rows) over a tiny backbone — through full Titan rounds
+(stage-1 filter, admission, TP stage-2 scoring, TP cross-entropy train
+step) on a forced-host ``(data, model)`` mesh, against the ``model=1``
+oracle running the serial vocab-shard emulation in the same process. It
+records:
+
+- ``rounds_per_sec`` for the TP mesh vs the model=1 oracle (paired, same
+  process — forced host devices split the same cores, so this bounds the
+  sharded plane's overhead; real HBM relief needs real devices);
+- ``unembed_shard_bytes`` MEASURED from the live train state's
+  ``addressable_shards`` — the acceptance number: per-shard bytes must be
+  exactly ``1/model`` of the replicated table;
+- a parity smoke: the TP round's selected ids must equal the oracle's
+  bit-for-bit (the full suite lives in tests/test_tp.py).
+
+The analytic tables hold on any topology:
+
+- ``payload``: per-shard unembed bytes at model ∈ {1,2,4,8} for the big
+  configs and their tp-probes — the memory the model axis exists to split;
+- ``collective``: the per-round score-reduction all-gather — the per-row
+  accumulator state (5 + 2r fp32 each, never logits) — and the TP CE's
+  three per-token psums, vs the per-shard table bytes they unlock. The
+  roofline argument in one table: the collective payload is O(rows·r)
+  while the split slab is O(V·D/m).
+
+Every mesh shape runs in its own subprocess because
+``--xla_force_host_platform_device_count`` must be set before the first
+jax import.
+
+    PYTHONPATH=src python -m benchmarks.bench_tp            # full: 2x2
+    PYTHONPATH=src python -m benchmarks.bench_tp --smoke    # quick: 1x2
+
+Writes ``BENCH_tp.json`` (schema ``bench_tp/v1``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+from typing import Dict, List
+
+ARCH = "qwen2-72b-tp-probe"
+B, SR, BR = 4, 2, 2             # batch 4, window 8, buffer 8
+SEQ = 32
+SKETCH = 8
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _child(data: int, model: int, rounds: int, reps: int) -> None:
+    """Runs in a subprocess with ``data*model`` forced host devices. Steps
+    the tp-probe on the (data, model) TP mesh and on the (data, 1) oracle,
+    interleaved per rep, and prints one JSON line."""
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import TitanConfig, TrainConfig, get_config
+    from repro.core.engine import TitanEngine
+    from repro.data.stream import SyntheticLMStream
+    from repro.dist.sharding import tp_train_pspecs
+    from repro.launch.mesh import make_engine_mesh
+    from repro.models.model import build_model
+    from repro.train.state import init_train_state
+    from repro.train.step import make_train_step
+
+    cfg = get_config(ARCH)
+    model_lm = build_model(cfg)
+    tcfg = TrainConfig(seq_len=SEQ, global_batch=B, lr=1e-3, warmup_steps=2,
+                       total_steps=100)
+
+    def mk(m_shards: int):
+        mesh = make_engine_mesh(data, m_shards, vocab=cfg.vocab)
+        ts = make_train_step(model_lm, tcfg, data_axis="data",
+                             model_axis="model" if m_shards > 1 else None)
+        ttn = TitanConfig(stream_ratio=SR, buffer_ratio=BR,
+                          sketch_dim=SKETCH, policy="titan-cis",
+                          score_impl="ref", score_vocab_shards=model)
+        tps = None
+        if m_shards > 1:
+            st0 = init_train_state(model_lm, jax.random.PRNGKey(0))
+            tps = tp_train_pspecs(st0, mesh, vocab=cfg.vocab)
+        return TitanEngine.from_config(
+            ttn, model_lm, train_step_fn=ts, params_of=lambda s: s.params,
+            batch_size=B, mesh=mesh, train_pspecs=tps)
+
+    def boot(eng):
+        st = init_train_state(model_lm, jax.random.PRNGKey(0))
+        stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=SEQ,
+                                   n_domains=cfg.n_domains, seed=3)
+        w0 = {k: jnp.asarray(v)
+              for k, v in stream.next_window(eng.window_size).items()}
+        return eng.init(jax.random.PRNGKey(1), st, w0), stream
+
+    def run(eng, est, stream, sel):
+        t0 = time.perf_counter()
+        est, _ = eng.run(est, stream, rounds, prefetch=0,
+                         on_round=lambda r, s, _m: sel.append(
+                             np.asarray(s.next_batch["tokens"])))
+        jax.block_until_ready(jax.tree.leaves(est.train.params)[0])
+        return est, rounds / (time.perf_counter() - t0)
+
+    eng_tp, eng_o = mk(model), mk(1)
+    est_tp, stream_tp = boot(eng_tp)
+    est_o, stream_o = boot(eng_o)
+    rates_tp: List[float] = []
+    rates_o: List[float] = []
+    sel_tp: List = []
+    sel_o: List = []
+    for _ in range(reps):                       # interleaved: paired weather
+        est_tp, r1 = run(eng_tp, est_tp, stream_tp, sel_tp)
+        est_o, r2 = run(eng_o, est_o, stream_o, sel_o)
+        rates_tp.append(r1)
+        rates_o.append(r2)
+
+    w = est_tp.train.params["unembed"]["w"]
+    itemsize = np.dtype(jnp.dtype(w.dtype).name).itemsize
+    full = cfg.vocab * cfg.d_model * itemsize
+    shard_bytes = int(w.addressable_shards[0].data.nbytes)
+    parity = all(np.array_equal(a, b)
+                 for a, b in zip(sel_tp[:rounds], sel_o[:rounds]))
+    print(json.dumps({
+        "mesh": [data, model],
+        "rounds_per_sec": statistics.median(rates_tp),
+        "rounds_per_sec_model1": statistics.median(rates_o),
+        "rel_to_model1": (statistics.median(rates_tp)
+                          / statistics.median(rates_o)),
+        "unembed_shard_bytes": shard_bytes,
+        "unembed_replicated_bytes": full,
+        "shard_fraction": shard_bytes / full,
+        "parity_ids_equal": bool(parity),
+        "devices": jax.device_count(),
+    }))
+
+
+def _run_child(data: int, model: int, rounds: int, reps: int) -> Dict:
+    env = dict(
+        os.environ,
+        XLA_FLAGS=(f"--xla_force_host_platform_device_count="
+                   f"{max(data * model, 1)}"),
+        PYTHONPATH=os.path.join(_ROOT, "src") + (
+            os.pathsep + os.environ["PYTHONPATH"]
+            if os.environ.get("PYTHONPATH") else ""))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_tp", "--child",
+         str(data), str(model), str(rounds), str(reps)],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_tp child ({data}x{model}) failed:\n"
+                           f"{r.stderr[-3000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def _payload() -> List[Dict]:
+    """Per-shard unembed bytes at model ∈ {1,2,4,8}: the slab the model
+    axis splits, for the production configs and their tp-probes."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+
+    rows = []
+    for arch in ("qwen2-72b", "qwen2-72b-tp-probe",
+                 "llama3-405b", "llama3-405b-tp-probe"):
+        cfg = get_config(arch)
+        itemsize = jnp.dtype(cfg.param_dtype).itemsize
+        full = cfg.vocab * cfg.d_model * itemsize
+        for m in (1, 2, 4, 8):
+            if cfg.vocab % m:
+                continue
+            rows.append({"arch": arch, "vocab": cfg.vocab,
+                         "d_model": cfg.d_model, "dtype": cfg.param_dtype,
+                         "model": m, "table_bytes_per_shard": full // m,
+                         "ratio_vs_replicated": 1.0 / m})
+    return rows
+
+
+def _collective() -> List[Dict]:
+    """Per-round score-reduction wire bytes vs the table bytes the split
+    unlocks. The all-gather moves the per-row accumulator state — 5 scalar
+    lanes (m, s1, s2, sl, ly) plus 2 sketches of width r, fp32 — for every
+    buffered candidate row; the TP cross-entropy adds three per-token
+    reductions (pmax of the max, psum of Σexp, psum of the label logit).
+    Never logits: the O(rows·V) matrix stays on-shard."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+
+    rows = []
+    for arch in ("qwen2-72b", "llama3-405b"):
+        cfg = get_config(arch)
+        itemsize = jnp.dtype(cfg.param_dtype).itemsize
+        buffer_rows = 4096                  # production-scale buffer
+        r = 16
+        state_bytes = buffer_rows * (5 + 2 * r) * 4
+        for m in (2, 4, 8):
+            table = cfg.vocab * cfg.d_model * itemsize
+            gather = state_bytes * (m - 1)      # ring all-gather, per shard
+            rows.append({
+                "arch": arch, "model": m, "sketch_dim": r,
+                "buffer_rows": buffer_rows,
+                "score_allgather_bytes": gather,
+                # TP CE reduces 3 scalars per token (stopped max, Σexp,
+                # label logit) — a flat 12 B/token regardless of V
+                "ce_psum_bytes_per_token": 3 * 4,
+                "table_bytes_saved_per_shard": table - table // m,
+                # the roofline: per-round score wire vs the slab each
+                # shard no longer holds (and no longer streams per score)
+                "wire_per_byte_saved": gather / (table - table // m),
+            })
+    return rows
+
+
+def main(smoke: bool = False, json_path: str = "BENCH_tp.json") -> Dict:
+    data, model = (1, 2) if smoke else (2, 2)
+    rounds = 2 if smoke else 4
+    reps = 1 if smoke else 3
+    run = _run_child(data, model, rounds, reps)
+    payload = {"schema": "bench_tp/v1", "smoke": smoke,
+               "cores": os.cpu_count(), "arch": ARCH,
+               "workload": {"batch": B, "window": B * SR, "buffer": B * BR,
+                            "seq": SEQ, "sketch_dim": SKETCH,
+                            "policy": "titan-cis",
+                            "rounds": rounds, "reps": reps},
+               "run": run, "payload": _payload(),
+               "collective": _collective()}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    r = run
+    print(f"cores={payload['cores']} arch={ARCH}")
+    print(f"mesh {r['mesh'][0]}x{r['mesh'][1]}: "
+          f"{r['rounds_per_sec']:.3f} r/s (model=1 oracle "
+          f"{r['rounds_per_sec_model1']:.3f}, {r['rel_to_model1']:.2f}x), "
+          f"parity={'OK' if r['parity_ids_equal'] else 'FAIL'}")
+    print(f"unembed per shard: {r['unembed_shard_bytes']:,} B of "
+          f"{r['unembed_replicated_bytes']:,} B replicated "
+          f"({r['shard_fraction']:.3f})")
+    for row in payload["payload"]:
+        if row["model"] == 8:
+            print(f"{row['arch']:>22} m=8: "
+                  f"{row['table_bytes_per_shard']:,} B/shard")
+    print(f"wrote {json_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        i = sys.argv.index("--child")
+        _child(int(sys.argv[i + 1]), int(sys.argv[i + 2]),
+               int(sys.argv[i + 3]), int(sys.argv[i + 4]))
+    else:
+        main(smoke="--smoke" in sys.argv)

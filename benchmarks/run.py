@@ -13,7 +13,7 @@ def main() -> None:
                             bench_fig5a, bench_fig5b, bench_fig5c, bench_fig6,
                             bench_fig8, bench_fig9, bench_fig10, bench_fig11,
                             bench_fleet, bench_kernels, bench_policies,
-                            bench_serve, bench_shard, bench_table1)
+                            bench_serve, bench_shard, bench_table1, bench_tp)
     csv = []
 
     def run(name, fn):
@@ -100,6 +100,13 @@ def main() -> None:
                 f"{two['speedup_vs_single']:.2f}"))
     csv.append(("shard_int8_allreduce_ratio", dt,
                 f"{out['allreduce']['ratio']:.2f}"))
+
+    print("=" * 70)
+    name, dt, out = run("tp", bench_tp.main)  # writes BENCH_tp.json
+    csv.append(("tp_unembed_shard_fraction", dt,
+                f"{out['run']['shard_fraction']:.3f}"))
+    csv.append(("tp_round_rel_to_model1", dt,
+                f"{out['run']['rel_to_model1']:.2f}"))
 
     print("=" * 70)
     name, dt, out = run("faults", bench_faults.main)  # writes BENCH_faults.json

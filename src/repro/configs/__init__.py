@@ -35,10 +35,24 @@ def get_config(name: str) -> ArchConfig:
     if name in _RUNTIME:
         return _RUNTIME[name]
     reduced = name.endswith("-reduced")
-    base = name[: -len("-reduced")] if reduced else name
+    tp_probe = name.endswith("-tp-probe")
+    base = name
+    if reduced:
+        base = name[: -len("-reduced")]
+    elif tp_probe:
+        base = name[: -len("-tp-probe")]
     if base not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
     mod = importlib.import_module(_MODULES[base])
+    if tp_probe:
+        # real production vocab over a tiny backbone, for the forced-host
+        # tensor-parallel lane (DESIGN.md §12); only archs whose vocab the
+        # TP lane exercises define one
+        if not hasattr(mod, "tp_probe"):
+            raise KeyError(
+                f"{base!r} has no tp-probe variant; available: "
+                f"{sorted(n for n, m in _MODULES.items() if hasattr(importlib.import_module(m), 'tp_probe'))}")
+        return mod.tp_probe()
     return mod.reduced() if reduced else mod.config()
 
 

@@ -252,6 +252,10 @@ class TitanConfig:
     score_n_block: int = 0        # fused-kernel tile sizes; 0 = autotune
     score_v_block: int = 0        #   (keyed on (D, V, r) — see
     score_d_block: int = 0        #   kernels/score/ops.autotune_blocks)
+    score_vocab_shards: int = 1   # >1: run the vocab-sharded TP score math
+                                  # serially on one device (same merge as
+                                  # the model-axis reduction — the lockstep
+                                  # oracle for mesh model>1; DESIGN.md §12)
     dense_slot_sampling: bool = False  # C-IS: use the O(B·N) dense slot-
                                   # logits sampler instead of the segment
                                   # inverse-CDF path (parity/debug only)

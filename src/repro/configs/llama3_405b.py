@@ -17,3 +17,13 @@ def reduced() -> ArchConfig:
     return replace(config(), name="llama3-405b-reduced",
                    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
                    d_ff=192, vocab=512, opt_state_dtype="float32", remat="none")
+
+
+def tp_probe() -> ArchConfig:
+    """Tensor-parallel probe (DESIGN.md §12): the real 128_256-row vocab of
+    the 405B entry over a tiny backbone — see qwen2_72b.tp_probe."""
+    return replace(config(), name="llama3-405b-tp-probe",
+                   n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                   d_head=32, d_ff=384, opt_state_dtype="float32",
+                   remat="none", param_dtype="float32",
+                   tie_embeddings=False)

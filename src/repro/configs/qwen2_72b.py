@@ -16,3 +16,16 @@ def reduced() -> ArchConfig:
     return replace(config(), name="qwen2-72b-reduced",
                    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
                    d_ff=192, vocab=512, remat="none")
+
+
+def tp_probe() -> ArchConfig:
+    """Tensor-parallel probe (DESIGN.md §12): the REAL 152k vocab of the
+    72B entry — the dimension the model mesh axis actually shards — over a
+    tiny backbone so a forced-host CPU mesh steps the round for real. The
+    unembed table is the full production (152_064, 128) slab scaled only in
+    width; per-shard bytes must come out at 1/model of replicated
+    (benchmarks/bench_tp.py records it)."""
+    return replace(config(), name="qwen2-72b-tp-probe",
+                   n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                   d_head=32, d_ff=384, remat="none",
+                   param_dtype="float32", tie_embeddings=False)

@@ -132,7 +132,8 @@ class TitanEngine:
                  params_of: Optional[Callable] = None,
                  batch_size: int, n_classes: int,
                  buffer_size: Optional[int] = None, jit: bool = True,
-                 donate: bool = True, mesh=None, data_axis: str = "data"):
+                 donate: bool = True, mesh=None, data_axis: str = "data",
+                 train_pspecs=None):
         self.cfg = cfg if cfg is not None else TitanConfig()
         self.policy: SelectionPolicy = get_policy(
             policy if policy is not None else self.cfg.policy, self.cfg)
@@ -167,6 +168,15 @@ class TitanEngine:
         # --- sharded data plane (DESIGN.md §8) ---------------------------
         self.mesh = mesh
         self.data_axis = data_axis
+        # Per-leaf PartitionSpec tree for the train state (DESIGN.md §12):
+        # None replicates the whole train state (the data-parallel default);
+        # a tree from ``dist.sharding.tp_train_pspecs`` shards the unembed
+        # table (and its optimizer moments) over the model axis, activating
+        # vocab-parallel scoring + training for the whole round.
+        self.train_pspecs = train_pspecs
+        if train_pspecs is not None and mesh is None:
+            raise ValueError("train_pspecs needs a mesh (it is the train "
+                             "leaf layout of the sharded engine)")
         if mesh is not None:
             if data_axis not in mesh.axis_names:
                 raise ValueError(f"mesh axes {mesh.axis_names} carry no "
@@ -246,14 +256,15 @@ class TitanEngine:
             if self.overlap:
                 data = P(data_axis)
                 pol = data if self.policy.shard_state else P()
+                tspec = specs.train   # P() or the per-leaf TP spec tree
                 sel_specs = (data, pol, P(), P())   # buffer, policy, rng, t
                 sel_fn = shard_map(
                     self._shard_select_seg, mesh=mesh,
-                    in_specs=(P(), sel_specs, data),
+                    in_specs=(tspec, sel_specs, data),
                     out_specs=(sel_specs, data, P()), check_rep=False)
                 train_fn = shard_map(
                     lambda train, batch: self._train_step_fn(train, batch),
-                    mesh=mesh, in_specs=(P(), data), out_specs=(P(), P()),
+                    mesh=mesh, in_specs=(tspec, data), out_specs=(tspec, P()),
                     check_rep=False)
                 self._select_step = jax.jit(
                     sel_fn, donate_argnums=(1,) if self.donate else ())
@@ -274,7 +285,8 @@ class TitanEngine:
                     batch_size: int, n_classes: Optional[int] = None,
                     buffer_size: Optional[int] = None, jit: bool = True,
                     donate: bool = True, mesh=None,
-                    data_axis: str = "data") -> "TitanEngine":
+                    data_axis: str = "data",
+                    train_pspecs=None) -> "TitanEngine":
         """Build an engine from a TitanConfig.
 
         For LM models (``build_model`` output) hooks default to the fused
@@ -299,7 +311,8 @@ class TitanEngine:
         return cls(hooks=hooks, train_step_fn=train_step_fn, policy=policy,
                    cfg=cfg, params_of=params_of, batch_size=batch_size,
                    n_classes=n_classes, buffer_size=buffer_size, jit=jit,
-                   donate=donate, mesh=mesh, data_axis=data_axis)
+                   donate=donate, mesh=mesh, data_axis=data_axis,
+                   train_pspecs=train_pspecs)
 
     @property
     def window_size(self) -> int:
@@ -313,13 +326,16 @@ class TitanEngine:
         buffer slots and selected-batch rows partition over the data axis,
         train/policy/rng/round replicate. A ``shard_state`` policy
         (DESIGN.md §8) instead keeps one independent state per shard,
-        stacked on a leading shard dim."""
+        stacked on a leading shard dim. With ``train_pspecs`` (vocab-sharded
+        tensor parallelism, DESIGN.md §12) the train field carries the
+        per-leaf spec tree instead of a replicated P()."""
         data = P(self.data_axis)
         pol = data if self.policy.shard_state else P()
+        train = self.train_pspecs if self.train_pspecs is not None else P()
         # sel_mask partitions with the buffer slots it indexes; with the
         # guard off it is None (an empty subtree) and the spec leaf simply
         # has nothing to bind to
-        return EngineState(train=P(), policy=pol, buffer=data,
+        return EngineState(train=train, policy=pol, buffer=data,
                            next_batch=data, rng=P(), t=P(), sel_mask=data)
 
     def state_shardings(self, state: EngineState, mesh=None) -> EngineState:
@@ -350,9 +366,16 @@ class TitanEngine:
         kw = {}
         for f in dataclasses.fields(EngineState):
             spec = getattr(specs, f.name)
-            kw[f.name] = jax.tree.map(
-                lambda _, s=spec: NamedSharding(mesh, s),
-                getattr(state, f.name))
+            val = getattr(state, f.name)
+            if isinstance(spec, P) or spec is None:
+                kw[f.name] = jax.tree.map(
+                    lambda _, s=spec: NamedSharding(mesh, s), val)
+            else:
+                # per-leaf spec tree (train under tensor parallelism):
+                # flatten the spec tree up to the state's structure, leaf
+                # for leaf
+                kw[f.name] = jax.tree.map(
+                    lambda _, s: NamedSharding(mesh, s), val, spec)
         return EngineState(**kw)
 
     # -- lifecycle ----------------------------------------------------------

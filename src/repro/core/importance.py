@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.flags import pscan
-from repro.kernels.score.ops import linear_score
+from repro.kernels.score.ops import linear_score, linear_score_sharded
 from repro.models.model import unembed_table
 
 
@@ -38,7 +38,8 @@ def sketch_matrices(seed_key, V: int, d: int, r: int):
 def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
                       sketch_dim: int = 16, chunk: int = 512,
                       impl: str = "auto", n_block: int = 0, v_block: int = 0,
-                      d_block: int = 0) -> Dict[str, jnp.ndarray]:
+                      d_block: int = 0, model_axis: Optional[str] = None,
+                      vocab_shards: int = 1) -> Dict[str, jnp.ndarray]:
     """Per-sequence Titan statistics from final hidden states.
 
     h: (B,T,D); labels: (B,T) int32 (-1 = pad). Scans seq chunks; each chunk
@@ -47,13 +48,43 @@ def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
     HBM (impl="unfused" restores the materialize-then-score path as fallback
     and roofline baseline; see DESIGN.md §4).
     Returns: loss (B,), gnorm (B,), entropy (B,), sketch (B, r*r).
+
+    Tensor-parallel dispatch (DESIGN.md §12): when the call runs inside
+    shard_map with the unembed table sharded over ``model_axis``, the table
+    leaf arrives as the local (V/m, D) slice — detected by shape, so the
+    same stats_fn works eagerly at init (full table) and sharded in the
+    round. Each shard scores its vocab tile and the partial logsumexp
+    states merge over the axis. ``vocab_shards=k`` instead runs that exact
+    sharded arithmetic serially on one device (the lockstep oracle).
     """
     B, T, D = h.shape
     table = unembed_table(cfg, params)
     r = sketch_dim
     if sketch_key is None:
         sketch_key = jax.random.PRNGKey(0)
+    # R is regenerated in full from the key on every shard and row-sliced, so
+    # a model shard sketches with exactly the rows the replicated run uses
     R, S = sketch_matrices(sketch_key, cfg.vocab, D, r)
+
+    V_local = table.shape[0]
+    tp = model_axis is not None and V_local != cfg.vocab
+    if tp:
+        if cfg.vocab % V_local != 0:
+            raise ValueError(
+                f"unembed slice rows {V_local} do not divide vocab "
+                f"{cfg.vocab}: the model-axis sharding is inconsistent")
+        shift = lax.axis_index(model_axis) * V_local
+        R_local = lax.dynamic_slice_in_dim(R, shift, V_local, axis=0)
+
+    def score(hc, yc):
+        if tp:
+            return linear_score_sharded(hc, table, yc, R_local, S,
+                                        axis=model_axis, impl=impl,
+                                        n_block=n_block, v_block=v_block,
+                                        d_block=d_block)
+        return linear_score(hc, table, yc, R, S, impl=impl,
+                            n_block=n_block, v_block=v_block,
+                            d_block=d_block, vocab_shards=vocab_shards)
 
     chunk = min(chunk, T)
     assert T % chunk == 0
@@ -63,9 +94,7 @@ def lm_sequence_stats(cfg, params, h, labels, *, sketch_key=None,
         loss_s, gn2_s, ent_s, sk_s, cnt = carry
         hc = lax.dynamic_slice_in_dim(h, ci * chunk, chunk, axis=1)
         yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
-        out = linear_score(hc.reshape(B * chunk, D), table,
-                           yc.reshape(-1), R, S, impl=impl,
-                           n_block=n_block, v_block=v_block, d_block=d_block)
+        out = score(hc.reshape(B * chunk, D), yc.reshape(-1))
         valid = (yc >= 0).astype(jnp.float32)                     # (B,chunk)
         loss_t = out["loss"].reshape(B, chunk) * valid
         pn2_t = out["pnorm2"].reshape(B, chunk) * valid

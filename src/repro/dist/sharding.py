@@ -19,6 +19,7 @@ import threading
 from typing import Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # Preferred mesh axis per logical param/activation axis. "model" shards the
@@ -169,3 +170,95 @@ def param_shardings(defs, rules: AxisRules):
     from repro.models.model import ParamDef
     return jax.tree.map(lambda d: rules.sharding(*d.axes), defs,
                         is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded tensor parallelism over the `model` mesh axis (DESIGN.md §12)
+#
+# The engine's score/stat path (fused linear-score) and train CE both read
+# the unembed table; sharding that one leaf P("model") on its vocab dim is
+# what activates the model axis: each shard scores/trains against its
+# (V/m, D) tile and the tiny logsumexp states reduce over the axis. These
+# helpers build the per-leaf train-state specs, validate divisibility at
+# config time, and complete the vocab-parallel gradients inside the step.
+# ---------------------------------------------------------------------------
+
+def is_unembed_path(path) -> bool:
+    """True for any train-state leaf under an 'unembed' subtree — covers
+    params['unembed']['w'] and its mirrored optimizer moments."""
+    return any(getattr(k, "key", None) == "unembed" for k in path)
+
+
+def validate_tp_vocab(vocab: int, model: int, *, where: str = "mesh"):
+    """Readable config-time error for V % model != 0 — the failure must
+    never surface as a Pallas/sharding shape error mid-round."""
+    if model > 1 and vocab % model != 0:
+        raise ValueError(
+            f"vocab {vocab} is not divisible by the model mesh axis "
+            f"({where}: model={model}): vocab-sharded tensor-parallel "
+            f"scoring slices the unembed table into contiguous (V/model, D) "
+            f"tiles. Pick a model axis that divides the vocab (e.g. a "
+            f"power of two for padded vocabs) or pad cfg.vocab")
+
+
+def tp_train_pspecs(train_state, mesh, *, axis: str = "model",
+                    vocab: int = 0, tie_embeddings: bool = False):
+    """Per-leaf PartitionSpec tree for a TrainState with the unembed table
+    (and its optimizer moments) sharded over `axis` on the vocab dim; every
+    other leaf replicated. Pass the result as ``TitanEngine(...,
+    train_pspecs=...)`` to activate the model axis for the whole round.
+
+    Validates V % model at build time (the satellite bugfix: a readable
+    error here, not a Pallas shape error mid-round). Tied embeddings cannot
+    vocab-shard (the input lookup needs the full table on every shard) —
+    explicit error rather than a silently replicated "TP" run.
+    """
+    if tie_embeddings:
+        raise ValueError(
+            "tie_embeddings=True cannot use vocab-sharded tensor "
+            "parallelism: the input embedding lookup needs the full table "
+            "on every shard. Untie the embeddings or run with model=1")
+    model = int(dict(mesh.shape).get(axis, 1))
+    if vocab:
+        validate_tp_vocab(vocab, model, where="tp_train_pspecs")
+
+    def spec(path, leaf):
+        if is_unembed_path(path) and getattr(leaf, "ndim", 0) >= 1:
+            if leaf.shape[0] % max(model, 1) != 0:
+                raise ValueError(
+                    f"unembed leaf {jax.tree_util.keystr(path)} dim0 "
+                    f"{leaf.shape[0]} not divisible by model={model}")
+            return P(axis)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, train_state)
+
+
+def tp_allreduce_grads(grads, axis: str):
+    """Complete vocab-parallel gradients inside the train step (shard_map).
+
+    Under the TP cross-entropy each shard's backward pass carries only its
+    local vocab tile's contribution to the cotangent of h, so gradients of
+    every *replicated* parameter are partial sums: psum them over `axis`
+    (one bundled collective). The unembed slice's gradient is exact and
+    local — it stays put. Returns (grads, grad_norm) where grad_norm is the
+    cross-shard-consistent global norm (replicated leaves counted once,
+    the sharded leaf's square-sum psum-ed) — feeding this to the clip keeps
+    every model shard applying the identical clip scale, without which the
+    replicated params would silently diverge across shards.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+    rep = [g for p, g in flat if not is_unembed_path(p)]
+    rep = list(jax.lax.psum(tuple(rep), axis))
+    out, sq_rep, sq_loc = [], [], []
+    for p, g in flat:
+        if is_unembed_path(p):
+            out.append(g)
+            sq_loc.append(jnp.sum(jnp.square(g.astype(jnp.float32))))
+        else:
+            r = rep.pop(0)
+            out.append(r)
+            sq_rep.append(jnp.sum(jnp.square(r.astype(jnp.float32))))
+    loc = jax.lax.psum(sum(sq_loc), axis) if sq_loc else 0.0
+    grad_norm = jnp.sqrt(sum(sq_rep) + loc)
+    return jax.tree_util.tree_unflatten(treedef, out), grad_norm

@@ -8,13 +8,20 @@ from repro.core.importance import lm_sequence_stats
 from repro.hooks.base import ModalityHooks
 
 
-def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None
-             ) -> ModalityHooks:
+def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None,
+             model_axis: str = "model") -> ModalityHooks:
     """Hooks over any ``build_model`` LM: shallow-block features + fused
     linear-score sequence stats.
 
     `impl` overrides cfg.score_impl for the fused linear-score kernel; the
     tile sizes come from cfg.score_{n,v,d}_block (0 = autotune).
+
+    The stats path is tensor-parallel-ready: when the engine runs the hooks
+    inside shard_map with the unembed table sharded over `model_axis`
+    (``train_pspecs`` from ``dist.sharding.tp_train_pspecs``),
+    `lm_sequence_stats` sees the local (V/m, D) slice and reduces the score
+    state over the axis; with a full table (init, mesh=None, model=1) the
+    same function takes the replicated path — no separate TP hooks.
     """
     impl = cfg.score_impl if impl is None else impl
 
@@ -38,6 +45,8 @@ def lm_hooks(model, cfg: TitanConfig, *, impl: Optional[str] = None
                                  sketch_dim=cfg.sketch_dim, impl=impl,
                                  n_block=cfg.score_n_block,
                                  v_block=cfg.score_v_block,
-                                 d_block=cfg.score_d_block)
+                                 d_block=cfg.score_d_block,
+                                 model_axis=model_axis,
+                                 vocab_shards=cfg.score_vocab_shards)
 
     return ModalityHooks(features_fn, stats_fn, name="lm")

@@ -36,11 +36,20 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(h_ref, table_ref, labels_ref, R_ref, S_ref,
-            loss_ref, pnorm2_ref, entropy_ref, py_ref, psk_ref,
-            hn2_ref, hsk_ref,
-            acc_ref, m_ref, s1_ref, s2_ref, sl_ref, ly_ref, rsum_ref, ry_ref,
-            *, nv: int, nd: int, v_blk: int, v_actual: int):
+def _kernel(h_ref, table_ref, labels_ref, R_ref, S_ref, *refs,
+            nv: int, nd: int, v_blk: int, v_actual: int, partial: bool):
+    if partial:
+        # raw max-relative accumulator state out (vocab-sharded TP: the
+        # caller merges states across shards before finalizing — DESIGN §12)
+        (m_out, s1_out, s2_out, sl_out, ly_out, rsum_out, ry_out,
+         hn2_ref, hsk_ref,
+         acc_ref, m_ref, s1_ref, s2_ref, sl_ref, ly_ref, rsum_ref,
+         ry_ref) = refs
+    else:
+        (loss_ref, pnorm2_ref, entropy_ref, py_ref, psk_ref,
+         hn2_ref, hsk_ref,
+         acc_ref, m_ref, s1_ref, s2_ref, sl_ref, ly_ref, rsum_ref,
+         ry_ref) = refs
     j = pl.program_id(1)
     d = pl.program_id(2)
 
@@ -110,25 +119,42 @@ def _kernel(h_ref, table_ref, labels_ref, R_ref, S_ref,
 
         @pl.when(j == nv - 1)
         def _finish():
-            m, s1, s2 = m_ref[...], s1_ref[...], s2_ref[...]
-            sl, ly = sl_ref[...], ly_ref[...]
-            lse = m + jnp.log(s1)
-            py = jnp.exp(ly - lse)
-            loss_ref[...] = lse - ly
-            py_ref[...] = py
-            pnorm2_ref[...] = s2 / (s1 * s1) - 2.0 * py + 1.0
-            entropy_ref[...] = jnp.log(s1) - sl / s1
-            psk_ref[...] = rsum_ref[...] / s1 - ry_ref[...]
+            if partial:
+                m_out[...] = m_ref[...]
+                s1_out[...] = s1_ref[...]
+                s2_out[...] = s2_ref[...]
+                sl_out[...] = sl_ref[...]
+                ly_out[...] = ly_ref[...]
+                rsum_out[...] = rsum_ref[...]
+                ry_out[...] = ry_ref[...]
+            else:
+                m, s1, s2 = m_ref[...], s1_ref[...], s2_ref[...]
+                sl, ly = sl_ref[...], ly_ref[...]
+                lse = m + jnp.log(s1)
+                py = jnp.exp(ly - lse)
+                loss_ref[...] = lse - ly
+                py_ref[...] = py
+                pnorm2_ref[...] = s2 / (s1 * s1) - 2.0 * py + 1.0
+                entropy_ref[...] = jnp.log(s1) - sl / s1
+                psk_ref[...] = rsum_ref[...] / s1 - ry_ref[...]
 
 
 def linear_score_pallas(h, table, labels, R, S, *, v_actual: int,
                         n_block: int = 256, v_block: int = 1024,
-                        d_block: int = 512, interpret: bool = False):
+                        d_block: int = 512, interpret: bool = False,
+                        partial: bool = False):
     """h (N,D); table (V,D); labels (N,); R (V,r); S (D,r).
 
     N/V/D must be multiples of the block sizes (ops.py pads; padded table
     rows give logit 0, masked to -1e30 via `v_actual`). Returns dict of
     fp32 stats: loss/pnorm2/entropy/py/hnorm2 (N,), psketch/hsketch (N,r).
+
+    ``partial=True`` skips finalization and returns the raw max-relative
+    accumulator state instead — m/s1/s2/sl/ly (N,), rsum/ry (N,r) plus the
+    hidden-side hnorm2/hsketch — for callers that merge states across vocab
+    shards before finalizing (``ops.merge_score_partials``, DESIGN.md §12).
+    A label outside [0, v_actual) simply never matches a column: ly and ry
+    stay 0, which is exactly the out-of-shard contribution.
     """
     N, D = h.shape
     V = table.shape[0]
@@ -139,14 +165,21 @@ def linear_score_pallas(h, table, labels, R, S, *, v_actual: int,
     nr, nv, nd = N // n_block, V // v_block, D // d_block
 
     row = jax.ShapeDtypeStruct((N, 1), jnp.float32)
-    out_sds = [row, row, row, row,                       # loss/pnorm2/ent/py
-               jax.ShapeDtypeStruct((N, r), jnp.float32),   # psketch
-               row,                                         # hnorm2
-               jax.ShapeDtypeStruct((N, r), jnp.float32)]   # hsketch
+    sk = jax.ShapeDtypeStruct((N, r), jnp.float32)
     row_spec = pl.BlockSpec((n_block, 1), lambda i, j, d: (i, 0))
     sk_spec = pl.BlockSpec((n_block, r), lambda i, j, d: (i, 0))
-    out_specs = [row_spec, row_spec, row_spec, row_spec, sk_spec,
-                 row_spec, sk_spec]
+    if partial:
+        names = ("m", "s1", "s2", "sl", "ly", "rsum", "ry",
+                 "hnorm2", "hsketch")
+        out_sds = [row, row, row, row, row, sk, sk, row, sk]
+        out_specs = [row_spec, row_spec, row_spec, row_spec, row_spec,
+                     sk_spec, sk_spec, row_spec, sk_spec]
+    else:
+        names = ("loss", "pnorm2", "entropy", "py", "psketch",
+                 "hnorm2", "hsketch")
+        out_sds = [row, row, row, row, sk, row, sk]
+        out_specs = [row_spec, row_spec, row_spec, row_spec, sk_spec,
+                     row_spec, sk_spec]
     in_specs = [
         pl.BlockSpec((n_block, d_block), lambda i, j, d: (i, d)),   # h
         pl.BlockSpec((v_block, d_block), lambda i, j, d: (j, d)),   # table
@@ -165,8 +198,8 @@ def linear_score_pallas(h, table, labels, R, S, *, v_actual: int,
         pltpu.VMEM((n_block, r), jnp.float32),        # ry
     ]
     kernel = functools.partial(_kernel, nv=nv, nd=nd, v_blk=v_block,
-                               v_actual=v_actual)
-    loss, pnorm2, entropy, py, psk, hn2, hsk = pl.pallas_call(
+                               v_actual=v_actual, partial=partial)
+    outs = pl.pallas_call(
         kernel,
         grid=(nr, nv, nd),
         in_specs=in_specs,
@@ -175,6 +208,5 @@ def linear_score_pallas(h, table, labels, R, S, *, v_actual: int,
         scratch_shapes=scratch,
         interpret=interpret,
     )(h, table, labels[:, None], R, S)
-    return {"loss": loss[:, 0], "pnorm2": pnorm2[:, 0],
-            "entropy": entropy[:, 0], "py": py[:, 0], "psketch": psk,
-            "hnorm2": hn2[:, 0], "hsketch": hsk}
+    wide = ("psketch", "hsketch", "rsum", "ry")
+    return {k: (v if k in wide else v[:, 0]) for k, v in zip(names, outs)}

@@ -20,9 +20,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from jax import lax
+
 from repro.kernels.score.fused import linear_score_pallas
-from repro.kernels.score.ref import linear_score_ref, score_ref
+from repro.kernels.score.ref import (linear_score_partial_ref,
+                                     linear_score_ref, score_ref)
 from repro.kernels.score.score import score_pallas
+
+# Label sentinel for "this row's label lives on another vocab shard": never
+# matches a column index, so ly/ry accumulate exactly 0 on this shard.
+OUT_OF_SHARD = 1 << 30
 
 
 def _pad_to(x, mult, axis, value):
@@ -99,9 +106,10 @@ def autotune_blocks(D: int, V: int, r: int, N: int = 1 << 30):
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "n_block", "v_block",
-                                             "d_block"))
+                                             "d_block", "vocab_shards"))
 def linear_score(h, table, labels, R=None, S=None, *, impl: str = "auto",
-                 n_block: int = 0, v_block: int = 0, d_block: int = 0):
+                 n_block: int = 0, v_block: int = 0, d_block: int = 0,
+                 vocab_shards: int = 1):
     """Fused unembed + score statistics. h (N,D) any float dtype; table
     (V,D); labels (N,) int32 (negative labels are clamped to 0 — mask the
     outputs, as lm_sequence_stats does); R (V,r) or None; S (D,r) or None.
@@ -109,11 +117,43 @@ def linear_score(h, table, labels, R=None, S=None, *, impl: str = "auto",
     Returns dict: loss, pnorm2, entropy, py, hnorm2 (N,) fp32
     [+ psketch (N,r) if R] [+ hsketch (N,r) if S]. Block sizes of 0 resolve
     via `autotune_blocks`.
+
+    ``vocab_shards=k`` runs the vocab-sharded tensor-parallel math serially
+    on one device: the table (and R) are split into k contiguous row slices,
+    each slice produces a partial score state, and the states are merged
+    left-to-right with the same max-relative merge the mesh path reduces
+    with psum/pmax (DESIGN.md §12). This is the single-device oracle the
+    2-device lockstep test compares bit-for-bit against the distributed
+    `model`-axis reduction.
     """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     labels = jnp.maximum(labels, 0)
     want_psk, want_hsk = R is not None, S is not None
+    if vocab_shards > 1:
+        V = table.shape[0]
+        if V % vocab_shards != 0:
+            raise ValueError(
+                f"vocab {V} is not divisible by vocab_shards={vocab_shards}; "
+                f"pick a shard count that divides the vocab")
+        Vl = V // vocab_shards
+        st = None
+        for i in range(vocab_shards):
+            ti = lax.slice_in_dim(table, i * Vl, (i + 1) * Vl, axis=0)
+            Ri = (lax.slice_in_dim(R, i * Vl, (i + 1) * Vl, axis=0)
+                  if want_psk else None)
+            yi = jnp.where((labels >= i * Vl) & (labels < (i + 1) * Vl),
+                           labels - i * Vl, OUT_OF_SHARD)
+            pi = linear_score_partial(h, ti, yi, Ri, S, impl=impl,
+                                      n_block=n_block, v_block=v_block,
+                                      d_block=d_block)
+            st = pi if st is None else merge_score_partials(st, pi)
+        out = finalize_score_state(st)
+        if not want_psk:
+            out.pop("psketch")
+        if not want_hsk:
+            out.pop("hsketch")
+        return out
     if impl == "ref":
         return linear_score_ref(h, table, labels, R, S)
 
@@ -153,3 +193,169 @@ def linear_score(h, table, labels, R=None, S=None, *, impl: str = "auto",
     if not want_hsk:
         out.pop("hsketch")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Vocab-sharded tensor-parallel score path (DESIGN.md §12)
+#
+# Each vocab shard turns its (V/m, D) table slice into a *partial* score
+# state; states merge exactly across shards (max-relative logsumexp merge),
+# then finalize into the same stats `linear_score` emits. The merge is
+# written so that a serial left-fold over slices (`vocab_shards=k` above) and
+# the distributed pmax/psum reduction (`linear_score_sharded`) perform the
+# identical floating-point operations at 2 shards — the basis of the
+# lockstep bitwise parity test.
+# ---------------------------------------------------------------------------
+
+_STATE_KEYS = ("m", "s1", "s2", "sl", "ly", "rsum", "ry", "hnorm2", "hsketch")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "n_block", "v_block",
+                                             "d_block"))
+def linear_score_partial(h, table, labels, R=None, S=None, *,
+                         impl: str = "auto", n_block: int = 0,
+                         v_block: int = 0, d_block: int = 0):
+    """Partial score state over a vocab slice. h (N,D); table (V_local,D);
+    labels (N,) int32 *already remapped to the local slice*: rows whose
+    label lives elsewhere must carry an out-of-range value (e.g.
+    ``OUT_OF_SHARD``) so ly/ry accumulate 0 here.
+
+    Returns dict m/s1/s2/sl/ly/hnorm2 (N,), rsum/ry/hsketch (N,r) fp32 (the
+    sketch keys are always present; zeros when R/S is None).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    N, D = h.shape
+    V = table.shape[0]
+    r = (R.shape[1] if R is not None else S.shape[1] if S is not None else 8)
+    if R is None:
+        R = jnp.zeros((V, r), jnp.float32)
+    if S is None:
+        S = jnp.zeros((D, r), jnp.float32)
+    if impl in ("ref", "unfused"):
+        return linear_score_partial_ref(h, table, labels, R, S)
+
+    nb, vb, db = autotune_blocks(D, V, r, N)
+    n_block, v_block, d_block = (n_block or nb, v_block or vb, d_block or db)
+    n_block = min(n_block, max(8, N))
+    v_block, d_block = min(v_block, V), min(d_block, D)
+    hp = _pad_to(_pad_to(h, n_block, 0, 0.0), d_block, 1, 0.0)
+    tp = _pad_to(_pad_to(table, v_block, 0, 0.0), d_block, 1, 0.0)
+    yp = _pad_to(labels, n_block, 0, 0)
+    Rp = _pad_to(R, v_block, 0, 0.0)
+    Sp = _pad_to(S, d_block, 0, 0.0)
+    out = linear_score_pallas(hp, tp, yp, Rp, Sp, v_actual=V,
+                              n_block=n_block, v_block=v_block,
+                              d_block=d_block,
+                              interpret=(impl == "interpret"), partial=True)
+    return {k: v[:N] for k, v in out.items()}
+
+
+_MERGE_KEYS = ("m", "s1", "s2", "sl", "ly", "rsum", "ry")
+
+
+def _merge_core(a, b):
+    """Exact pairwise merge of two partial score states (disjoint vocab
+    slices, same rows). Rebases both to the joint max: with α = exp(m−m_g),
+    s1 and rsum scale by α, s2 by α², and sl picks up the (m−m_g)·s1 shift
+    of its reference point. ly/ry add (the label lives in exactly one
+    slice).
+
+    The entry barrier pins both operands so the merge arithmetic is the
+    same isolated fusion island whether the operands arrive from inlined
+    partial computations (serial emulation) or an all_gather (mesh path) —
+    XLA would otherwise FMA-fuse differently in the two programs and drift
+    by 1 ulp."""
+    a, b = lax.optimization_barrier((a, b))
+    m = jnp.maximum(a["m"], b["m"])
+
+    def rebase(st):
+        al = jnp.exp(st["m"] - m)
+        return {
+            "s1": st["s1"] * al,
+            "s2": st["s2"] * (al * al),
+            "sl": al * (st["sl"] + (st["m"] - m) * st["s1"]),
+            "ly": st["ly"],
+            "rsum": st["rsum"] * al[:, None],
+            "ry": st["ry"],
+        }
+
+    ta, tb = rebase(a), rebase(b)
+    return {"m": m, **jax.tree.map(lambda x, y: x + y, ta, tb)}
+
+
+def merge_score_partials(a, b):
+    """Pairwise merge of partial score states; hnorm2/hsketch are h-side
+    (identical in both operands) and pass through."""
+    out = _merge_core({k: a[k] for k in _MERGE_KEYS},
+                      {k: b[k] for k in _MERGE_KEYS})
+    return {**out, "hnorm2": a["hnorm2"], "hsketch": a["hsketch"]}
+
+
+def merge_score_partials_axis(st, axis: str):
+    """Merge a partial score state over a mesh axis (inside shard_map).
+
+    All-gathers the tiny O(N·(5+2r)) per-row state (the ReplicatedLayerNorm
+    all-gather-parameter idiom — the payload is the accumulator state, never
+    logits) and folds the *same* pairwise `_merge_core` the serial
+    `vocab_shards=k` emulation folds, in shard-index order — so the
+    distributed reduction performs bit-for-bit the serial emulation's
+    arithmetic at any shard count, which is what the lockstep parity test
+    pins. The max still reduces via the gathered pmax-equivalent fold and
+    every summed term via one fp add per shard pair, exactly the psum/pmax
+    merge of DESIGN.md §12 with a deterministic reduction order."""
+    g = lax.all_gather({k: st[k] for k in _MERGE_KEYS}, axis)   # (m, N, ...)
+    shards = g["m"].shape[0]
+    out = {k: g[k][0] for k in _MERGE_KEYS}
+    for i in range(1, shards):
+        out = _merge_core(out, {k: g[k][i] for k in _MERGE_KEYS})
+    return {**out, "hnorm2": st["hnorm2"], "hsketch": st["hsketch"]}
+
+
+def finalize_score_state(st):
+    """Partial/merged score state -> the `linear_score` output dict (same
+    finalization arithmetic as the fused kernel's last vocab tile).
+
+    Barriers pin the state and the outputs so the finalize arithmetic is an
+    identical isolated fusion island whether the state arrived from the
+    serial vocab_shards fold or the shard_map psum merge — required for the
+    bitwise lockstep parity between the two (see test_tp.py)."""
+    st = lax.optimization_barrier(st)
+    m, s1, s2 = st["m"], st["s1"], st["s2"]
+    sl, ly = st["sl"], st["ly"]
+    lse = m + jnp.log(s1)
+    py = jnp.exp(ly - lse)
+    return lax.optimization_barrier({
+        "loss": lse - ly,
+        "py": py,
+        "pnorm2": s2 / (s1 * s1) - 2.0 * py + 1.0,
+        "entropy": jnp.log(s1) - sl / s1,
+        "psketch": st["rsum"] / s1[:, None] - st["ry"],
+        "hnorm2": st["hnorm2"],
+        "hsketch": st["hsketch"],
+    })
+
+
+def linear_score_sharded(h, table_local, labels, R_local=None, S=None, *,
+                         axis: str = "model", impl: str = "auto",
+                         n_block: int = 0, v_block: int = 0,
+                         d_block: int = 0):
+    """Vocab-sharded `linear_score` for use *inside shard_map*: every model
+    shard holds a contiguous (V/m, D) slice of the unembed table (and the
+    matching rows of R); h and labels are replicated over `axis`. Each shard
+    computes its partial state, the states reduce over `axis`, and every
+    shard finalizes the identical merged state — outputs are replicated.
+
+    Labels are global vocab ids (negative = pad, clamped to 0 to match
+    `linear_score`); rows whose label falls outside this shard's slice are
+    remapped to OUT_OF_SHARD so only the owning shard contributes ly/ry.
+    """
+    Vl = table_local.shape[0]
+    shift = lax.axis_index(axis) * Vl
+    y = jnp.maximum(labels, 0)
+    y_local = jnp.where((y >= shift) & (y < shift + Vl), y - shift,
+                        OUT_OF_SHARD)
+    st = linear_score_partial(h, table_local, y_local, R_local, S, impl=impl,
+                              n_block=n_block, v_block=v_block,
+                              d_block=d_block)
+    return finalize_score_state(merge_score_partials_axis(st, axis))

@@ -29,6 +29,44 @@ def linear_score_ref(h, table, labels, R=None, S=None):
     return out
 
 
+def linear_score_partial_ref(h, table, labels, R=None, S=None):
+    """Raw max-relative score state over a (possibly partial) vocab slice.
+
+    Same state the fused kernel accumulates (m, s1 = Σe, s2 = Σe², sl =
+    Σe·(l−m), ly = label logit, rsum = ΣeᵀR, ry = R row at label): exact for
+    any contiguous vocab slice, with labels outside [0, V_local) contributing
+    ly = 0 and ry = 0 — the out-of-shard case. Merge states across slices
+    with ``ops.merge_score_partials`` and finalize with
+    ``ops.finalize_score_state`` (DESIGN.md §12).
+    """
+    hf = h.astype(jnp.float32)
+    logits = hf @ table.astype(jnp.float32).T               # (N, Vl)
+    Vl = logits.shape[-1]
+    m = jnp.max(logits, axis=-1)
+    e = jnp.exp(logits - m[:, None])
+    lm = logits - m[:, None]
+    in_shard = (labels >= 0) & (labels < Vl)
+    yc = jnp.clip(labels, 0, Vl - 1)
+    ly = jnp.where(in_shard,
+                   jnp.take_along_axis(logits, yc[:, None], axis=-1)[:, 0],
+                   0.0)
+    out = {
+        "m": m,
+        "s1": jnp.sum(e, axis=-1),
+        "s2": jnp.sum(e * e, axis=-1),
+        "sl": jnp.sum(e * lm, axis=-1),
+        "ly": ly,
+        "hnorm2": jnp.sum(jnp.square(hf), axis=-1),
+    }
+    if R is not None:
+        Rf = R.astype(jnp.float32)
+        out["rsum"] = e @ Rf
+        out["ry"] = jnp.where(in_shard[:, None], Rf[yc], 0.0)
+    if S is not None:
+        out["hsketch"] = hf @ S.astype(jnp.float32)
+    return out
+
+
 def score_ref(logits, labels, R=None):
     lf = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(lf, axis=-1)

@@ -38,15 +38,24 @@ def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
 
 
-def make_engine_mesh(data: int = 1, model: int = 1):
+def make_engine_mesh(data: int = 1, model: int = 1, *, vocab: int = 0):
     """``(data, model)`` mesh for TitanEngine's sharded data plane
     (``TitanEngine.from_config(..., mesh=...)``, ``launch.train --mesh d,m``).
+
+    ``model > 1`` activates vocab-sharded tensor parallelism (DESIGN.md
+    §12); pass ``vocab=cfg.vocab`` so a non-divisible vocab fails HERE with
+    a readable config-time error instead of a Pallas/sharding shape error
+    mid-round. The check runs before the device-count check so it is
+    testable on a single device.
 
     Sized to whatever devices exist — any backend. On CPU (CI, the
     multidevice test lane) fake the devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
     first jax import.
     """
+    if vocab:
+        from repro.dist.sharding import validate_tp_vocab
+        validate_tp_vocab(int(vocab), int(model), where="make_engine_mesh")
     n = int(data) * int(model)
     devs = jax.devices()
     if len(devs) < n:

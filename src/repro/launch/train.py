@@ -122,6 +122,7 @@ def main(argv=None):
 
     mesh = None
     data_shards = 1
+    model_shards = 1
     if args.mesh:
         if not policy:
             print("error: --mesh runs through the sharded TitanEngine; "
@@ -134,11 +135,14 @@ def main(argv=None):
             print(f"error: --mesh wants 'd,m' (got {args.mesh!r})",
                   file=sys.stderr)
             sys.exit(2)
-        from repro.launch.mesh import make_engine_mesh
-        mesh = make_engine_mesh(d, m)
-        data_shards = d
+        data_shards, model_shards = d, m
 
     cfg = get_config(args.arch)
+    if args.mesh:
+        # vocab check first: a non-divisible vocab must fail here with a
+        # readable error, not as a sharding shape error mid-round
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh(data_shards, model_shards, vocab=cfg.vocab)
     model = build_model(cfg)
     tcfg = TrainConfig(seq_len=args.seq, global_batch=args.batch, lr=args.lr,
                        warmup_steps=max(args.steps // 10, 5),
@@ -146,6 +150,8 @@ def main(argv=None):
                        grad_compression=args.grad_compress, seed=args.seed)
     train_step = make_train_step(model, tcfg, n_micro=args.n_micro,
                                  data_axis="data" if mesh is not None
+                                 else None,
+                                 model_axis="model" if model_shards > 1
                                  else None)
 
     if data_shards > 1:
@@ -215,15 +221,26 @@ def main(argv=None):
 
     if policy:
         from repro.data.stream import seek_stream, stream_cursor
+        # score_vocab_shards = model axis size keeps the eager bootstrap
+        # stats (engine.init runs on the full table) bit-identical to the
+        # in-round tensor-parallel score path (DESIGN.md §12)
         ttn = TitanConfig(stream_ratio=args.stream_ratio,
                           buffer_ratio=args.buffer_ratio,
                           score_seq_len=min(args.seq, 1024), sketch_dim=8,
                           policy=policy, nonfinite_guard=args.guard,
                           dist_topk=args.dist_topk,
-                          overlap_select=args.overlap_select)
+                          overlap_select=args.overlap_select,
+                          score_vocab_shards=max(model_shards, 1))
+        train_pspecs = None
+        if model_shards > 1:
+            from repro.dist.sharding import tp_train_pspecs
+            train_pspecs = tp_train_pspecs(
+                state, mesh, vocab=cfg.vocab,
+                tie_embeddings=cfg.tie_embeddings)
         engine = TitanEngine.from_config(
             ttn, model, train_step_fn=train_step,
-            params_of=lambda s: s.params, batch_size=args.batch, mesh=mesh)
+            params_of=lambda s: s.params, batch_size=args.batch, mesh=mesh,
+            train_pspecs=train_pspecs)
         w0 = to_batch(guard.next_window(engine.window_size))
         estate = engine.init(jax.random.PRNGKey(args.seed + 1), state, w0)
         print(f"[engine] policy={engine.policy.name} "

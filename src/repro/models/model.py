@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -463,16 +464,58 @@ def unembed_table(cfg, params):
             else params["unembed"]["w"])
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_rep(x, axis):
+    """psum whose VJP passes the (replicated) cotangent through unchanged.
+
+    Under ``shard_map(..., check_rep=False)`` jax transposes ``psum`` to
+    ``psum``, which multiplies every upstream gradient by the axis size when
+    the downstream loss is replicated. The TP cross-entropy's loss *is*
+    replicated over the model axis, so the correct transpose is identity —
+    pinned here with custom_vjp so the gradient is exact regardless of the
+    transpose convention."""
+    return lax.psum(x, axis)
+
+
+def _psum_rep_fwd(x, axis):
+    return lax.psum(x, axis), None
+
+
+def _psum_rep_bwd(axis, _res, ct):
+    return (ct,)
+
+
+_psum_rep.defvjp(_psum_rep_fwd, _psum_rep_bwd)
+
+
 def chunked_xent(cfg, params, h, labels, *, mask=None, seq_weights=None,
-                 chunk: int = 512):
+                 chunk: int = 512, model_axis: str = "model"):
     """Memory-bounded CE: scans seq chunks so (B,T,V) logits never materialize.
 
     Returns (mean_loss, per_seq_loss_sum (B,) fp32, per_seq_token_count (B,)).
     With ``seq_weights`` the loss is the Titan unbiased estimate
     ``mean_i w_i * per_seq_mean_loss_i``.
+
+    Vocab-sharded tensor parallelism (DESIGN.md §12): when this runs inside
+    shard_map with the unembed table sharded over ``model_axis``, the table
+    leaf arrives as the local (V/m, D) slice (detected by shape). Each
+    model shard builds only its (B, chunk, V/m) logits tile; the logsumexp
+    reduces via pmax (stop-gradient — shifting the max is exact) + psum of
+    Σexp, and the label logit comes from the one shard owning the label row
+    (in-slice gather, psum). The loss value is replicated over the axis;
+    each shard's *backward* carries only its tile's contribution, completed
+    by ``dist.sharding.tp_allreduce_grads`` in the train step.
     """
     B, T, D = h.shape
     table = unembed_table(cfg, params)
+    V_local = table.shape[0]
+    tp = V_local != cfg.vocab
+    if tp:
+        if cfg.vocab % V_local != 0:
+            raise ValueError(
+                f"unembed slice rows {V_local} do not divide vocab "
+                f"{cfg.vocab}: the model-axis sharding is inconsistent")
+        shift = lax.axis_index(model_axis) * V_local
     chunk = min(chunk, T)
     assert T % chunk == 0
     nc = T // chunk
@@ -483,10 +526,25 @@ def chunked_xent(cfg, params, h, labels, *, mask=None, seq_weights=None,
         yc = lax.dynamic_slice_in_dim(labels, ci * chunk, chunk, axis=1)
         logits = jnp.einsum("btd,vd->btv", hc, table,
                             preferred_element_type=jnp.float32)
-        logits = constrain(logits, "batch", "seq", "vocab")
-        lse = jax.nn.logsumexp(logits, axis=-1)
-        ll = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None],
-                                 axis=-1)[..., 0]
+        if tp:
+            # stop_gradient INSIDE pmax: pmax has no JVP rule, but a
+            # zero-tangent operand never needs one; shifting by any
+            # gradient-free max leaves the softmax math exact
+            m = lax.pmax(lax.stop_gradient(jnp.max(logits, axis=-1)),
+                         model_axis)
+            s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+            lse = m + jnp.log(_psum_rep(s, model_axis))
+            yl = jnp.maximum(yc, 0) - shift
+            in_shard = ((yl >= 0) & (yl < V_local)).astype(jnp.float32)
+            ll_loc = jnp.take_along_axis(
+                logits, jnp.clip(yl, 0, V_local - 1)[..., None],
+                axis=-1)[..., 0]
+            ll = _psum_rep(ll_loc * in_shard, model_axis)
+        else:
+            logits = constrain(logits, "batch", "seq", "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, jnp.maximum(yc, 0)[..., None],
+                                     axis=-1)[..., 0]
         tok_loss = lse - ll                                  # (B,chunk)
         if mask is not None:
             mc = lax.dynamic_slice_in_dim(mask, ci * chunk, chunk, axis=1)

@@ -32,10 +32,16 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
-                 eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+                 eps=1e-8, weight_decay=0.1, grad_clip=1.0, grad_norm=None):
     """Returns (new_params, new_state, metrics). All math in fp32; m/v cast
-    back to their storage dtype; params cast back to their own dtype."""
-    gn = global_norm(grads)
+    back to their storage dtype; params cast back to their own dtype.
+
+    ``grad_norm`` overrides the internally computed global norm — required
+    under vocab-sharded tensor parallelism, where each model shard holds
+    only its slice of the unembed gradient: the caller supplies the
+    cross-shard-consistent norm (dist.sharding.tp_allreduce_grads) so every
+    shard clips with the identical scale."""
+    gn = global_norm(grads) if grad_norm is None else grad_norm
     scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gn, 1e-12)) if grad_clip else 1.0
     count = state.count + 1
     c1 = 1.0 - b1 ** count.astype(jnp.float32)

@@ -11,7 +11,7 @@ from jax import lax
 
 from repro.configs.base import ArchConfig, TrainConfig
 from repro.dist.collectives import quantize_dequantize_int8, replicate_metrics
-from repro.dist.sharding import constrain
+from repro.dist.sharding import constrain, tp_allreduce_grads
 from repro.optim.adamw import adamw_update
 from repro.optim.schedule import warmup_cosine
 from repro.train.state import TrainState
@@ -32,7 +32,8 @@ def _split_micro(batch, n_micro: int):
 def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
                     grad_compress: Optional[str] = None,
                     constrain_grads: bool = True,
-                    data_axis: Optional[str] = None):
+                    data_axis: Optional[str] = None,
+                    model_axis: Optional[str] = None):
     """Returns train_step(state, batch) -> (state', metrics).
 
     ``data_axis`` names the mesh axis to all-reduce gradients over when the
@@ -43,6 +44,15 @@ def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
     ``dist.collectives.make_compressed_allreduce`` — every participant
     contributes its quantize-dequantized local grads. ``None`` (default)
     keeps the single-program behavior (GSPMD owns any reduction).
+
+    ``model_axis`` activates vocab-sharded tensor parallelism (DESIGN.md
+    §12): the unembed table leaf is sharded over the axis (engine
+    ``train_pspecs``), the TP cross-entropy leaves each shard's backward
+    with only its vocab tile's contribution, and
+    ``dist.sharding.tp_allreduce_grads`` completes the replicated-param
+    gradients (psum) while the unembed slice's exact local gradient stays
+    put. The clip scale uses the cross-shard-consistent global norm so
+    replicated params never diverge across model shards.
     """
     cfg: ArchConfig = model.cfg
     acc_dtype = jnp.dtype(cfg.opt_state_dtype)
@@ -86,6 +96,13 @@ def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
             loss = loss_sum / n_micro
             mets = {}
 
+        grad_norm = None
+        if model_axis is not None:
+            # complete the vocab-parallel gradient BEFORE any DP compression:
+            # the model-axis psum reconstructs the true gradient; int8/pmean
+            # below model the data-parallel wire, exactly as at model=1
+            grads, grad_norm = tp_allreduce_grads(grads, model_axis)
+
         if grad_compress == "int8":
             grads = jax.tree.map(quantize_dequantize_int8, grads)
 
@@ -104,7 +121,8 @@ def make_train_step(model, tcfg: TrainConfig, *, n_micro: int = 1,
                            total_steps=tcfg.total_steps)
         new_params, new_opt, opt_m = adamw_update(
             grads, state.opt, state.params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
-            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
+            grad_norm=grad_norm)
         metrics = {"loss": loss, "lr": lr, **opt_m}
         if isinstance(mets, dict):
             metrics.update({k: v for k, v in mets.items()

@@ -1,0 +1,42 @@
+"""Docs lint as a test: README/DESIGN/docs links and anchors must resolve
+(tools/check_docs.py — also a standalone CI step)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools"))
+
+import check_docs
+
+
+def test_slugify_github_rules():
+    assert check_docs.slugify("§8 Sharded buffer + distributed top-k") == \
+        "8-sharded-buffer--distributed-top-k"
+    assert check_docs.slugify("Protocol (`core/registry.py`)") == \
+        "protocol-coreregistrypy"
+    assert check_docs.slugify("DESIGN — Titan two-stage data selection "
+                              "at pod scale") == \
+        "design--titan-two-stage-data-selection-at-pod-scale"
+
+
+def test_anchors_include_design_sections():
+    design = os.path.join(check_docs.ROOT, "DESIGN.md")
+    anchors = check_docs.anchors_of(design)
+    for sec in ("1-coarse-filter-repdiv-degeneracy-and-per-class-"
+                "normalization",
+                "8-sharded-buffer--distributed-top-k",
+                "12-vocab-sharded-tensor-parallelism-the-model-mesh-axis"):
+        assert sec in anchors, sec
+
+
+def test_broken_links_are_reported(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("# t\n[x](missing.md) [y](bad.md#nope)\n")
+    errors = check_docs.check_file(str(bad))
+    assert len(errors) == 2
+    assert "missing.md" in errors[0] and "#nope" in errors[1]
+
+
+def test_repo_docs_lint_clean():
+    errors = check_docs.main()
+    assert not errors, errors

@@ -1,0 +1,391 @@
+"""Vocab-sharded tensor parallelism over the `model` mesh axis (DESIGN.md
+§12).
+
+Single-device tests cover the config-time guardrails (non-divisible vocab,
+tied embeddings, tp-probe registry) and the train-state spec builder. The
+``multidevice`` tests (CI ``tp`` lane:
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) cover the real
+thing:
+
+- bitwise parity of the distributed score path (``linear_score_sharded``
+  under shard_map) with the serial ``vocab_shards=k`` emulation — the
+  all-gather + shared-fold merge makes the two programs run the SAME
+  pairwise reduction in the same order;
+- the TP cross-entropy's loss/grad/grad-norm parity with the single-device
+  reference;
+- engine lockstep: a ``(d, 2)`` mesh round is bit-identical (selected ids,
+  loss, train leaves) to the ``(d, 1)`` model=1 round for EVERY registry
+  policy, with the model=1 oracle running the serial vocab-shard emulation
+  (``score_vocab_shards=2``) so stage-2 stats agree bit-for-bit.
+
+mesh-vs-``mesh=None`` bitwise parity additionally holds for
+deterministic-top-k policies (hl — asserted below); sampling policies
+(titan-cis, rs, is) thread their PRNG differently on the mesh data plane
+(PR 5 design, see ``_select_stage``), so for those the model-axis claim is
+exactly "model>1 ≡ model=1", which the lockstep suite pins bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs import TitanConfig, TrainConfig, get_config, replace
+from repro.core.engine import TitanEngine
+from repro.core.registry import available_policies
+from repro.data.stream import SyntheticLMStream
+from repro.dist.sharding import (tp_allreduce_grads, tp_train_pspecs,
+                                 validate_tp_vocab)
+from repro.kernels.score.ops import linear_score, linear_score_sharded
+from repro.launch.mesh import make_engine_mesh
+from repro.models.model import build_model
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+multidevice = pytest.mark.multidevice
+
+
+def _require(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()}")
+
+
+def _lm_cfg(vocab=512):
+    return replace(get_config("qwen2-72b-reduced"), param_dtype="float32",
+                   tie_embeddings=False, vocab=vocab)
+
+
+# -- config-time guardrails (single device) ---------------------------------
+
+
+def test_nondivisible_vocab_fails_before_device_check():
+    # the vocab check must fire FIRST: a readable ValueError naming the
+    # vocab and the axis, even when the device-count check would also fail
+    with pytest.raises(ValueError, match="vocab 513 is not divisible"):
+        make_engine_mesh(2, 5, vocab=513)
+    with pytest.raises(ValueError, match="model"):
+        validate_tp_vocab(1000, 3)
+    validate_tp_vocab(1000, 4)          # divisible: fine
+    validate_tp_vocab(513, 1)           # model=1 never TP-shards: fine
+
+
+def test_linear_score_vocab_shards_nondivisible_raises():
+    h = jnp.zeros((4, 8))
+    table = jnp.zeros((10, 8))
+    y = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="vocab_shards"):
+        linear_score(h, table, y, vocab_shards=3, impl="ref")
+
+
+def test_tp_train_pspecs_layout():
+    _require(2)
+    cfg = _lm_cfg()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    mesh = make_engine_mesh(1, 2, vocab=cfg.vocab)
+    specs = tp_train_pspecs(state, mesh, vocab=cfg.vocab)
+    # the unembed table AND its mirrored optimizer moments shard over the
+    # model axis on the vocab dim; every other leaf replicates
+    assert specs.params["unembed"]["w"] == P("model")
+    assert specs.opt.m["unembed"]["w"] == P("model")
+    assert specs.opt.v["unembed"]["w"] == P("model")
+    assert specs.params["embed"]["embedding"] == P()
+    assert specs.step == P()
+
+
+def test_tp_train_pspecs_tied_embeddings_rejected():
+    _require(2)
+    cfg = replace(_lm_cfg(), tie_embeddings=True)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    mesh = make_engine_mesh(1, 2)
+    with pytest.raises(ValueError, match="tie_embeddings"):
+        tp_train_pspecs(state, mesh, vocab=cfg.vocab, tie_embeddings=True)
+
+
+def test_tp_probe_registry():
+    q = get_config("qwen2-72b-tp-probe")
+    assert q.vocab == 152_064 and not q.tie_embeddings
+    assert q.vocab == get_config("qwen2-72b").vocab  # the REAL vocab
+    ll = get_config("llama3-405b-tp-probe")
+    assert ll.vocab == 128_256
+    for m in (2, 4):
+        validate_tp_vocab(q.vocab, m)
+        validate_tp_vocab(ll.vocab, m)
+    with pytest.raises(KeyError, match="tp-probe"):
+        get_config("mamba2-370m-tp-probe")
+
+
+# -- distributed score path: bitwise vs serial emulation --------------------
+
+
+@multidevice
+def test_sharded_score_bitwise_vs_serial_emulation():
+    """shard_map over the model axis folds the SAME pairwise merge, in the
+    same shard order, as the serial ``vocab_shards=k`` loop — every output
+    key must agree bit-for-bit (the property the engine lockstep rests
+    on)."""
+    _require(2)
+    N, V, D, r = 24, 1000, 32, 8
+    rs = np.random.RandomState(0)
+    h = jnp.asarray(rs.randn(N, D).astype(np.float32))
+    table = jnp.asarray(rs.randn(V, D).astype(np.float32) * 10)
+    labels = jnp.asarray(rs.randint(0, V, (N,)).astype(np.int32))
+    labels = labels.at[::7].set(-1)     # pad rows
+    R = jnp.asarray(rs.randn(V, r).astype(np.float32))
+    S = jnp.asarray(rs.randn(D, r).astype(np.float32))
+
+    # serial reference FIRST (committing inputs to a mesh can break later
+    # eager slicing on 1-core forced-host setups)
+    ref = jax.device_get(linear_score(h, table, labels, R, S,
+                                      vocab_shards=2, impl="ref"))
+
+    mesh = make_engine_mesh(1, 2)
+    f = shard_map(
+        lambda hh, tt, yy, rr, ss: linear_score_sharded(
+            hh, tt, yy, rr, ss, axis="model", impl="ref"),
+        mesh=mesh,
+        in_specs=(P(), P("model"), P(), P("model"), P()),
+        out_specs=P(), check_rep=False)
+    out = jax.device_get(jax.jit(f)(h, table, labels, R, S))
+
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(out[k], ref[k], err_msg=k)
+
+
+# -- TP cross-entropy + gradient completion ---------------------------------
+
+
+@multidevice
+def test_tp_ce_loss_grads_and_clip_norm():
+    """TP train step on a 2-way model mesh vs the single-device reference:
+    loss and the clip norm agree to fp32 exactness (the norm must be
+    cross-shard-consistent or replicated params drift apart), params track
+    the reference through multiple steps."""
+    _require(2)
+    from conftest import make_lm_batch
+    cfg = replace(_lm_cfg(), d_model=64, n_layers=2)
+    model = build_model(cfg)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=20, grad_clip=1.0)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    batch = make_lm_batch(cfg, np.random.RandomState(1), 4, 32)
+
+    step_ref = jax.jit(make_train_step(model, tcfg))
+    s_ref, m_ref = step_ref(state, batch)
+    s_ref, m_ref2 = step_ref(s_ref, batch)
+
+    mesh = make_engine_mesh(1, 2, vocab=cfg.vocab)
+    specs = tp_train_pspecs(state, mesh, vocab=cfg.vocab)
+    f = jax.jit(shard_map(make_train_step(model, tcfg, model_axis="model"),
+                          mesh=mesh, in_specs=(specs, P()),
+                          out_specs=(specs, P()), check_rep=False))
+    shardings = jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    s_tp = jax.tree.map(jax.device_put, state, shardings)
+    b_tp = jax.device_put(batch, NamedSharding(mesh, P()))
+    s_tp, m_tp = f(s_tp, b_tp)
+    s_tp, m_tp2 = f(s_tp, b_tp)
+
+    for m_a, m_b in ((m_ref, m_tp), (m_ref2, m_tp2)):
+        np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(m_a["grad_norm"]),
+                                   float(m_b["grad_norm"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s_ref.params),
+                    jax.tree.leaves(jax.device_get(s_tp.params))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+@multidevice
+def test_tp_allreduce_keeps_unembed_grad_local():
+    _require(2)
+    mesh = make_engine_mesh(1, 2)
+
+    def f(g):
+        out, gn = tp_allreduce_grads(g, "model")
+        return out, gn
+
+    g = {"unembed": {"w": jnp.arange(8, dtype=jnp.float32).reshape(4, 2)},
+         "mlp": {"w": jnp.ones((2, 2))}}
+    out, gn = jax.jit(shard_map(
+        f, mesh=mesh,
+        in_specs=({"unembed": {"w": P("model")}, "mlp": {"w": P()}},),
+        out_specs=(({"unembed": {"w": P("model")}, "mlp": {"w": P()}}, P())),
+        check_rep=False))(g)
+    # unembed slice untouched; replicated leaf summed over the 2 shards
+    np.testing.assert_array_equal(np.asarray(out["unembed"]["w"]),
+                                  np.asarray(g["unembed"]["w"]))
+    np.testing.assert_array_equal(np.asarray(out["mlp"]["w"]),
+                                  2 * np.ones((2, 2)))
+    # norm: replicated leaves counted once post-psum, sharded leaf's square
+    # sum taken across both shards
+    want = np.sqrt(float(np.sum(np.arange(8) ** 2)) + 4 * 4.0)
+    np.testing.assert_allclose(float(gn), want, rtol=1e-6)
+
+
+# -- engine lockstep: model>1 vs model=1 ------------------------------------
+
+
+def _toy_train():
+    """Deterministic, order-invariant, elementwise train step: bitwise
+    identical whether the unembed leaf arrives whole (model=1) or as a
+    vocab slice (model>1) — isolates the selection plumbing from CE fp."""
+
+    def train(params, batch):
+        loss = (jnp.sum(batch["labels"].astype(jnp.float32))
+                / batch["labels"].size)
+        new = jax.tree.map(lambda p: (p * 0.999).astype(p.dtype), params)
+        return new, {"loss": loss}
+
+    return train
+
+
+def _run_engine(eng, cfg, rounds=2, seed=3):
+    state = init_train_state(build_model(cfg), jax.random.PRNGKey(0)).params
+    stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=16,
+                               n_domains=cfg.n_domains, seed=seed)
+    w0 = {k: jnp.asarray(v)
+          for k, v in stream.next_window(eng.window_size).items()}
+    est = eng.init(jax.random.PRNGKey(1), state, w0)
+    sel, losses = [], []
+    est, _ = eng.run(est, stream, rounds, prefetch=0, metrics_every=1,
+                     on_round=lambda r, s, _m: sel.append(
+                         np.asarray(s.next_batch["tokens"])),
+                     on_metrics=lambda r, h: losses.append(float(h["loss"])))
+    return sel, losses, jax.tree.map(np.asarray, jax.device_get(est.train))
+
+
+def _engine(cfg, mesh, policy, *, model_shards=1, vocab_shards=2, **ttn_kw):
+    # the model=1 oracle runs the serial vocab-shard emulation
+    # (score_vocab_shards=2) so its stage-2 stats fold the SAME pairwise
+    # merge as the 2-way mesh reduction — the bitwise comparison's anchor
+    ttn = TitanConfig(stream_ratio=2, buffer_ratio=2, sketch_dim=8,
+                      policy=policy, score_impl="ref",
+                      score_vocab_shards=vocab_shards, **ttn_kw)
+    tps = None
+    if mesh is not None and model_shards > 1:
+        p0 = init_train_state(build_model(cfg), jax.random.PRNGKey(0)).params
+        tps = tp_train_pspecs(p0, mesh, vocab=cfg.vocab)
+    model = build_model(cfg)
+    return TitanEngine.from_config(
+        ttn, model, train_step_fn=_toy_train(), params_of=lambda s: s,
+        batch_size=4, mesh=mesh, train_pspecs=tps)
+
+
+def _assert_lockstep(cfg, a, b, policy, rounds=2):
+    sel_a, loss_a, tr_a = _run_engine(a, cfg, rounds)
+    sel_b, loss_b, tr_b = _run_engine(b, cfg, rounds)
+    for r in range(rounds):
+        np.testing.assert_array_equal(
+            sel_a[r], sel_b[r],
+            err_msg=f"{policy}: selected ids diverge at round {r}")
+    assert loss_a == loss_b, (policy, loss_a, loss_b)
+    for pa, pb in zip(jax.tree.leaves(tr_a), jax.tree.leaves(tr_b)):
+        np.testing.assert_array_equal(pa, pb, err_msg=policy)
+
+
+@multidevice
+@pytest.mark.parametrize("policy", sorted(available_policies()))
+def test_engine_lockstep_model2_vs_model1(policy):
+    """The tentpole claim: a (1,2) mesh round — TP-sharded unembed, score
+    state reduced over the model axis — is bit-identical to the (1,1)
+    model=1 round running the serial vocab-shard emulation, for EVERY
+    registry policy."""
+    _require(2)
+    cfg = _lm_cfg()
+    m1 = _engine(cfg, make_engine_mesh(1, 1), policy)
+    m2 = _engine(cfg, make_engine_mesh(1, 2, vocab=cfg.vocab), policy,
+                 model_shards=2)
+    _assert_lockstep(cfg, m1, m2, policy)
+
+
+@multidevice
+def test_engine_lockstep_model2_vs_mesh_none_deterministic():
+    """For a deterministic-top-k policy the chain closes all the way to
+    mesh=None: hl's rank-by-score selection is PRNG-free, so the (1,2) TP
+    round reproduces the completely unsharded engine bit-for-bit."""
+    _require(2)
+    cfg = _lm_cfg()
+    none = _engine(cfg, None, "hl")
+    m2 = _engine(cfg, make_engine_mesh(1, 2, vocab=cfg.vocab), "hl",
+                 model_shards=2)
+    _assert_lockstep(cfg, none, m2, "hl")
+
+
+@multidevice
+def test_engine_lockstep_overlap_segments():
+    """The overlapped select→train round split must carry the TP train
+    specs through both segments (select reads the sharded params, train
+    consumes/produces them)."""
+    _require(2)
+    cfg = _lm_cfg()
+    kw = dict(overlap_select=True, dist_topk="tournament")
+    m1 = _engine(cfg, make_engine_mesh(1, 1), "hl", **kw)
+    m2 = _engine(cfg, make_engine_mesh(1, 2, vocab=cfg.vocab), "hl",
+                 model_shards=2, **kw)
+    assert m2.overlap
+    _assert_lockstep(cfg, m1, m2, "hl+overlap")
+
+
+@multidevice
+def test_engine_real_lm_round_2x2():
+    """data×model = 2×2: the full round with the REAL TP cross-entropy
+    train step. Selected ids stay bitwise vs the (2,1) model=1 oracle;
+    loss/params agree to fp tolerance (TP logsumexp ≠ plain logsumexp at
+    the last ulp). Also pins the payload claim: each device holds exactly
+    1/model of the unembed table."""
+    _require(4)
+    cfg = replace(_lm_cfg(), d_model=64)
+    model = build_model(cfg)
+    tcfg = TrainConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+    def mk(mesh, model_shards):
+        ts = make_train_step(model, tcfg, data_axis="data",
+                             model_axis="model" if model_shards > 1
+                             else None)
+        ttn = TitanConfig(stream_ratio=2, buffer_ratio=2, sketch_dim=8,
+                          policy="titan-cis", score_impl="ref",
+                          score_vocab_shards=2)
+        tps = None
+        if model_shards > 1:
+            st0 = init_train_state(model, jax.random.PRNGKey(0))
+            tps = tp_train_pspecs(st0, mesh, vocab=cfg.vocab)
+        return TitanEngine.from_config(
+            ttn, model, train_step_fn=ts, params_of=lambda s: s.params,
+            batch_size=4, mesh=mesh, train_pspecs=tps)
+
+    def run(eng):
+        state = init_train_state(model, jax.random.PRNGKey(0))
+        stream = SyntheticLMStream(vocab=cfg.vocab, seq_len=16,
+                                   n_domains=cfg.n_domains, seed=3)
+        w0 = {k: jnp.asarray(v)
+              for k, v in stream.next_window(eng.window_size).items()}
+        est = eng.init(jax.random.PRNGKey(1), state, w0)
+        sel, losses = [], []
+        est, _ = eng.run(est, stream, 2, prefetch=0, metrics_every=1,
+                         on_round=lambda r, s, _m: sel.append(
+                             np.asarray(s.next_batch["tokens"])),
+                         on_metrics=lambda r, h: losses.append(
+                             float(h["loss"])))
+        return sel, losses, est
+
+    sel_o, loss_o, est_o = run(mk(make_engine_mesh(2, 1), 1))
+    sel_t, loss_t, est_t = run(mk(make_engine_mesh(2, 2, vocab=cfg.vocab), 2))
+    for r in range(2):
+        np.testing.assert_array_equal(sel_o[r], sel_t[r])
+    np.testing.assert_allclose(loss_o, loss_t, rtol=1e-5)
+    p_o = jax.device_get(est_o.train.params)
+    p_t = jax.device_get(est_t.train.params)
+    # two AdamW steps amplify the last-ulp logsumexp difference through the
+    # normalized update (m/√v near zero is ulp-sensitive); the bitwise
+    # claims above are the contract, this pins gross divergence only
+    for a, b in zip(jax.tree.leaves(p_o), jax.tree.leaves(p_t)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-4)
+    # per-shard unembed bytes == replicated bytes / model
+    w = est_t.train.params["unembed"]["w"]
+    full = cfg.vocab * cfg.d_model * np.dtype(np.float32).itemsize
+    assert w.addressable_shards[0].data.nbytes == full // 2

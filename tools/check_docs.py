@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Docs lint: every relative markdown link — and every ``#anchor`` in one —
+must resolve to a real file and a real heading.
+
+Anchors are matched against GitHub's slugification of the target file's
+headings (lowercase; drop everything that is not alphanumeric, space,
+hyphen, or underscore; spaces become hyphens; duplicate slugs get ``-1``,
+``-2``, ... suffixes). Fenced code blocks are ignored on both sides.
+
+    python tools/check_docs.py            # lint the default doc set
+    python tools/check_docs.py a.md b.md  # lint specific files
+
+Exit code 1 with one line per broken link otherwise.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+from typing import Dict, List
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def slugify(text: str) -> str:
+    """GitHub's heading -> anchor id transform (per-heading; duplicate
+    suffixing is the caller's job)."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # [t](u) -> t
+    text = text.replace("`", "")
+    out = []
+    for ch in text.strip().lower():
+        if ch.isalnum() or ch in "_-":
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+    return "".join(out)
+
+
+def _unfenced_lines(path: str) -> List[str]:
+    lines, fenced = [], False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if FENCE_RE.match(line):
+                fenced = not fenced
+                continue
+            if not fenced:
+                lines.append(line.rstrip("\n"))
+    return lines
+
+
+def anchors_of(path: str) -> Dict[str, int]:
+    """All anchor ids a markdown file exposes, with duplicate suffixes."""
+    seen: Dict[str, int] = {}
+    out: Dict[str, int] = {}
+    for line in _unfenced_lines(path):
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = slugify(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out[slug if n == 0 else f"{slug}-{n}"] = 1
+    return out
+
+
+def check_file(path: str) -> List[str]:
+    errors = []
+    base = os.path.dirname(path)
+    rel = os.path.relpath(path, ROOT)
+    for line in _unfenced_lines(path):
+        for target in LINK_RE.findall(line):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            fpath, _, anchor = target.partition("#")
+            dest = path if not fpath else os.path.normpath(
+                os.path.join(base, fpath))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: broken link target {target!r}")
+                continue
+            if anchor:
+                if not dest.endswith(".md"):
+                    continue
+                if anchor not in anchors_of(dest):
+                    errors.append(f"{rel}: anchor {target!r} not among "
+                                  f"{os.path.relpath(dest, ROOT)} headings")
+    return errors
+
+
+def default_docs() -> List[str]:
+    files = sorted(glob.glob(os.path.join(ROOT, "*.md")))
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return files
+
+
+SECTION_REF_RE = re.compile(r"DESIGN(?:\.md)?\s+§(\d+)")
+
+
+def check_code_section_refs() -> List[str]:
+    """Every ``DESIGN.md §N`` mentioned in source/test/bench comments and
+    docstrings must name a section DESIGN.md actually has."""
+    design = os.path.join(ROOT, "DESIGN.md")
+    sections = set()
+    for line in _unfenced_lines(design):
+        m = re.match(r"^##\s+§(\d+)\b", line)
+        if m:
+            sections.add(m.group(1))
+    errors = []
+    for sub in ("src", "tests", "benchmarks", "tools", "examples"):
+        for path in glob.glob(os.path.join(ROOT, sub, "**", "*.py"),
+                              recursive=True):
+            with open(path, encoding="utf-8") as f:
+                for ln, line in enumerate(f, 1):
+                    for n in SECTION_REF_RE.findall(line):
+                        if n not in sections:
+                            errors.append(
+                                f"{os.path.relpath(path, ROOT)}:{ln}: "
+                                f"refers to DESIGN.md §{n}, which does "
+                                f"not exist")
+    return errors
+
+
+def main(paths: List[str] | None = None) -> List[str]:
+    paths = [os.path.abspath(p) for p in paths] if paths else default_docs()
+    errors = []
+    for p in paths:
+        errors.extend(check_file(p))
+    errors.extend(check_code_section_refs())
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {len(paths)} files, all links, anchors, and code "
+              f"§-references resolve")
+    return errors
+
+
+if __name__ == "__main__":
+    sys.exit(1 if main(sys.argv[1:] or None) else 0)
